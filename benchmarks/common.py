@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: catalog cache, timed strategy runs."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+_CATALOGS: Dict[float, dict] = {}
+
+STRATEGIES = ["no-pred-trans", "bloom-join", "yannakakis", "pred-trans",
+              "pred-trans-opt"]
+
+
+def catalog(sf: float):
+    from repro.tpch import generate
+    if sf not in _CATALOGS:
+        _CATALOGS[sf] = generate(sf=sf)
+    return _CATALOGS[sf]
+
+
+def run_query(sf: float, qn: int, strategy: str, warm: int = 1,
+              **query_kw):
+    """Paper methodology: run twice, measure the second (warm) run."""
+    from repro.core.transfer import make_strategy
+    from repro.relational import Executor
+    from repro.tpch import build_query
+    cat = catalog(sf)
+    res = stats = None
+    for _ in range(warm + 1):
+        ex = Executor(cat, make_strategy(strategy))
+        res, stats = ex.execute(build_query(qn, sf=sf, **query_kw))
+    return res, stats

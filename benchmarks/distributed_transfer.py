@@ -1,0 +1,64 @@
+"""Distributed predicate transfer: per-edge cost accounting.
+
+Honest framing (corrected from an earlier draft — see EXPERIMENTS.md
+§Perf DB-iteration 6): with p shards, combining per-shard Bloom filters
+costs wire bytes proportional to the *filter* (tree-OR: log2(p)·filter;
+reduce-scatter+gather OR: ~2·filter), while the precise semi-join
+all-gathers the *key column* (≈ rows·8 B to every device). The filter is
+sized by the **source relation's live keys**, so for the selective
+dimension→fact transfers that predicate transfer is made of, the Bloom
+path wins on wire *and* receiver memory *and* per-row probe compute
+(β ≈ 0.15, kernel_bench). For unfiltered same-cardinality exchanges the
+wire costs converge — the compute/memory asymmetry remains.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def edge_cost(live_keys: int, probe_rows: int, shards: int = 256,
+              bits_per_key: int = 16):
+    from repro.core import bloom
+    nblocks = bloom.blocks_for(max(live_keys, 1), bits_per_key)
+    filter_bytes = nblocks * bloom.LANES * 4
+    return {
+        "live_keys": live_keys,
+        "filter_bytes": filter_bytes,
+        # per-device wire bytes
+        "bloom_tree_or": int(np.ceil(np.log2(shards)) * filter_bytes),
+        "bloom_rs_ag_or": int(2 * filter_bytes),
+        "semijoin_allgather": int(live_keys * 8 * (shards - 1) / shards),
+        # per-device receiver memory
+        "bloom_resident": filter_bytes,
+        "semijoin_resident": live_keys * 8,
+        # per-row probe cost ratio measured by kernel_bench (beta)
+        "probe_rows": probe_rows,
+    }
+
+
+def main():
+    print("scenario,live_keys,filter,bloom_tree_wire,bloom_rsag_wire,"
+          "semijoin_wire,bloom_resident,semijoin_resident")
+    scenarios = [
+        ("region->nation (1 live key)", 1, 25),
+        ("filtered part -> lineitem (1%)", 2_000, 6_000_000),
+        ("orders[1yr] -> lineitem", 200_000, 6_000_000),
+        ("unfiltered supplier -> lineitem", 10_000, 6_000_000),
+        ("backward lineitem -> orders", 300_000, 1_500_000),
+    ]
+    for name, live, probe in scenarios:
+        c = edge_cost(live, probe)
+        print(f"{name},{c['live_keys']},{c['filter_bytes']/2**10:.0f}KiB,"
+              f"{c['bloom_tree_or']/2**10:.0f}KiB,"
+              f"{c['bloom_rs_ag_or']/2**10:.0f}KiB,"
+              f"{c['semijoin_allgather']/2**10:.0f}KiB,"
+              f"{c['bloom_resident']/2**10:.0f}KiB,"
+              f"{c['semijoin_resident']/2**10:.0f}KiB")
+    c = edge_cost(300_000, 1_500_000)
+    print(f"\nbackward-edge wire advantage (rs+ag OR vs key all-gather): "
+          f"{c['semijoin_allgather']/c['bloom_rs_ag_or']:.1f}x")
+    return c
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Figure 2: TPC-H execution time per query, all strategies,
+normalized to No-Pred-Trans."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import STRATEGIES, run_query
+
+
+def run(sf: float = 0.1, queries=None):
+    from repro.tpch import QUERIES
+    queries = queries or sorted(QUERIES)
+    rows = []
+    times = {s: {} for s in STRATEGIES}
+    for qn in queries:
+        for s in STRATEGIES:
+            _, stats = run_query(sf, qn, s)
+            times[s][qn] = stats.total_seconds
+    base = times["no-pred-trans"]
+    for qn in queries:
+        row = {"query": f"Q{qn}",
+               **{s: times[s][qn] for s in STRATEGIES},
+               **{f"speedup_{s}": base[qn] / times[s][qn]
+                  for s in STRATEGIES if s != "no-pred-trans"}}
+        rows.append(row)
+    summary = {}
+    for s in STRATEGIES:
+        sp = [base[q] / times[s][q] for q in queries]
+        summary[s] = {"geomean_speedup": float(np.exp(np.mean(np.log(sp)))),
+                      "max_speedup": float(np.max(sp)),
+                      "total_seconds": float(sum(times[s].values()))}
+    return rows, summary
+
+
+def main(sf: float = 0.1):
+    rows, summary = run(sf)
+    print("query," + ",".join(STRATEGIES))
+    for r in rows:
+        print(r["query"] + "," + ",".join(f"{r[s]*1e3:.1f}ms"
+                                          for s in STRATEGIES))
+    print("\nsummary (vs no-pred-trans):")
+    for s, v in summary.items():
+        print(f"  {s:15s} geomean={v['geomean_speedup']:.2f}x "
+              f"max={v['max_speedup']:.1f}x total={v['total_seconds']:.2f}s")
+    return rows, summary
+
+
+if __name__ == "__main__":
+    main()

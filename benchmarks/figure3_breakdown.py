@@ -1,0 +1,37 @@
+"""Paper Figure 3: Q5 time breakdown — pre-filter phase vs join phase."""
+from __future__ import annotations
+
+from benchmarks.common import STRATEGIES, run_query
+
+
+def run(sf: float = 0.1):
+    out = {}
+    for s in STRATEGIES:
+        _, stats = run_query(sf, 5, s)
+        transfer = stats.phase_seconds.get("transfer", 0.0)
+        join = stats.phase_seconds.get("join", 0.0)
+        scan = stats.phase_seconds.get("scan", 0.0)
+        out[s] = {"scan": scan, "transfer": transfer, "join": join,
+                  "total": stats.total_seconds}
+    return out
+
+
+def main(sf: float = 0.1):
+    out = run(sf)
+    print("strategy,scan_ms,prefilter_ms,join_ms,total_ms")
+    for s, v in out.items():
+        print(f"{s},{v['scan']*1e3:.1f},{v['transfer']*1e3:.1f},"
+              f"{v['join']*1e3:.1f},{v['total']*1e3:.1f}")
+    base = out["no-pred-trans"]["join"]
+    pt = out["pred-trans"]["join"]
+    print(f"\njoin-phase speedup pred-trans vs no-pred-trans: "
+          f"{base/max(pt,1e-9):.1f}x")
+    yan = out["yannakakis"]["transfer"]
+    ptt = out["pred-trans"]["transfer"]
+    print(f"pre-filter phase: pred-trans vs yannakakis semi-joins: "
+          f"{yan/max(ptt,1e-9):.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Figure 4: Q5 under three join orders — pred-trans should be the
+least order-sensitive (bounded intermediates)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import STRATEGIES, run_query
+
+
+def run(sf: float = 0.1):
+    out = {s: [] for s in STRATEGIES}
+    for order in (0, 1, 2):
+        for s in STRATEGIES:
+            _, stats = run_query(sf, 5, s, join_order=order)
+            out[s].append(stats.total_seconds)
+    return out
+
+
+def main(sf: float = 0.1):
+    out = run(sf)
+    print("strategy,order0_ms,order1_ms,order2_ms,max/min")
+    for s, ts in out.items():
+        spread = max(ts) / max(min(ts), 1e-9)
+        print(f"{s}," + ",".join(f"{t*1e3:.1f}" for t in ts)
+              + f",{spread:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

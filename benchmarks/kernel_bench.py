@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: ns/row for bloom build/probe/transfer and the
+semijoin table, host path vs jnp path (the Pallas kernels are TPU-target;
+interpret mode is not a performance proxy and is benchmarked only for
+completeness at small n)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(n: int = 1_000_000):
+    from repro.core import bloom
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 10**9, n).astype(np.int64)
+    out_keys = keys * 7 + 3
+    rows = []
+
+    dt, f = _time(lambda: bloom.np_build(keys))
+    rows.append(("bloom_build_numpy", dt / n * 1e9))
+    filt = f
+    dt, _ = _time(lambda: bloom.np_probe(filt, keys))
+    rows.append(("bloom_probe_numpy", dt / n * 1e9))
+
+    hk = bloom.hash_keys(keys)
+    dt, _ = _time(lambda: bloom.hash_keys(keys))
+    rows.append(("hash_keys_numpy", dt / n * 1e9))
+    dt, _ = _time(lambda: bloom.probe_hashed(filt.words, hk))
+    rows.append(("bloom_probe_hashed", dt / n * 1e9))
+    live = np.zeros(n, bool)
+    live[: n // 50] = True
+    dt, _ = _time(lambda: bloom.probe_hashed(filt.words, hk, live=live))
+    rows.append(("bloom_probe_hashed_2pct_live", dt / n * 1e9))
+
+    import jax
+    dt, _ = _time(lambda: jax.block_until_ready(
+        bloom.np_build(keys, backend="jax").words))
+    rows.append(("bloom_build_jnp", dt / n * 1e9))
+    dt, _ = _time(lambda: bloom.np_probe(filt, keys, backend="jax"))
+    rows.append(("bloom_probe_jnp", dt / n * 1e9))
+
+    # precise membership (Yannakakis primitive) for the beta comparison
+    from repro.relational.ops import semi_join_mask
+    dt, _ = _time(lambda: semi_join_mask(keys, keys[: n // 2]))
+    rows.append(("semijoin_sorted_numpy", dt / n * 1e9))
+    return rows
+
+
+def main(n: int = 1_000_000):
+    rows = run(n)
+    print("name,ns_per_row")
+    for name, v in rows:
+        print(f"{name},{v:.1f}")
+    d = dict(rows)
+    print(f"\nbeta (bloom probe / semijoin probe): "
+          f"{d['bloom_probe_hashed'] / d['semijoin_sorted_numpy']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

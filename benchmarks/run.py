@@ -1,0 +1,56 @@
+"""Benchmark harness entry: one function per paper exhibit.
+
+Prints ``name,us_per_call,derived`` CSV per the harness convention, then
+each exhibit's own table. `--sf` scales TPC-H (default 0.1; the paper
+uses 1.0 — pass --sf 1.0 for the full-size run)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.1)
+    ap.add_argument("--kernel-n", type=int, default=1_000_000)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (curation_bench, distributed_transfer,
+                            figure2_tpch, figure3_breakdown,
+                            figure4_robustness, kernel_bench,
+                            table1_q5_sizes)
+
+    exhibits = {
+        "figure2_tpch": lambda: figure2_tpch.main(args.sf),
+        "table1_q5_sizes": lambda: table1_q5_sizes.main(args.sf),
+        "figure3_breakdown": lambda: figure3_breakdown.main(args.sf),
+        "figure4_robustness": lambda: figure4_robustness.main(args.sf),
+        "kernel_bench": lambda: kernel_bench.main(args.kernel_n),
+        "distributed_transfer": distributed_transfer.main,
+        "curation_bench": lambda: curation_bench.main(
+            max(int(args.sf * 1_000_000), 20_000)),
+    }
+    if args.only:
+        exhibits = {args.only: exhibits[args.only]}
+
+    print("name,us_per_call,derived")
+    timings = {}
+    results = {}
+    for name, fn in exhibits.items():
+        print(f"\n===== {name} =====", file=sys.stderr)
+        t0 = time.perf_counter()
+        results[name] = fn()
+        timings[name] = (time.perf_counter() - t0) * 1e6
+    print("\nname,us_per_call,derived")
+    for name, us in timings.items():
+        derived = ""
+        if name == "figure2_tpch":
+            derived = (f"geomean_pred_trans="
+                       f"{results[name][1]['pred-trans']['geomean_speedup']:.2f}x")
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

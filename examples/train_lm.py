@@ -1,0 +1,104 @@
+"""End-to-end training driver: a ~100M-parameter LM for a few hundred
+steps with the full production stack — microbatched train_step, cosine
+schedule, fault-tolerant loop with async checkpoints, straggler monitor,
+resume-on-restart.
+
+    PYTHONPATH=src python examples/train_lm.py --preset 25m --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+(CPU-feasible presets; the same driver drives the production mesh — see
+repro/launch/dryrun.py for the 256/512-chip lowering of the identical
+train_step.)
+"""
+import argparse
+import sys
+import time
+
+
+PRESETS = {
+    # name: (d_model, n_layers, heads, d_ff, vocab)  ~params
+    "tiny": (128, 4, 4, 512, 2048),        # ~1M    (smoke)
+    "25m": (384, 8, 8, 1536, 8192),        # ~25M
+    "100m": (640, 12, 10, 2560, 32_000),   # ~100M
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--save-every", type=int, default=25)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+    from repro.ft import FaultTolerantTrainer
+    from repro.models.common import AttnConfig, ModelConfig
+    from repro.models.model import Batch, Model
+    from repro.train import optim as O
+    from repro.train.step import TrainConfig, build_train_step
+
+    d, L, H, ff, V = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"lm-{args.preset}", d_model=d, n_layers=L, vocab_size=V,
+        d_ff=ff, attn=AttnConfig(num_heads=H, num_kv_heads=max(H // 2, 1),
+                                 head_dim=d // H),
+        act="swiglu", norm="rmsnorm")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch {args.batch}x{args.seq}, {args.steps} steps")
+
+    opt = O.AdamW(lr=O.cosine_schedule(3e-4, 20, args.steps))
+    tc = TrainConfig(microbatches=2, remat=True, loss_chunk=1024)
+    step = jax.jit(build_train_step(model, opt, tc))
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2, async_save=True)
+    trainer = FaultTolerantTrainer(step, mgr, save_every=args.save_every,
+                                   install_signal_handler=True)
+    state = trainer.resume_or_init(params, opt.init(params))
+    if state["step"]:
+        print(f"resumed from checkpoint at step {state['step']}")
+
+    def batches():
+        rng = np.random.default_rng(1)
+        while True:
+            # zipf-ish synthetic LM data with learnable bigram structure
+            start = rng.integers(0, V, (args.batch, 1))
+            drift = rng.integers(0, 7, (args.batch, args.seq)).cumsum(1)
+            toks = ((start + drift) % V).astype(np.int32)
+            t = jnp.asarray(toks)
+            tg = jnp.roll(t, -1, axis=1).at[:, -1].set(-1)
+            yield Batch(t, tg, None)
+
+    t0 = time.time()
+    hist = []
+
+    def on_metrics(step_i, m):
+        hist.append(m["loss"])
+        if step_i % 10 == 0 or step_i == args.steps:
+            tok_s = args.batch * args.seq / m["step_seconds"]
+            print(f"step {step_i:4d} loss {m['loss']:.4f} "
+                  f"lr {float(m['lr']):.2e} {m['step_seconds']*1e3:6.0f} ms"
+                  f" {tok_s:8.0f} tok/s"
+                  + ("  [straggler]" if m["straggler"] else ""))
+
+    out = trainer.run(state, batches(), max_steps=args.steps,
+                      on_metrics=on_metrics)
+    dt = time.time() - t0
+    print(f"\n{out['step']} steps in {dt:.1f}s; "
+          f"loss {hist[0]:.3f} -> {hist[-1]:.3f}; "
+          f"straggler flags: {trainer.monitor.flagged}")
+    assert hist[-1] < hist[0], "loss should decrease"
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

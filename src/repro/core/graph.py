@@ -1,0 +1,111 @@
+"""Join-graph primitives shared by the executor and the transfer strategies.
+
+Kept free of imports from `repro.relational.executor` to avoid cycles:
+executor -> graph <- transfer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+if TYPE_CHECKING:  # type-only: keeps this module import-cycle-free
+    from repro.relational.table import Table
+
+
+# --------------------------------------------------------------------------
+# graph model
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Vertex:
+    leaf_id: int
+    alias: str
+    table: Table                  # post local-predicate, pre transfer
+    mask: np.ndarray              # current validity (bool, len == table)
+    base_rows: int = -1           # catalog rows before local predicates
+    derived: bool = False         # subquery output (always informative)
+
+    @property
+    def live(self) -> int:
+        return int(self.mask.sum())
+
+    @property
+    def informative(self) -> bool:
+        """False iff this is a complete, untouched base relation — a filter
+        built from it cannot reject any FK-valid row (transfer-path
+        pruning, paper §3.2)."""
+        if self.derived or self.base_rows < 0:
+            return True
+        return len(self.table) < self.base_rows or self.live < len(self.table)
+
+
+@dataclasses.dataclass
+class Edge:
+    u: int                        # leaf_id
+    v: int
+    u_cols: Sequence[str]
+    v_cols: Sequence[str]
+    fwd_ok: bool = True           # transfer u -> v allowed
+    bwd_ok: bool = True           # transfer v -> u allowed
+
+    def endpoint_cols(self, leaf: int) -> Sequence[str]:
+        return self.u_cols if leaf == self.u else self.v_cols
+
+    def other(self, leaf: int) -> int:
+        return self.v if leaf == self.u else self.u
+
+    def allows(self, src: int, dst: int) -> bool:
+        if (src, dst) == (self.u, self.v):
+            return self.fwd_ok
+        if (src, dst) == (self.v, self.u):
+            return self.bwd_ok
+        raise ValueError("edge does not connect these vertices")
+
+
+@dataclasses.dataclass
+class TransferStats:
+    strategy: str = ""
+    seconds: float = 0.0
+    filters_built: int = 0
+    filter_bytes: int = 0
+    rows_probed: int = 0
+    rows_semijoin_build: int = 0
+    rows_semijoin_probe: int = 0
+    per_vertex: Dict[str, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)  # alias -> (rows_before, rows_after)
+
+    def record_vertices(self, vertices: Dict[int, Vertex], before: Dict[int, int]):
+        for lid, v in vertices.items():
+            self.per_vertex[v.alias] = (before[lid], v.live)
+
+
+# --------------------------------------------------------------------------
+# strategies
+# --------------------------------------------------------------------------
+
+
+class Strategy:
+    """Pre-filtering strategy interface. `prefilter` mutates vertex masks
+    before the join phase. `per_join_filter` is the one-hop hook used by
+    BloomJoin inside the join phase."""
+
+    name = "base"
+    uses_per_join_filter = False
+
+    def prefilter(self, vertices: Dict[int, Vertex], edges: List[Edge]
+                  ) -> TransferStats:
+        return TransferStats(strategy=self.name)
+
+    def per_join_filter(self, build: Table, probe: Table,
+                        build_keys: Sequence[str], probe_keys: Sequence[str],
+                        stats: TransferStats) -> np.ndarray:
+        raise NotImplementedError
+
+
+class NoPredTrans(Strategy):
+    name = "no-pred-trans"
+
+

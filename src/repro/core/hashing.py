@@ -1,0 +1,61 @@
+"""32-bit vectorized hashing (murmur3 finalizer based), JAX + numpy mirrors.
+
+All engine keys are int64 on host. To stay independent of jax_enable_x64 we
+split keys into (lo, hi) uint32 halves on host and hash the pair. The same
+mix is implemented in numpy (host/oracle) and jnp (device/kernels); tests
+assert bit-exact agreement.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+GOLDEN = np.uint32(0x9E3779B9)
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+
+
+# -- host (numpy) -----------------------------------------------------------
+
+def key_halves(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """int64 keys -> (lo, hi) uint32 halves (host-side)."""
+    k = keys.astype(np.int64, copy=False).view(np.uint64)
+    lo = (k & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (k >> np.uint64(32)).astype(np.uint32)
+    return lo, hi
+
+
+def fmix32_np(h: np.ndarray) -> np.ndarray:
+    h = h.astype(np.uint32, copy=True)
+    with np.errstate(over="ignore"):
+        h ^= h >> np.uint32(16)
+        h *= _C1
+        h ^= h >> np.uint32(13)
+        h *= _C2
+        h ^= h >> np.uint32(16)
+    return h
+
+
+def hash64_np(lo: np.ndarray, hi: np.ndarray,
+              salt: np.uint32 = np.uint32(0)) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        return fmix32_np(lo ^ fmix32_np(hi ^ salt))
+
+
+# -- device (jnp) -----------------------------------------------------------
+
+def fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_C1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_C2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash64(lo: jnp.ndarray, hi: jnp.ndarray,
+           salt=jnp.uint32(0)) -> jnp.ndarray:
+    return fmix32(lo ^ fmix32(hi ^ jnp.uint32(salt)))

@@ -1,0 +1,3 @@
+from repro.data.curation import CurationPipeline, synthetic_corpus
+
+__all__ = ["CurationPipeline", "synthetic_corpus"]

@@ -1,0 +1,3 @@
+from repro.ft.runner import FaultTolerantTrainer, StragglerMonitor, Preempted
+
+__all__ = ["FaultTolerantTrainer", "StragglerMonitor", "Preempted"]

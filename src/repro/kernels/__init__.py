@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Layout (one directory per kernel):
+  bloom/     — blocked-Bloom build / probe / fused transfer (paper §3.2)
+  semijoin/  — open-addressing hash build/probe (Yannakakis baseline §2.2)
+  flashattn/ — serving-path attention (LM architectures; framework layer)
+
+Each kernel ships three files:
+  <name>.py  — pl.pallas_call body + BlockSpec tiling (TPU target)
+  ops.py     — jit'd public wrapper (interpret=True on CPU hosts)
+  ref.py     — pure-jnp oracle; tests sweep shapes/dtypes and
+               assert_allclose kernel-vs-ref
+"""

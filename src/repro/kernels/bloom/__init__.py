@@ -1,0 +1,3 @@
+from repro.kernels.bloom.ops import bloom_build, bloom_probe, bloom_transfer
+
+__all__ = ["bloom_build", "bloom_probe", "bloom_transfer"]

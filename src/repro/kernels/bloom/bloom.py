@@ -1,0 +1,249 @@
+"""Pallas TPU kernels: blocked-Bloom build / probe / fused transfer.
+
+TPU adaptation (DESIGN.md §3): the filter is an array of 256-bit blocks
+(8 × uint32 lanes — one VMEM word row). One hash selects the block; k bit
+positions are derived by double hashing *within* the block, so a probe
+touches exactly one block row (single dynamic fetch + VPU bit math) and an
+insert read-modify-writes one block row.
+
+Tiling: keys stream through VMEM in (1, TILE) blocks over a 1-D grid; the
+filter itself is small (KBs–MBs) and is kept resident in VMEM for all grid
+steps (constant index_map). The build/transfer kernels exploit the
+sequential TPU grid to accumulate inserts into that resident block across
+steps — the canonical Pallas accumulator pattern.
+
+The probe path is fully vectorized. The insert path is a serialized
+read-modify-write loop over the tile (scatter-OR has no vector primitive
+on the VPU); DESIGN.md discusses the MXU one-hot alternative for small
+filters. All kernels are bit-exact against the ref.py oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.bloom import BLOCK_BITS, LANES, DEFAULT_K
+from repro.core.hashing import GOLDEN
+
+TILE = 1024  # keys per grid step
+
+# murmur3 constants as numpy scalars: pallas kernels may not capture
+# module-level device arrays, but numpy scalars become in-trace literals
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_P2 = np.uint32(0x7FEB352D)
+
+
+def _fmix32(h):
+    h = h ^ (h >> 16)
+    h = h * _C1
+    h = h ^ (h >> 13)
+    h = h * _C2
+    h = h ^ (h >> 16)
+    return h
+
+
+def _hash_tile(lo, hi, k: int, log2nb: int):
+    """Vectorized per-tile hashing: block index + k in-block positions."""
+    h = _fmix32(lo ^ _fmix32(hi))
+    blk = (h >> jnp.uint32(32 - log2nb)).astype(jnp.int32) if log2nb > 0 \
+        else jnp.zeros_like(h, jnp.int32)
+    g1 = _fmix32(h ^ jnp.uint32(GOLDEN))
+    g2 = _fmix32(h ^ _P2) | jnp.uint32(1)
+    j = jnp.arange(k, dtype=jnp.uint32)
+    pos = (g1[:, None] + j[None, :] * g2[:, None]) & jnp.uint32(
+        BLOCK_BITS - 1)
+    return blk, pos
+
+
+def _update_rows(pos):
+    """Per-key 8-lane OR-update vectors from k bit positions: [n, LANES]."""
+    lane = (pos >> 5).astype(jnp.int32)               # [n, k]
+    bit = jnp.uint32(1) << (pos & jnp.uint32(31))     # [n, k]
+    lanes = jnp.arange(LANES, dtype=jnp.int32)        # [LANES]
+    onehot = (lane[:, :, None] == lanes[None, None, :])
+    # OR of one-bit values across k == sum when bits are distinct; use
+    # bitwise accumulation to stay exact under duplicate (lane,bit) pairs
+    upd = jnp.zeros((pos.shape[0], LANES), jnp.uint32)
+    for j in range(pos.shape[1]):                     # k is static, small
+        upd = upd | jnp.where(onehot[:, j, :], bit[:, j:j + 1],
+                              jnp.uint32(0))
+    return upd
+
+
+# --------------------------------------------------------------------------
+# probe
+# --------------------------------------------------------------------------
+
+
+def _probe_kernel(words_ref, lo_ref, hi_ref, out_ref, *, k: int,
+                  log2nb: int):
+    lo = lo_ref[0, :]
+    hi = hi_ref[0, :]
+    blk, pos = _hash_tile(lo, hi, k, log2nb)
+    words = words_ref[...]                            # filter resident
+    rows = words[blk]                                 # [TILE, LANES] gather
+    lane = (pos >> 5).astype(jnp.int32)
+    w = jnp.take_along_axis(rows, lane, axis=1)       # [TILE, k]
+    hits = (w >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+    out_ref[0, :] = jnp.all(hits == 1, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "interpret"))
+def probe_pallas(words: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                 k: int = DEFAULT_K, interpret: bool = True) -> jnp.ndarray:
+    """words [nblocks, LANES] uint32; lo/hi uint32 [n] (n % TILE == 0)."""
+    nblocks = words.shape[0]
+    log2nb = int(np.log2(nblocks))
+    n = lo.shape[0]
+    assert n % TILE == 0
+    g = n // TILE
+    lo2, hi2 = lo.reshape(g, TILE), hi.reshape(g, TILE)
+    out = pl.pallas_call(
+        functools.partial(_probe_kernel, k=k, log2nb=log2nb),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((nblocks, LANES), lambda i: (0, 0)),  # resident
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, TILE), jnp.bool_),
+        interpret=interpret,
+    )(words, lo2, hi2)
+    return out.reshape(n)
+
+
+# --------------------------------------------------------------------------
+# build
+# --------------------------------------------------------------------------
+
+
+def _build_kernel(lo_ref, hi_ref, mask_ref, out_ref, *, k: int,
+                  log2nb: int):
+    # zero the resident accumulator on the first grid step
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lo = lo_ref[0, :]
+    hi = hi_ref[0, :]
+    mask = mask_ref[0, :]
+    blk, pos = _hash_tile(lo, hi, k, log2nb)
+    upd = _update_rows(pos)                           # [TILE, LANES]
+    upd = jnp.where(mask[:, None], upd, jnp.uint32(0))
+
+    def body(i, _):
+        b = blk[i]
+        row = out_ref[b, :]
+        out_ref[b, :] = row | upd[i, :]
+        return 0
+
+    jax.lax.fori_loop(0, lo.shape[0], body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nblocks", "k", "interpret"))
+def build_pallas(lo: jnp.ndarray, hi: jnp.ndarray, mask: jnp.ndarray,
+                 nblocks: int, k: int = DEFAULT_K,
+                 interpret: bool = True) -> jnp.ndarray:
+    log2nb = int(np.log2(nblocks))
+    n = lo.shape[0]
+    assert n % TILE == 0
+    g = n // TILE
+    out = pl.pallas_call(
+        functools.partial(_build_kernel, k=k, log2nb=log2nb),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((nblocks, LANES), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, LANES), jnp.uint32),
+        interpret=interpret,
+    )(lo.reshape(g, TILE), hi.reshape(g, TILE), mask.reshape(g, TILE))
+    return out
+
+
+# --------------------------------------------------------------------------
+# fused transfer (paper §3.2 filter transformation): one scan probes the
+# incoming filter and inserts survivors' outgoing keys into a fresh filter
+# --------------------------------------------------------------------------
+
+
+def _transfer_kernel(inw_ref, ilo_ref, ihi_ref, olo_ref, ohi_ref, mask_ref,
+                     ok_ref, outw_ref, *, k: int, log2nb_in: int,
+                     log2nb_out: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        outw_ref[...] = jnp.zeros_like(outw_ref)
+
+    # probe the incoming filter on the incoming join key
+    ilo, ihi = ilo_ref[0, :], ihi_ref[0, :]
+    blk, pos = _hash_tile(ilo, ihi, k, log2nb_in)
+    rows = inw_ref[...][blk]
+    lane = (pos >> 5).astype(jnp.int32)
+    w = jnp.take_along_axis(rows, lane, axis=1)
+    hits = (w >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+    ok = mask_ref[0, :] & jnp.all(hits == 1, axis=1)
+    ok_ref[0, :] = ok
+
+    # insert survivors' outgoing keys into the outgoing filter
+    olo, ohi = olo_ref[0, :], ohi_ref[0, :]
+    oblk, opos = _hash_tile(olo, ohi, k, log2nb_out)
+    upd = _update_rows(opos)
+    upd = jnp.where(ok[:, None], upd, jnp.uint32(0))
+
+    def body(i, _):
+        b = oblk[i]
+        outw_ref[b, :] = outw_ref[b, :] | upd[i, :]
+        return 0
+
+    jax.lax.fori_loop(0, olo.shape[0], body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nblocks_out", "k", "interpret"))
+def transfer_pallas(in_words: jnp.ndarray,
+                    in_lo: jnp.ndarray, in_hi: jnp.ndarray,
+                    out_lo: jnp.ndarray, out_hi: jnp.ndarray,
+                    mask: jnp.ndarray, nblocks_out: int,
+                    k: int = DEFAULT_K, interpret: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    nblocks_in = in_words.shape[0]
+    n = in_lo.shape[0]
+    assert n % TILE == 0
+    g = n // TILE
+    shape2 = lambda a: a.reshape(g, TILE)
+    ok, outw = pl.pallas_call(
+        functools.partial(_transfer_kernel, k=k,
+                          log2nb_in=int(np.log2(nblocks_in)),
+                          log2nb_out=int(np.log2(nblocks_out))),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((nblocks_in, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((nblocks_out, LANES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, TILE), jnp.bool_),
+            jax.ShapeDtypeStruct((nblocks_out, LANES), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(in_words, shape2(in_lo), shape2(in_hi), shape2(out_lo),
+      shape2(out_hi), shape2(mask))
+    return ok.reshape(n), outw

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the bloom kernels.
+
+This is exactly the framework-level implementation in `repro.core.bloom`
+(which is itself bit-exact against the numpy host mirror — asserted in
+tests), re-exported so the kernel directory is self-contained per the
+kernels/<name>/{kernel,ops,ref} convention.
+"""
+from repro.core.bloom import (  # noqa: F401
+    BLOCK_BITS, LANES, DEFAULT_K,
+    build as bloom_build_ref,
+    probe as bloom_probe_ref,
+    transfer as bloom_transfer_ref,
+)

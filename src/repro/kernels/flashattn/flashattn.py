@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: flash attention (fwd) with causal + sliding-window
+masking and positional validity — the serving/prefill hot spot.
+
+Tiling: grid = (batch*heads, num_q_blocks, num_kv_blocks), KV innermost so
+the output block and the online-softmax running statistics (m, l) stay
+VMEM-resident across KV steps (constant index_map — the same accumulator
+pattern as kernels/bloom). Block shapes are (Q_BLK, D) / (KV_BLK, D),
+MXU-aligned for D ∈ {64, 128}; the [Q_BLK, KV_BLK] score tile is the only
+quadratic buffer.
+
+Per-step masking uses q/kv position vectors, so ragged validity, causal
+and sliding-window all compose; fully-masked tiles short-circuit through
+the m/l statistics (exp(-inf)=0 contributions).
+
+Validated (interpret mode) against ref.sdpa_ref over shape/dtype sweeps
+in tests/test_kernels_flash.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+Q_BLK = 128
+KV_BLK = 128
+NEG = -1e30
+
+
+def _kernel(qp_ref, kp_ref, kval_ref, q_ref, k_ref, v_ref,
+            o_ref, m_ref, l_ref, *, scale: float, causal: bool,
+            window: Optional[int], nk: int):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, :]                       # [Qb, D]
+    k = k_ref[0, :, :]                       # [Kb, D]
+    v = v_ref[0, :, :]
+    qp = qp_ref[0, :]                        # [Qb]
+    kp = kp_ref[0, :]
+    kval = kval_ref[0, :]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    mask = kval[None, :]
+    if causal:
+        mask = mask & (kp[None, :] <= qp[:, None])
+    if window is not None:
+        mask = mask & (qp[:, None] - kp[None, :] < window)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[0, :]                     # [Qb]
+    l_prev = l_ref[0, :]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])          # fully-masked rows -> 0
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    o_ref[0, :, :] = (o_ref[0, :, :] * alpha[:, None]
+                      + jnp.dot(p.astype(v.dtype), v,
+                                preferred_element_type=jnp.float32))
+    m_ref[0, :] = m_new
+    l_ref[0, :] = l_new
+
+    @pl.when(kv_i == nk - 1)
+    def _finalize():
+        o_ref[0, :, :] = o_ref[0, :, :] / jnp.maximum(
+            l_ref[0, :], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "interpret"))
+def flash_pallas(q, k, v, q_pos, kv_pos, kv_valid, *, causal: bool = True,
+                 window: Optional[int] = None, interpret: bool = True):
+    """q [BH, Sq, D]; k/v [BH, Skv, D]; q_pos [BH, Sq]; kv_pos/kv_valid
+    [BH, Skv]. Sq % Q_BLK == 0, Skv % KV_BLK == 0 (wrapper pads)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    nq, nk = sq // Q_BLK, skv // KV_BLK
+    scale = 1.0 / math.sqrt(d)
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, nk=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, Q_BLK), lambda b, i, j: (b, i)),      # q_pos
+            pl.BlockSpec((1, KV_BLK), lambda b, i, j: (b, j)),     # kv_pos
+            pl.BlockSpec((1, KV_BLK), lambda b, i, j: (b, j)),     # kv_val
+            pl.BlockSpec((1, Q_BLK, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, KV_BLK, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, KV_BLK, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q_BLK, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, Q_BLK), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, Q_BLK), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, kv_valid, q, k, v)
+    return out.astype(q.dtype)

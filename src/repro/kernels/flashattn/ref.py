@@ -1,0 +1,30 @@
+"""Oracle for the flash-attention kernel: dense fp32-softmax SDPA.
+
+Mirrors repro.models.layers._sdpa_dense semantics (causal + sliding
+window + kv-validity masking) for GQA-expanded inputs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sdpa_ref(q, k, v, q_pos, kv_pos, kv_valid, *, causal: bool,
+             window: Optional[int]) -> jnp.ndarray:
+    """q [B,Sq,H,D], k/v [B,Skv,H,D] (pre-expanded heads)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(d)
+    mask = kv_valid[:, None, None, :]
+    if causal:
+        mask = mask & (kv_pos[:, None, None, :] <= q_pos[:, None, :, None])
+    if window is not None:
+        mask = mask & (q_pos[:, None, :, None] - kv_pos[:, None, None, :]
+                       < window)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

@@ -1,0 +1,3 @@
+from repro.kernels.semijoin.ops import semijoin_build, semijoin_probe, semi_mask
+
+__all__ = ["semijoin_build", "semijoin_probe", "semi_mask"]

@@ -1,0 +1,64 @@
+"""Public wrappers for the semijoin kernel."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.kernels.semijoin import semijoin as _k
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to_tile(a: np.ndarray, fill=0) -> np.ndarray:
+    n = len(a)
+    m = ((n + _k.TILE - 1) // _k.TILE) * _k.TILE
+    if m == n:
+        return a
+    out = np.full(m, fill, dtype=a.dtype)
+    out[:n] = a
+    return out
+
+
+def capacity_for(n: int) -> int:
+    """Power-of-two capacity at <=50% load."""
+    cap = 2 * max(int(n), 1)
+    return max(int(2 ** np.ceil(np.log2(cap))), _k.TILE // 2)
+
+
+def semijoin_build(keys: np.ndarray, mask: Optional[np.ndarray] = None,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    keys = np.asarray(keys)
+    if mask is None:
+        mask = np.ones(len(keys), bool)
+    cap = capacity_for(len(keys))
+    lo, hi = hashing.key_halves(_pad_to_tile(keys))
+    m = _pad_to_tile(np.asarray(mask, bool), False)
+    return _k.build_pallas(jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(m),
+                           cap, interpret=_interpret(interpret))
+
+
+def semijoin_probe(table, keys: np.ndarray,
+                   interpret: Optional[bool] = None) -> np.ndarray:
+    klo, khi, occ = table
+    keys = np.asarray(keys)
+    lo, hi = hashing.key_halves(_pad_to_tile(keys))
+    out = _k.probe_pallas(klo, khi, occ, jnp.asarray(lo), jnp.asarray(hi),
+                          interpret=_interpret(interpret))
+    return np.asarray(out)[: len(keys)]
+
+
+def semi_mask(probe_keys: np.ndarray, build_keys: np.ndarray,
+              build_mask: Optional[np.ndarray] = None,
+              interpret: Optional[bool] = None) -> np.ndarray:
+    """R ⋉ S membership mask, end to end through the Pallas kernels."""
+    table = semijoin_build(build_keys, build_mask, interpret=interpret)
+    return semijoin_probe(table, probe_keys, interpret=interpret)

@@ -1,0 +1,161 @@
+"""Pallas TPU kernels: open-addressing hash-table build + semi-join probe.
+
+This is the Yannakakis baseline's primitive (paper §2.2) in TPU form: the
+pointer-chasing hash map becomes a flat power-of-two table of (lo, hi)
+uint32 key halves plus an occupancy lane, linear probing bounded by the
+table's load factor. Build is a serialized read-modify-write loop (like
+any hash insert); probe is tile-vectorized with a while-loop over probe
+displacement that terminates when every lane in the tile has resolved.
+
+The cost asymmetry between this kernel and `kernels/bloom` — dependent
+probes and a large VMEM-resident table vs. one 256-bit block fetch — is
+exactly the β ≪ 1 asymmetry the paper's cost model builds on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TILE = 1024
+
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+
+
+def _fmix32(h):
+    h = h ^ (h >> 16)
+    h = h * _C1
+    h = h ^ (h >> 13)
+    h = h * _C2
+    h = h ^ (h >> 16)
+    return h
+
+
+def _slot_hash(lo, hi):
+    return _fmix32(lo ^ _fmix32(hi))
+
+
+# --------------------------------------------------------------------------
+# build
+# --------------------------------------------------------------------------
+
+
+def _build_kernel(lo_ref, hi_ref, mask_ref, klo_ref, khi_ref, occ_ref,
+                  *, cap: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        occ_ref[...] = jnp.zeros_like(occ_ref)
+        klo_ref[...] = jnp.zeros_like(klo_ref)
+        khi_ref[...] = jnp.zeros_like(khi_ref)
+
+    lo = lo_ref[0, :]
+    hi = hi_ref[0, :]
+    mask = mask_ref[0, :]
+    h = _slot_hash(lo, hi)
+
+    def insert(i, _):
+        def find(slot):
+            # advance until empty slot or the same key (dedup insert)
+            def cond(s):
+                occupied = occ_ref[0, s] != 0
+                same = (klo_ref[0, s] == lo[i]) & (khi_ref[0, s] == hi[i])
+                return occupied & ~same
+
+            def step(s):
+                return (s + 1) & (cap - 1)
+
+            return jax.lax.while_loop(cond, step, slot)
+
+        slot0 = (h[i] & jnp.uint32(cap - 1)).astype(jnp.int32)
+        slot = find(slot0)
+
+        @pl.when(mask[i])
+        def _store():
+            klo_ref[0, slot] = lo[i]
+            khi_ref[0, slot] = hi[i]
+            occ_ref[0, slot] = jnp.uint32(1)
+
+        return 0
+
+    jax.lax.fori_loop(0, lo.shape[0], insert, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def build_pallas(lo, hi, mask, cap: int, interpret: bool = True):
+    n = lo.shape[0]
+    assert n % TILE == 0 and cap & (cap - 1) == 0
+    g = n // TILE
+    klo, khi, occ = pl.pallas_call(
+        functools.partial(_build_kernel, cap=cap),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0))] * 3,
+        out_specs=[pl.BlockSpec((1, cap), lambda i: (0, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((1, cap), jnp.uint32)] * 3,
+        interpret=interpret,
+    )(lo.reshape(g, TILE), hi.reshape(g, TILE),
+      mask.reshape(g, TILE).astype(jnp.uint32))
+    return klo[0], khi[0], occ[0]
+
+
+# --------------------------------------------------------------------------
+# probe
+# --------------------------------------------------------------------------
+
+
+def _probe_kernel(klo_ref, khi_ref, occ_ref, lo_ref, hi_ref, out_ref,
+                  *, cap: int):
+    lo = lo_ref[0, :]
+    hi = hi_ref[0, :]
+    h = _slot_hash(lo, hi)
+    slot = (h & jnp.uint32(cap - 1)).astype(jnp.int32)
+    klo = klo_ref[0, :]
+    khi = khi_ref[0, :]
+    occ = occ_ref[0, :]
+
+    def cond(state):
+        _, resolved, _ = state
+        return ~jnp.all(resolved)
+
+    def step(state):
+        slot, resolved, found = state
+        s_lo = klo[slot]
+        s_hi = khi[slot]
+        s_occ = occ[slot] != 0
+        hit = s_occ & (s_lo == lo) & (s_hi == hi)
+        miss = ~s_occ
+        found = found | (hit & ~resolved)
+        resolved = resolved | hit | miss
+        slot = jnp.where(resolved, slot, (slot + 1) & (cap - 1))
+        return slot, resolved, found
+
+    init = (slot, jnp.zeros_like(lo, jnp.bool_), jnp.zeros_like(lo, jnp.bool_))
+    _, _, found = jax.lax.while_loop(cond, step, init)
+    out_ref[0, :] = found
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe_pallas(klo, khi, occ, lo, hi, interpret: bool = True):
+    cap = klo.shape[0]
+    n = lo.shape[0]
+    assert n % TILE == 0
+    g = n // TILE
+    out = pl.pallas_call(
+        functools.partial(_probe_kernel, cap=cap),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i: (0, 0)),
+            pl.BlockSpec((1, cap), lambda i: (0, 0)),
+            pl.BlockSpec((1, cap), lambda i: (0, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, TILE), jnp.bool_),
+        interpret=interpret,
+    )(klo[None, :], khi[None, :], occ[None, :],
+      lo.reshape(g, TILE), hi.reshape(g, TILE))
+    return out.reshape(n)

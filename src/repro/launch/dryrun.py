@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+# backend initialization. 512 host devices back the production meshes.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell and both production meshes
+(single-pod 16x16, multi-pod 2x16x16):
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(*input_specs(arch, shape))
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # proves it fits 16 GB/chip
+        compiled.cost_analysis()     # FLOPs/bytes for the roofline
+
+plus collective-traffic extraction from the partitioned HLO. Results are
+written incrementally to reports/dryrun/<cell>.json (resumable); failures
+are real bugs and abort with the compiler error.
+
+Usage:
+    python -m repro.launch.dryrun [--arch A] [--shape S] [--mesh single|multi|both]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_skip_reason
+from repro.launch import hlo as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    TRAIN_SETTINGS, input_specs, microbatches_for, named,
+)
+from repro.models.model import Model
+from repro.parallel import sharding as S
+from repro.train import optim as O
+from repro.train.step import TrainConfig, build_train_step
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__),
+                          "..", "..", "..", "reports", "dryrun")
+
+
+def opt_shardings(opt_state, param_specs, mesh):
+    """Optimizer-state specs: moments follow their parameter; factored
+    accumulators follow the parameter minus the reduced dim; scalars
+    replicate."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    # AdamW: state.m / state.v mirror params; Adafactor: vr drops last
+    # dim, vc drops second-to-last.
+    import repro.train.optim as optim
+
+    if isinstance(opt_state, optim.AdamWState):
+        mspec = param_specs
+        return optim.AdamWState(
+            NamedSharding(mesh, P()),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), mspec),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), mspec))
+    if isinstance(opt_state, optim.AdafactorState):
+        def drop_last(s, leaf):
+            t = tuple(s)
+            t = t[: leaf.ndim] if len(t) > leaf.ndim else t
+            return NamedSharding(mesh, P(*t))
+
+        vr = jax.tree.map(
+            lambda s, l: NamedSharding(
+                mesh, S.fit_spec(P(*tuple(s)[:-1]) if len(tuple(s))
+                                 else P(), l.shape, mesh)),
+            param_specs, opt_state.vr)
+        # vc shapes: param.shape[:-2] + param.shape[-1:]
+        vc = jax.tree.map(
+            lambda s, l: NamedSharding(
+                mesh, S.fit_spec(
+                    P(*(tuple(s)[:-2] + tuple(s)[-1:])) if len(tuple(s)) >= 2
+                    else P(), l.shape, mesh)),
+            param_specs, opt_state.vc)
+        return optim.AdafactorState(NamedSharding(mesh, P()), vr, vc)
+    raise TypeError(type(opt_state))
+
+
+def build_cell(arch: str, shape: str, mesh) -> Dict[str, Any]:
+    """Lower + compile one cell; return roofline-input metrics."""
+    cfg = get_config(arch)
+    model = Model(cfg)
+    spec = SHAPES[shape]
+    kind, args, arg_specs = input_specs(arch, shape, mesh, cfg)
+
+    pshapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    # serving keeps weights replicated across data (no per-step weight
+    # all-gather) — unless the per-TP-shard weight slice itself exceeds
+    # the HBM budget (jamba-398B: 796 GB / 16 = 50 GB), where ZeRO-3
+    # weight sharding stays on even for serving; training uses the
+    # per-arch ZeRO-1/ZeRO-3 choice
+    if kind == "train":
+        use_fsdp = TRAIN_SETTINGS[arch].fsdp
+    else:
+        tp = mesh.shape.get("model", 1)
+        use_fsdp = cfg.param_count() * 2.0 / tp > 12e9
+    pspecs = S.param_specs(cfg, mesh, fsdp=use_fsdp)
+    psh = named(mesh, pspecs)
+
+    if kind == "train":
+        ts = TRAIN_SETTINGS[arch]
+        opt = O.make_optimizer(
+            ts.optimizer, O.cosine_schedule(3e-4, 100, 10_000),
+            state_dtype=ts.opt_state_dtype)
+        m = microbatches_for(arch, cfg, mesh, spec)
+        tc = TrainConfig(microbatches=m, remat=True,
+                         loss_chunk=ts.loss_chunk,
+                         accum_dtype=ts.accum_dtype)
+        step_fn = build_train_step(model, opt, tc)
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        osh = opt_shardings(oshapes, pspecs, mesh)
+        in_sh = (psh, osh, named(mesh, arg_specs[0]))
+        lowered = jax.jit(step_fn, in_shardings=in_sh,
+                          donate_argnums=(0, 1)).lower(
+            pshapes, oshapes, *args)
+        extra_info = {"microbatches": m, "optimizer": ts.optimizer,
+                      "fsdp": use_fsdp}
+    elif kind == "prefill":
+        cap = spec.seq_len
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, cap=cap)
+
+        in_sh = (psh, named(mesh, arg_specs[0]))
+        lowered = jax.jit(prefill_fn, in_shardings=in_sh).lower(
+            pshapes, *args)
+        extra_info = {}
+    else:  # decode
+        if cfg.n_enc_layers:
+            def decode_fn(params, tok, caches, pos, enc):
+                return model.decode_step(params, tok, caches, pos, enc)
+        else:
+            def decode_fn(params, tok, caches, pos):
+                return model.decode_step(params, tok, caches, pos)
+        in_sh = (psh,) + tuple(named(mesh, s) for s in arg_specs)
+        lowered = jax.jit(decode_fn, in_shardings=in_sh).lower(
+            pshapes, *args)
+        extra_info = {}
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = H.collective_stats(text)
+
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    out = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": dict(mesh.shape), "devices": n_dev,
+        "compile_seconds": round(compile_s, 1),
+        "flops_per_device": float(cost.get("flops", -1)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)),
+        "collectives": coll,
+        "collective_bytes_per_device": H.collective_bytes(text),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes",
+                                          -1)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", -1)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", -1)),
+            "generated_code_bytes": int(getattr(
+                mem, "generated_code_size_in_bytes", -1)),
+        },
+        "params": int(get_config(arch).param_count()),
+        **extra_info,
+    }
+    return out
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    tag = "multi" if multi_pod else "single"
+    return os.path.join(REPORT_DIR, f"{arch}__{shape}__{tag}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            reason = shape_skip_reason(cfg, shape)
+            for multi in meshes:
+                path = cell_path(arch, shape, multi)
+                if os.path.exists(path) and not args.force:
+                    print(f"SKIP (cached) {path}")
+                    continue
+                if reason is not None:
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape,
+                                   "skip": reason}, f, indent=1)
+                    print(f"SKIP {arch} x {shape}: {reason}")
+                    continue
+                mesh = make_production_mesh(multi_pod=multi)
+                tag = "multi" if multi else "single"
+                print(f"=== {arch} x {shape} x {tag} ===", flush=True)
+                try:
+                    with jax.set_mesh(mesh):
+                        out = build_cell(arch, shape, mesh)
+                    with open(path, "w") as f:
+                        json.dump(out, f, indent=1)
+                    mb = out["memory"]
+                    print(f"  ok: compile={out['compile_seconds']}s "
+                          f"flops/dev={out['flops_per_device']:.3e} "
+                          f"coll_bytes/dev="
+                          f"{out['collective_bytes_per_device']:.3e} "
+                          f"args={mb['argument_bytes']/2**30:.2f}GiB "
+                          f"temp={mb['temp_bytes']/2**30:.2f}GiB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, tag, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("\nALL DRY-RUN CELLS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

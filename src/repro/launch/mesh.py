@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state. Single pod = 16x16 (256 v5e chips,
+axes data x model); multi-pod adds a leading "pod" axis (2 x 256 = 512).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires forced host devices)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,162 @@
+"""Roofline assembly (deliverable g).
+
+Reads the dry-run reports (reports/dryrun/*.json), combines them with the
+analytic cost model (launch/analytic.py), and emits the full baseline
+table: three roofline terms per (arch x shape x mesh), dominant
+bottleneck, MODEL_FLOPS / executed-FLOPs ratio, and what would move the
+dominant term — written to reports/roofline.md and .json.
+
+    python -m repro.launch.roofline [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_skip_reason
+from repro.launch.analytic import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, cell_cost,
+)
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__),
+                          "..", "..", "..", "reports")
+
+
+_IMPROVE = {
+    "compute": ("increase per-chip arithmetic intensity: larger "
+                "microbatch / fuse attention (Pallas flash kernel) / "
+                "bf16-accumulate matmuls"),
+    "memory": ("cut HBM traffic: KV-cache quantization, weight "
+               "prefetch across layer scan, fewer remat passes, "
+               "MLA-style cache compression"),
+    "collective": ("overlap or shrink comm: int8 gradient compression, "
+                   "all-gather/compute overlap across the layer scan, "
+                   "2D-sharded weights to halve all-gather hops"),
+}
+
+
+def load_cells(mesh_tag: str) -> List[dict]:
+    out = []
+    pat = os.path.join(REPORT_DIR, "dryrun", f"*__{mesh_tag}.json")
+    for path in sorted(glob.glob(pat)):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def build_table(mesh_tag: str = "single") -> List[dict]:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            skip = shape_skip_reason(cfg, shape)
+            path = os.path.join(REPORT_DIR, "dryrun",
+                                f"{arch}__{shape}__{mesh_tag}.json")
+            meas = None
+            if os.path.exists(path):
+                with open(path) as f:
+                    meas = json.load(f)
+            if skip:
+                rows.append({"arch": arch, "shape": shape,
+                             "skip": skip})
+                continue
+            if meas is None or "skip" in meas:
+                rows.append({"arch": arch, "shape": shape,
+                             "skip": "dry-run report missing"})
+                continue
+            mesh_shape = meas["mesh"]
+            opt = meas.get("optimizer", "adamw")
+            from repro.launch.specs import TRAIN_SETTINGS
+            ts = TRAIN_SETTINGS[arch]
+            import jax.numpy as jnp
+            opt_bpp = {"adamw": 8.0 if ts.opt_state_dtype == jnp.float32
+                       else 4.0,
+                       "adafactor": 0.1}[opt]
+            accum_b = 4.0 if ts.accum_dtype == jnp.float32 else 2.0
+            cost = cell_cost(cfg, shape, mesh_shape,
+                             microbatches=meas.get("microbatches", 1),
+                             optimizer=opt,
+                             opt_bytes_per_param=opt_bpp,
+                             fsdp=meas.get("fsdp", True),
+                             accum_bytes=accum_b)
+            terms = cost.terms()
+            dominant = cost.bottleneck()
+            step_s = max(terms.values())
+            useful_s = (cost.model_flops / meas["devices"]) / PEAK_FLOPS
+            rows.append({
+                "arch": arch, "shape": shape, "mesh": mesh_tag,
+                "devices": meas["devices"],
+                "compute_s": terms["compute_s"],
+                "memory_s": terms["memory_s"],
+                "collective_s": terms["collective_s"],
+                "bottleneck": dominant,
+                "model_flops": cost.model_flops,
+                "executed_flops_per_dev": cost.flops,
+                "useful_ratio": cost.model_flops
+                / (cost.flops * meas["devices"]),
+                "roofline_fraction": useful_s / step_s,
+                "hlo_flops_per_dev_raw": meas["flops_per_device"],
+                "hlo_coll_bytes_per_dev_raw":
+                    meas["collective_bytes_per_device"],
+                "memory_report": meas["memory"],
+                "improve": _IMPROVE[dominant],
+            })
+    return rows
+
+
+def render_md(rows: List[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | "
+        "bottleneck | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP | — | {r['skip'][:60]}… |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi"])
+    args = ap.parse_args()
+    rows = build_table(args.mesh)
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    out_json = os.path.join(REPORT_DIR, f"roofline_{args.mesh}.json")
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    md = render_md(rows)
+    with open(os.path.join(REPORT_DIR, f"roofline_{args.mesh}.md"),
+              "w") as f:
+        f.write(md + "\n")
+    print(md)
+    done = [r for r in rows if "skip" not in r]
+    print(f"\n{len(done)} cells analysed, "
+          f"{len(rows) - len(done)} skipped; reports in {out_json}")
+    # the three hillclimb picks (worst fraction / most collective-bound /
+    # most technique-representative) are chosen in EXPERIMENTS.md §Perf
+    worst = min(done, key=lambda r: r["roofline_fraction"], default=None)
+    collb = max(done, key=lambda r: r["collective_s"]
+                / max(r["compute_s"], 1e-12), default=None)
+    if worst:
+        print(f"worst roofline fraction: {worst['arch']} x "
+              f"{worst['shape']} ({worst['roofline_fraction']:.2f})")
+    if collb:
+        print(f"most collective-bound: {collb['arch']} x "
+              f"{collb['shape']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,18 @@
+"""Production serving launcher (CLI wrapper over examples/serve_lm.py
+mechanics): batched prefill + ring-cache decode for any --arch."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> int:
+    sys.argv[0] = "serve_lm"
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[3] / "examples"
+    sys.path.insert(0, str(root))
+    import serve_lm
+    return serve_lm.main()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

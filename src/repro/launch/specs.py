@@ -1,0 +1,131 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+`input_specs(arch, shape)` builds the exact stand-in inputs the dry-run
+lowers against (weak-type-correct, shardable, zero allocation) and the
+matching in_shardings. Per-arch training knobs (microbatching, optimizer,
+accumulation dtype) live in `train_settings` — chosen so the per-chip
+memory budget holds at 16 GB/v5e (DESIGN.md §7; validated by the
+dry-run's memory_analysis, recorded in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.models.common import ModelConfig
+from repro.models.model import Batch, Model
+from repro.parallel import sharding as S
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    samples_per_microbatch: int = 8     # grad-accum granularity
+    optimizer: str = "adamw"
+    opt_state_dtype: Any = jnp.float32
+    loss_chunk: int = 2048
+    accum_dtype: Any = jnp.float32
+    # ZeRO-3 weight sharding over data; False (ZeRO-1) for models whose
+    # params+opt fit per-chip when sharded over model only — kills the
+    # per-microbatch weight all-gather (EXPERIMENTS.md §Perf iter 4)
+    fsdp: bool = True
+
+
+# per-arch memory-budget knobs (derivations in EXPERIMENTS.md §Dry-run)
+TRAIN_SETTINGS: Dict[str, TrainSettings] = {
+    "qwen1.5-4b": TrainSettings(4, fsdp=False),
+    "starcoder2-7b": TrainSettings(2, fsdp=False),
+    "command-r-35b": TrainSettings(2),
+    "minitron-4b": TrainSettings(8, fsdp=False),
+    "mamba2-370m": TrainSettings(1, fsdp=False),
+    "deepseek-v2-lite-16b": TrainSettings(1),   # bounds MoE dispatch [T,E,C]
+    "mixtral-8x7b": TrainSettings(2),
+    "jamba-1.5-large-398b": TrainSettings(
+        4, optimizer="adafactor", opt_state_dtype=jnp.bfloat16,
+        accum_dtype=jnp.bfloat16),
+    "llava-next-mistral-7b": TrainSettings(4, fsdp=False),
+    "whisper-base": TrainSettings(16, fsdp=False),
+}
+
+
+def microbatches_for(arch: str, cfg: ModelConfig, mesh: Mesh,
+                     spec: ShapeSpec) -> int:
+    ts = TRAIN_SETTINGS[arch]
+    dp = int(np.prod([S.axis_size(mesh, a) for a in S.batch_axes(mesh)]))
+    b_local = max(spec.global_batch // dp, 1)
+    m = max(1, b_local // ts.samples_per_microbatch)
+    while b_local % m:
+        m -= 1
+    return m
+
+
+def _token_specs(cfg: ModelConfig, spec: ShapeSpec, mesh: Mesh
+                 ) -> Tuple[Batch, Batch]:
+    """(ShapeDtypeStruct batch, PartitionSpec batch) for a train/prefill
+    sequence batch. VLM reserves patch positions inside seq_len; whisper
+    extra = encoder frames."""
+    b = spec.global_batch
+    s = spec.seq_len
+    extra = extra_spec = None
+    if cfg.frontend == "vision_stub":
+        s = s - cfg.num_patches
+        extra = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model),
+                                     jnp.float32)
+        extra_spec = S.batch_spec(mesh, b, extra_dims=2)
+    if cfg.frontend == "audio_stub":
+        extra = jax.ShapeDtypeStruct((b, cfg.enc_seq_len, cfg.d_model),
+                                     jnp.float32)
+        extra_spec = S.batch_spec(mesh, b, extra_dims=2)
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_spec = S.batch_spec(mesh, b, extra_dims=1)
+    return (Batch(tok, tok, extra),
+            Batch(tok_spec, tok_spec, extra_spec))
+
+
+def input_specs(arch: str, shape: str, mesh: Mesh,
+                cfg: Optional[ModelConfig] = None):
+    """Returns (kind, args_specs, args_shardings) for the cell's step fn.
+
+    train:   (params, opt_state, batch)         -> jitted train_step
+    prefill: (params, batch)                    -> jitted prefill
+    decode:  (params, tokens, caches, position) -> jitted decode_step
+    """
+    cfg = cfg or get_config(arch)
+    spec = SHAPES[shape]
+    model = Model(cfg)
+
+    if spec.kind == "train":
+        batch, batch_sh = _token_specs(cfg, spec, mesh)
+        return "train", (batch,), (batch_sh,)
+
+    if spec.kind == "prefill":
+        batch, batch_sh = _token_specs(cfg, spec, mesh)
+        return "prefill", (batch,), (batch_sh,)
+
+    # decode: one new token against a seq_len-deep cache
+    b = spec.global_batch
+    cap = spec.seq_len
+    caches = jax.eval_shape(lambda: model.init_cache(b, cap))
+    cache_spec = S.cache_spec(cfg, mesh, b)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_spec = S.batch_spec(mesh, b, extra_dims=1)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (tok, caches, pos)
+    shs = (tok_spec, cache_spec, P())
+    if cfg.n_enc_layers:
+        enc = jax.ShapeDtypeStruct((b, cfg.enc_seq_len, cfg.d_model),
+                                   cfg.dtype)
+        args = args + (enc,)
+        shs = shs + (S.batch_spec(mesh, b, extra_dims=2),)
+    return "decode", args, shs
+
+
+def named(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, tree,
+        is_leaf=lambda s: isinstance(s, P))

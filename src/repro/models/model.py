@@ -1,0 +1,298 @@
+"""Model assembly: embed -> scanned block stack -> norm -> LM head.
+
+Depth is executed as `lax.scan` over repetitions of the config's block
+pattern (HLO size O(pattern), not O(depth)). Each scan step applies one
+full pattern period (e.g. jamba: 1 attention + 7 mamba layers, MoE on
+every second layer). Heterogeneous prefix layers (deepseek's first dense
+layer) run unscanned.
+
+Caches: softmax-attention layers carry a static-capacity `KVCache`
+(MLA layers store compressed c_kv + k_rope in it), mamba layers carry a
+`MambaCache`; both are stacked along the scan axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import (
+    ModelConfig, init_params, moe_layer_indices,
+)
+
+
+class Batch(NamedTuple):
+    tokens: jnp.ndarray                    # [B, S] int32
+    targets: jnp.ndarray                   # [B, S] int32 (-1 = no loss)
+    extra: Optional[jnp.ndarray] = None    # vision/audio stub embeddings
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        moe_idx = set(moe_layer_indices(cfg))
+        import numpy as _np
+        period = cfg.block_period
+        moe_period = cfg.moe.every_n_layers if cfg.moe else 1
+        self.prefix_n = cfg.moe.first_dense if cfg.moe else 0
+        self.full_period = int(_np.lcm(period, moe_period))
+        self.n_reps = (cfg.n_layers - self.prefix_n) // self.full_period
+        # static slot descriptors: (mixer_kind, ffn_is_moe)
+        self.slots = []
+        for slot in range(self.full_period):
+            i = self.prefix_n + slot
+            self.slots.append((cfg.layer_kind(i), i in moe_idx))
+        self.prefix_slots = [(cfg.layer_kind(i), i in moe_idx)
+                             for i in range(self.prefix_n)]
+
+    # ------------------------------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        return init_params(rng, self.cfg)
+
+    # ------------------------------------------------------------------
+    def _apply_block(self, kind: str, is_moe: bool, p, x, positions,
+                     cache, collect_aux: bool):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if kind == "mamba":
+            x, new_cache = L.mamba2(p["mixer"], x, cfg.mamba, cache,
+                                    norm_kind=cfg.norm)
+        else:
+            x, new_cache = L.attention(p["mixer"], x, cfg.attn, positions,
+                                       cache, norm_kind=cfg.norm)
+        if is_moe:
+            if collect_aux:
+                aux = L.moe_aux_loss(p["ffn"], x, cfg, norm_kind=cfg.norm)
+            x = L.moe(p["ffn"], x, cfg, norm_kind=cfg.norm)
+        elif "ffn" in p:                # d_ff == 0: mixer-only block
+            x = L.mlp(p["ffn"], x, cfg.act, norm_kind=cfg.norm)
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------
+    def _empty_cache_slot(self, kind: str, batch: int, cap: int):
+        cfg = self.cfg
+        if kind == "mamba":
+            mb = cfg.mamba
+            d_inner = mb.expand * cfg.d_model
+            nheads = d_inner // mb.head_dim
+            return L.MambaCache(
+                conv=jnp.zeros((batch, mb.d_conv - 1,
+                                d_inner + 2 * mb.d_state), cfg.dtype),
+                ssm=jnp.zeros((batch, nheads, mb.head_dim, mb.d_state),
+                              jnp.float32))
+        a = cfg.attn
+        if a.kv_lora_rank:
+            return L.KVCache(
+                k=jnp.zeros((batch, cap, a.kv_lora_rank), cfg.dtype),
+                v=jnp.zeros((batch, cap, a.rope_head_dim), cfg.dtype),
+                index=jnp.zeros((), jnp.int32))
+        return L.KVCache(
+            k=jnp.zeros((batch, cap, a.num_kv_heads, a.head_dim),
+                        cfg.dtype),
+            v=jnp.zeros((batch, cap, a.num_kv_heads, a.head_dim),
+                        cfg.dtype),
+            index=jnp.zeros((), jnp.int32))
+
+    def init_cache(self, batch: int, cap: int):
+        """Per-slot stacked caches + prefix-layer caches.
+
+        SWA bounds attention cache capacity to the window size
+        (context_class == "window"); SSM state is O(1) already."""
+        cfg = self.cfg
+
+        def cap_for(kind):
+            if kind == "attn" and cfg.attn and cfg.attn.sliding_window:
+                return min(cap, cfg.attn.sliding_window)
+            return cap
+
+        prefix = [self._empty_cache_slot(k, batch, cap_for(k))
+                  for k, _ in self.prefix_slots]
+        slots = []
+        for kind, _ in self.slots:
+            one = self._empty_cache_slot(kind, batch, cap_for(kind))
+            slots.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (self.n_reps,)
+                                           + x.shape), one))
+        return {"prefix": prefix, "slots": slots}
+
+    # ------------------------------------------------------------------
+    def backbone(self, params, x, positions, caches=None,
+                 collect_aux: bool = False):
+        """Embedded input -> final hidden. Returns (x, new_caches, aux)."""
+        new_prefix = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, (kind, is_moe) in enumerate(self.prefix_slots):
+            c = caches["prefix"][i] if caches else None
+            x, nc, aux = self._apply_block(kind, is_moe,
+                                           params["prefix_layers"][i], x,
+                                           positions, c, collect_aux)
+            new_prefix.append(nc)
+            aux_total = aux_total + aux
+
+        def step(carry, xs):
+            x = carry
+            aux_acc = jnp.zeros((), jnp.float32)
+            slot_params, slot_caches = xs
+            new_caches = []
+            for si, (kind, is_moe) in enumerate(self.slots):
+                c = slot_caches[si] if slot_caches is not None else None
+                x, nc, aux = self._apply_block(kind, is_moe,
+                                               slot_params[si], x,
+                                               positions, c, collect_aux)
+                new_caches.append(nc)
+                aux_acc = aux_acc + aux
+            return x, (new_caches if caches else None, aux_acc)
+
+        xs = (params["layers"],
+              caches["slots"] if caches else None)
+        x, (new_slot_caches, aux_per_rep) = jax.lax.scan(step, x, xs)
+        aux_total = aux_total + aux_per_rep.sum()
+        new_caches = ({"prefix": new_prefix, "slots": new_slot_caches}
+                      if caches else None)
+        return x, new_caches, aux_total
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        """Whisper encoder: frame embeddings (stub frontend) -> enc_out."""
+        cfg = self.cfg
+        x = frames.astype(cfg.dtype) @ params["frame_proj"]
+        b, se, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+
+        import dataclasses as _dc
+        enc_cfg = _dc.replace(cfg.attn, causal=False, sliding_window=None)
+
+        def enc_step(x, lp):
+            x, _ = L.attention(lp["mixer"], x, enc_cfg, pos, None,
+                               norm_kind=cfg.norm)
+            x = L.mlp(lp["ffn"], x, cfg.act, norm_kind=cfg.norm)
+            return x, None
+
+        x, _ = jax.lax.scan(enc_step, x, params["encoder"])
+        return L.norm(x, params["enc_ln_f"], cfg.norm)
+
+    # ------------------------------------------------------------------
+    def embed_inputs(self, params, batch: Batch):
+        cfg = self.cfg
+        from repro.parallel import hints as HT
+        x = params["embed"][batch.tokens]
+        if cfg.frontend == "vision_stub" and batch.extra is not None:
+            patches = batch.extra.astype(cfg.dtype) @ params["patch_proj"]
+            x = jnp.concatenate([patches, x], axis=1)
+        return x  # sharding from the (None, model)-sharded table
+
+    def hidden_to_logits(self, params, h):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        return (h @ w).astype(jnp.float32)
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch: Batch, loss_chunk: int = 2048):
+        """Token-mean cross entropy, vocabulary-chunk-safe.
+
+        Whisper: batch.extra = frame embeddings (encoder input); llava:
+        batch.extra = patch embeddings (prepended to the text sequence,
+        no loss on patch positions)."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        if cfg.n_enc_layers:
+            enc_out = self.encode(params, batch.extra)
+            x, _, aux = self.backbone_with_cross(params, x, pos, enc_out)
+        else:
+            x, _, aux = self.backbone(params, x, pos, None,
+                                      collect_aux=cfg.moe is not None)
+        x = L.norm(x, params["ln_f"], cfg.norm)
+
+        targets = batch.targets
+        if cfg.frontend == "vision_stub" and batch.extra is not None:
+            npatch = batch.extra.shape[1]
+            pad = jnp.full((b, npatch), -1, targets.dtype)
+            targets = jnp.concatenate([pad, targets], axis=1)
+
+        # chunked xent over the sequence to bound the [*, V] logits buffer
+        t = b * s
+        xf = x.reshape(t, cfg.d_model)
+        tf = targets.reshape(t)
+        nchunk = max(1, t // max(loss_chunk, 1))
+        csize = t // nchunk
+        xf = xf[: nchunk * csize].reshape(nchunk, csize, cfg.d_model)
+        tf = tf[: nchunk * csize].reshape(nchunk, csize)
+
+        def chunk_loss(carry, xs):
+            xc, tc = xs
+            logits = self.hidden_to_logits(params, xc)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(tc, 0)[:, None], axis=1)[:, 0]
+            valid = tc >= 0
+            nll = jnp.where(valid, lse - gold, 0.0)
+            return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+        (total, count), _ = jax.lax.scan(
+            chunk_loss, (jnp.zeros((), jnp.float32),
+                         jnp.zeros((), jnp.int32)), (xf, tf))
+        ce = total / jnp.maximum(count, 1)
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    def backbone_with_cross(self, params, x, positions, enc_out,
+                            caches=None):
+        """Decoder stack with interleaved cross-attention (whisper)."""
+        cfg = self.cfg
+
+        def step(x, xs):
+            slot_params, cross_p, slot_caches = xs
+            c = slot_caches[0] if slot_caches is not None else None
+            x, nc, _ = self._apply_block("attn", False, slot_params[0], x,
+                                         positions, c, False)
+            x = L.cross_attention(cross_p, x, enc_out, cfg.attn,
+                                  norm_kind=cfg.norm)
+            return x, ([nc] if caches else None)
+
+        xs = (params["layers"], params["cross"],
+              caches["slots"] if caches else None)
+        x, new_slots = jax.lax.scan(step, x, xs)
+        new_caches = {"prefix": [], "slots": new_slots} if caches else None
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch: Batch, cap: int):
+        """Run the full prompt, returning (last-token logits, caches)."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        b, s, _ = x.shape
+        caches = self.init_cache(b, cap)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.n_enc_layers:
+            enc_out = self.encode(params, batch.extra)
+            x, caches, _ = self.backbone_with_cross(params, x, pos,
+                                                    enc_out, caches)
+        else:
+            x, caches, _ = self.backbone(params, x, pos, caches)
+        x = L.norm(x, params["ln_f"], cfg.norm)
+        return self.hidden_to_logits(params, x[:, -1:]), caches
+
+    def decode_step(self, params, tokens, caches, position,
+                    enc_out=None):
+        """One token step. tokens [B, 1]; position scalar int32."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        b = x.shape[0]
+        pos = jnp.full((b, 1), position, jnp.int32)
+        if cfg.n_enc_layers:
+            x, caches, _ = self.backbone_with_cross(params, x, pos,
+                                                    enc_out, caches)
+        else:
+            x, caches, _ = self.backbone(params, x, pos, caches)
+        x = L.norm(x, params["ln_f"], cfg.norm)
+        return self.hidden_to_logits(params, x), caches
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,2 @@
+"""Distribution layer: mesh construction, named-sharding rules,
+gradient compression, and distributed predicate transfer."""

@@ -1,0 +1,200 @@
+"""Named-sharding rules for every parameter/cache in the zoo.
+
+Scheme (DP = FSDP over "data", TP = "model", optional "pod" = pure DP):
+  * column-parallel weights (wq/wk/wv/w1/w3/in_proj/router/unembed/...):
+    inputs sharded over data (FSDP), outputs over model (Megatron TP);
+  * row-parallel weights (wo/w2/out_proj): transposed;
+  * MoE experts: expert-parallel over "model" when num_experts divides
+    the model-axis size, else tensor-parallel inside each expert;
+  * embeddings: vocab over model, d_model over data;
+  * norms/scalars: replicated;
+  * stacked (scan) leading axes: never sharded.
+
+`fit_spec` drops any axis that does not divide the corresponding dim —
+sharding decisions degrade to replication rather than failing (e.g.
+whisper's odd 51865 vocab).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+# leaf name -> (base spec builder). fsdp = data axes tuple, tp = "model".
+_COL = {"wq", "wk", "wv", "w1", "w3", "in_proj", "w_dkv", "w_uk", "w_uv",
+        "w_kr", "w_qr", "unembed", "frame_proj", "patch_proj"}
+_ROW = {"wo", "w2", "out_proj"}
+_BIAS_TP = {"bq", "bk", "bv"}
+_REPL = {"ln", "ln_f", "ln_x", "enc_ln_f", "a_log", "dt_bias", "d_skip"}
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Replicate any dim the assigned axes don't divide."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([axis_size(mesh, a) for a in axes]))
+        out.append(ax if size > 0 and dim % size == 0 else None)
+    return P(*out)
+
+
+def _base_spec(name: str, ndim: int, cfg: ModelConfig, mesh: Mesh,
+               fsdp: Tuple[str, ...], in_moe: bool) -> P:
+    tp = "model"
+    if in_moe and name in ("w1", "w2", "w3"):
+        ep_ok = (cfg.moe is not None
+                 and cfg.moe.num_experts % axis_size(mesh, tp) == 0)
+        if name in ("w1", "w3"):
+            spec = (tp, fsdp, None) if ep_ok else (None, fsdp, tp)
+        else:  # w2 [E, f, d]
+            spec = (tp, None, fsdp) if ep_ok else (None, tp, fsdp)
+    elif name == "embed":
+        # Megatron-style vocab-parallel embedding: each TP shard gathers
+        # its vocab range (mask + psum). This is the one gather layout
+        # XLA's SPMD partitioner handles without its buggy "involuntary
+        # full remat" path (b/433785288) — see EXPERIMENTS.md §Perf.
+        spec = (tp, None)
+    elif name == "router":
+        spec = (fsdp, None)
+    elif name == "conv_w":
+        spec = (None, tp)
+    elif name in _COL:
+        spec = (fsdp, tp)
+    elif name in _ROW:
+        spec = (tp, fsdp)
+    elif name in _BIAS_TP:
+        spec = (tp,)
+    else:  # norms, scalars, unknown -> replicate
+        spec = ()
+    # left-pad with None for stacked (scan) leading axes
+    pad = ndim - len(spec)
+    assert pad >= 0, (name, ndim, spec)
+    return P(*((None,) * pad + tuple(spec)))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree matching init_params(cfg) structure.
+
+    fsdp=True  : weights sharded over `data` too (ZeRO-3) — required when
+                 params don't fit replicated (command-r/mixtral/jamba/
+                 deepseek at 16 GB/chip);
+    fsdp=False : weights sharded over `model` only, replicated across
+                 `data` (ZeRO-1) — removes the per-microbatch weight
+                 all-gather entirely; the right choice for <=8B models
+                 and for *serving* (EXPERIMENTS.md §Perf iterations 4-5).
+    """
+    if fsdp:
+        ax = tuple(a for a in ("data",) if a in mesh.shape)
+        fsdp_ax = ax[0] if len(ax) == 1 else (ax or None)
+    else:
+        fsdp_ax = None
+
+    shapes = jax.eval_shape(
+        lambda: __import__("repro.models.common", fromlist=["init_params"])
+        .init_params(jax.random.PRNGKey(0), cfg))
+
+    def spec_for(path, leaf):
+        name = next((p.key for p in reversed(path)
+                     if hasattr(p, "key")), "")
+        in_moe = any(getattr(p, "key", None) == "ffn" for p in path) and \
+            leaf.ndim >= 3 and name in ("w1", "w2", "w3")
+        spec = _base_spec(name, leaf.ndim, cfg, mesh, fsdp_ax, in_moe)
+        return fit_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, fsdp: bool = True) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, fsdp=fsdp))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """[B, ...] sharded over (pod, data) when divisible, else replicated."""
+    axes = batch_axes(mesh)
+    size = int(np.prod([axis_size(mesh, a) for a in axes]))
+    first = axes if (axes and batch % size == 0) else None
+    return P(first, *([None] * extra_dims))
+
+
+def cache_spec(cfg: ModelConfig, mesh: Mesh, batch: int,
+               shard_seq_when_b1: bool = True) -> Any:
+    """Spec tree for Model.init_cache output. Batch-sharded when the batch
+    divides the DP axes; for global_batch==1 long-context decode the KV
+    *length* (and mamba heads) shard over "data" instead — KV sequence
+    parallelism."""
+    axes = batch_axes(mesh)
+    size = int(np.prod([axis_size(mesh, a) for a in axes]))
+    b_ok = axes and batch % size == 0
+
+    def kv_spec(leaf_ndim: int, kind: str) -> P:
+        if b_ok:
+            # batch over DP axes AND the head/feature dim over model:
+            # decode caches are the dominant serve-memory term, so they
+            # must split over the full mesh (found via sweep2/3 diff —
+            # EXPERIMENTS.md §Perf iteration 7)
+            if kind == "kv":
+                if leaf_ndim == 4:          # [B, cap, kvh, hd]
+                    return P(axes, None, None, "model")
+                return P(axes, None, "model")   # MLA [B, cap, r]
+            if kind == "conv":              # [B, k, ch]
+                return P(axes, None, "model")
+            if kind == "ssm":               # [B, H, P, N]
+                return P(axes, "model", None, None)
+            return P(axes, *([None] * (leaf_ndim - 1)))
+        if not shard_seq_when_b1:
+            return P(*([None] * leaf_ndim))
+        if kind == "kv":     # [B, cap, (kvh, hd) | (r,) | (dr,)]
+            rest = [None] * (leaf_ndim - 2)
+            if leaf_ndim == 4:
+                rest = [None, "model"]      # head_dim over model
+            return P(None, "data", *rest)
+        if kind == "conv":   # [B, k, ch]
+            return P(None, None, "model")
+        if kind == "ssm":    # [B, H, P, N]
+            return P(None, "data", None, None)
+        return P(*([None] * leaf_ndim))
+
+    caches = jax.eval_shape(lambda: __import__(
+        "repro.models.model", fromlist=["Model"]).Model(cfg)
+        .init_cache(batch, 128))
+
+    def spec_for(path, leaf):
+        # NamedTuple fields surface with .name; dict keys with .key
+        field = None
+        stacked = False
+        for p in path:
+            if getattr(p, "key", None) == "slots":
+                stacked = True          # leading n_reps scan axis
+            if hasattr(p, "name"):
+                field = p.name
+        base_ndim = leaf.ndim - (1 if stacked else 0)
+        if field == "index":
+            spec = P(*([None] * leaf.ndim))
+            return fit_spec(spec, leaf.shape, mesh)
+        if field == "conv":
+            base = kv_spec(base_ndim, "conv")
+        elif field == "ssm":
+            base = kv_spec(base_ndim, "ssm")
+        else:
+            base = kv_spec(base_ndim, "kv")
+        spec = P(*((None,) * (leaf.ndim - len(tuple(base)))
+                   + tuple(base)))
+        return fit_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)

@@ -1,0 +1,29 @@
+"""Columnar relational substrate.
+
+A minimal-but-real in-memory columnar engine: `Table` holds named columns
+(numpy arrays on host; bulk math is dispatched to JAX/Pallas kernels),
+`expr` provides a vectorized predicate/projection AST, `ops` the physical
+operators (hash/sort-merge equi-join, semi/anti join, group-agg, sort,
+top-k), and `plan`/`executor` the logical plan IR and the strategy-aware
+executor used by the predicate-transfer core.
+
+Strings are dictionary-encoded at ingest; all engine math is on integer /
+float codes (standard columnar practice, and what makes the whole engine
+JAX-compatible).
+"""
+
+from repro.relational.table import Table, Column
+from repro.relational.expr import (
+    col, lit, isin, between, like, Expr,
+)
+from repro.relational import ops
+from repro.relational.plan import (
+    Scan, Join, GroupBy, Project, Sort, Limit, SubqueryScan, PlanNode,
+)
+from repro.relational.executor import Executor, ExecStats
+
+__all__ = [
+    "Table", "Column", "col", "lit", "isin", "between", "like", "Expr",
+    "ops", "Scan", "Join", "GroupBy", "Project", "Sort", "Limit",
+    "SubqueryScan", "PlanNode", "Executor", "ExecStats",
+]

@@ -1,0 +1,252 @@
+"""Strategy-aware plan executor.
+
+Phases (paper §3.1):
+  0. scan/local-filter: resolve leaves, apply pushed-down local predicates
+     (and execute subquery leaves first, per §3.4);
+  1. transfer: the chosen `Strategy` pre-filters the leaf tables
+     (no-op for No-Pred-Trans / Bloom-Join);
+  2. join: execute the plan bottom-up over the reduced leaves; Bloom-Join
+     applies its one-hop filter inside each join here.
+
+The executor records the paper's accounting: per-join build (HT) and probe
+(PR) input rows, phase wall-times, and per-vertex reduction factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import (
+    Edge, NoPredTrans, Strategy, TransferStats, Vertex,
+)
+from repro.relational import ops
+from repro.relational.expr import Col
+from repro.relational.plan import (
+    Bind, Filter, GroupBy, Join, LeafNode, Limit, PlanNode, Project, Scan,
+    Sort, SubqueryScan,
+)
+from repro.relational.table import Column, Table
+
+
+@dataclasses.dataclass
+class JoinStat:
+    how: str
+    ht_rows: int
+    pr_rows: int
+    pr_rows_pre_bloom: int
+    out_rows: int
+
+
+@dataclasses.dataclass
+class ExecStats:
+    strategy: str = ""
+    phase_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+    transfer: Optional[TransferStats] = None
+    joins: List[JoinStat] = dataclasses.field(default_factory=list)
+    result_rows: int = 0
+    subqueries: List["ExecStats"] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_seconds(self) -> float:
+        # subquery time is already inside this executor's phase wall-times
+        # (subqueries run during leaf resolution / Bind evaluation)
+        return sum(self.phase_seconds.values())
+
+    def join_input_rows(self) -> int:
+        return sum(j.ht_rows + j.pr_rows for j in self.joins)
+
+
+class Executor:
+    def __init__(self, catalog: Mapping[str, Table],
+                 strategy: Optional[Strategy] = None):
+        self.catalog = dict(catalog)
+        self.strategy = strategy or NoPredTrans()
+
+    # ------------------------------------------------------------------
+    def execute(self, plan: PlanNode) -> Tuple[Table, ExecStats]:
+        stats = ExecStats(strategy=self.strategy.name)
+
+        # -- phase 0: leaves (with projection pushdown) ------------------
+        t0 = time.perf_counter()
+        from repro.relational.optimize import collect_columns
+        needed = collect_columns(plan)
+        vertices: Dict[int, Vertex] = {}
+        for leaf in plan.leaves():
+            vertices[leaf.leaf_id] = self._resolve_leaf(leaf, stats,
+                                                        needed)
+        stats.phase_seconds["scan"] = time.perf_counter() - t0
+
+        # -- phase 1: transfer -----------------------------------------
+        t0 = time.perf_counter()
+        edges = extract_join_graph(plan, vertices)
+        stats.transfer = self.strategy.prefilter(vertices, edges)
+        reduced = {lid: v.table.compact(v.mask)
+                   for lid, v in vertices.items()}
+        stats.phase_seconds["transfer"] = time.perf_counter() - t0
+
+        # -- phase 2: join ---------------------------------------------
+        t0 = time.perf_counter()
+        result = self._exec(plan, reduced, stats)
+        stats.phase_seconds["join"] = time.perf_counter() - t0
+        stats.result_rows = len(result)
+        return result, stats
+
+    # ------------------------------------------------------------------
+    def _resolve_leaf(self, leaf: LeafNode, stats: ExecStats,
+                      needed: Optional[set] = None) -> Vertex:
+        if isinstance(leaf, SubqueryScan):
+            sub = Executor(self.catalog, self.strategy)
+            table, sub_stats = sub.execute(leaf.plan)
+            stats.subqueries.append(sub_stats)
+            table = Table(table.columns, leaf.alias)
+            return Vertex(leaf.leaf_id, leaf.alias, table,
+                          np.ones(len(table), bool),
+                          base_rows=len(table), derived=True)
+        assert isinstance(leaf, Scan)
+        table = self.catalog[leaf.table]
+        base_rows = len(table)
+        if leaf.alias != leaf.table:
+            table = table.with_prefix(leaf.alias + "_")
+        # projection pushdown: filter first (may need dropped columns),
+        # then keep only plan-referenced columns
+        if leaf.filter is not None:
+            table = table.compact(np.asarray(leaf.filter(table), bool))
+        keep = set(table.names)
+        if needed is not None:
+            keep &= needed | set(leaf.columns or ())
+        if leaf.columns is not None:
+            keep &= set(leaf.columns) | (needed or set())
+        if keep != set(table.names):
+            table = table.select([n for n in table.names if n in keep])
+        return Vertex(leaf.leaf_id, leaf.alias, table,
+                      np.ones(len(table), bool), base_rows=base_rows)
+
+    # ------------------------------------------------------------------
+    def _exec(self, node: PlanNode, leaves: Dict[int, Table],
+              stats: ExecStats) -> Table:
+        if isinstance(node, LeafNode):
+            return leaves[node.leaf_id]
+
+        if isinstance(node, Join):
+            probe = self._exec(node.left, leaves, stats)
+            build = self._exec(node.right, leaves, stats)
+            pr_pre = len(probe)
+            if (self.strategy.uses_per_join_filter
+                    and node.how in ("inner", "semi")):
+                ts = stats.transfer
+                hit = self.strategy.per_join_filter(
+                    build, probe, node.right_on, node.left_on, ts)
+                probe = probe.compact(hit)
+            out = ops.hash_join(build, probe, node.right_on, node.left_on,
+                                how=node.how)
+            stats.joins.append(JoinStat(node.how, len(build), len(probe),
+                                        pr_pre, len(out)))
+            if node.extra is not None:
+                out = out.compact(np.asarray(node.extra(out), bool))
+            return out
+
+        if isinstance(node, Filter):
+            t = self._exec(node.child, leaves, stats)
+            return t.compact(np.asarray(node.predicate(t), bool))
+
+        if isinstance(node, Project):
+            t = self._exec(node.child, leaves, stats)
+            cols = {}
+            for name, e in node.exprs.items():
+                if isinstance(e, Col):
+                    cols[name] = t[e.name]
+                elif hasattr(e, "result_column"):  # DictMap keeps vocab
+                    cols[name] = e.result_column(t)
+                else:
+                    v = np.asarray(e(t))
+                    if v.ndim == 0:
+                        v = np.full(len(t), v)
+                    cols[name] = Column(v)
+            return Table(cols, t.name)
+
+        if isinstance(node, Bind):
+            t = self._exec(node.child, leaves, stats)
+            sub = Executor(self.catalog, self.strategy)
+            sub_t, sub_stats = sub.execute(node.subplan)
+            stats.subqueries.append(sub_stats)
+            assert len(sub_t) == 1, "Bind subplan must yield one row"
+            v = sub_t.array(node.sub_col)[0]
+            return t.with_column(node.name,
+                                 Column(np.full(len(t), v)))
+
+        if isinstance(node, GroupBy):
+            t = self._exec(node.child, leaves, stats)
+            out = ops.group_aggregate(t, node.keys, node.aggs)
+            if node.having is not None:
+                out = out.compact(np.asarray(node.having(out), bool))
+            return out
+
+        if isinstance(node, Sort):
+            return ops.sort_table(self._exec(node.child, leaves, stats),
+                                  node.by)
+
+        if isinstance(node, Limit):
+            return ops.limit(self._exec(node.child, leaves, stats), node.n)
+
+        raise TypeError(f"unknown plan node {type(node)}")
+
+
+# --------------------------------------------------------------------------
+# join-graph extraction
+# --------------------------------------------------------------------------
+
+
+def extract_join_graph(plan: PlanNode, vertices: Dict[int, Vertex]
+                       ) -> List[Edge]:
+    """Walk the plan; each equi-join contributes an edge between the leaf
+    relations owning the key columns. Outer/semi/anti joins restrict the
+    allowed transfer direction (paper §3.4):
+
+      inner: both directions;
+      left outer (probe side preserved): only probe->build;
+      semi: both (filtering the build side never changes the semi result,
+            Bloom filters have no false negatives);
+      anti: only probe->build (filtering probe rows by build membership
+            would delete exactly the rows an anti-join must keep).
+    """
+    owner: Dict[str, int] = {}
+    for lid, v in vertices.items():
+        for c in v.table.names:
+            if c in owner:
+                raise ValueError(
+                    f"ambiguous column {c!r} (leaves {owner[c]} and {lid}); "
+                    f"alias one of the scans")
+            owner[c] = lid
+
+    edges: List[Edge] = []
+
+    def walk(node: PlanNode):
+        if isinstance(node, Join):
+            walk(node.left)
+            walk(node.right)
+            # one edge per key-column pair: a join like
+            #   supplier ON (l_suppkey = s_suppkey AND c_nationkey = s_nationkey)
+            # contributes supplier—lineitem and supplier—customer edges —
+            # the paper's Fig 1a cyclic join graph for Q5.
+            groups: Dict[Tuple[int, int], Tuple[List[str], List[str]]] = {}
+            for lc, rc in zip(node.left_on, node.right_on):
+                u, v = owner.get(lc), owner.get(rc)
+                if u is None or v is None or u == v:
+                    continue
+                groups.setdefault((u, v), ([], []))
+                groups[(u, v)][0].append(lc)
+                groups[(u, v)][1].append(rc)
+            for (u, v), (lcols, rcols) in groups.items():
+                fwd_ok = True                       # probe -> build
+                bwd_ok = node.how in ("inner", "semi")
+                edges.append(Edge(u, v, lcols, rcols,
+                                  fwd_ok=fwd_ok, bwd_ok=bwd_ok))
+        else:
+            for c in node.children():
+                walk(c)
+
+    walk(plan)
+    return edges

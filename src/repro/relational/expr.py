@@ -1,0 +1,347 @@
+"""Vectorized expression AST evaluated against a Table.
+
+Supports the TPC-H predicate/projection surface: comparisons, arithmetic,
+boolean algebra, IN-lists, BETWEEN, LIKE (evaluated against the string
+dictionary, then reduced to an integer code test), and date arithmetic
+(dates are int32 days-since-epoch).
+
+`Expr.__call__(table) -> np.ndarray` evaluates; predicates return bool.
+"""
+from __future__ import annotations
+
+import fnmatch
+import re
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.relational.table import Column, Table
+
+
+class Expr:
+    # -- comparison --------------------------------------------------------
+    def __eq__(self, other):  # type: ignore[override]
+        return BinOp("==", self, wrap(other))
+
+    def __ne__(self, other):  # type: ignore[override]
+        return BinOp("!=", self, wrap(other))
+
+    def __lt__(self, other):
+        return BinOp("<", self, wrap(other))
+
+    def __le__(self, other):
+        return BinOp("<=", self, wrap(other))
+
+    def __gt__(self, other):
+        return BinOp(">", self, wrap(other))
+
+    def __ge__(self, other):
+        return BinOp(">=", self, wrap(other))
+
+    # -- arithmetic --------------------------------------------------------
+    def __add__(self, other):
+        return BinOp("+", self, wrap(other))
+
+    def __radd__(self, other):
+        return BinOp("+", wrap(other), self)
+
+    def __sub__(self, other):
+        return BinOp("-", self, wrap(other))
+
+    def __rsub__(self, other):
+        return BinOp("-", wrap(other), self)
+
+    def __mul__(self, other):
+        return BinOp("*", self, wrap(other))
+
+    def __rmul__(self, other):
+        return BinOp("*", wrap(other), self)
+
+    def __truediv__(self, other):
+        return BinOp("/", self, wrap(other))
+
+    # -- boolean -----------------------------------------------------------
+    def __and__(self, other):
+        return BinOp("&", self, wrap(other))
+
+    def __or__(self, other):
+        return BinOp("|", self, wrap(other))
+
+    def __invert__(self):
+        return UnaryOp("~", self)
+
+    def __hash__(self):
+        return id(self)
+
+    def __call__(self, table: Table) -> np.ndarray:
+        raise NotImplementedError
+
+    def columns(self) -> set:
+        """Column names referenced by this expression."""
+        raise NotImplementedError
+
+
+class Col(Expr):
+    def __init__(self, name: str):
+        self.name = name
+
+    def __call__(self, table: Table) -> np.ndarray:
+        return table.array(self.name)
+
+    def column(self, table: Table) -> Column:
+        return table[self.name]
+
+    def columns(self) -> set:
+        return {self.name}
+
+    def __repr__(self):
+        return f"col({self.name!r})"
+
+
+class Lit(Expr):
+    def __init__(self, value: Any):
+        self.value = value
+
+    def __call__(self, table: Table) -> np.ndarray:
+        return self.value  # numpy broadcasting handles scalars
+
+    def columns(self) -> set:
+        return set()
+
+    def __repr__(self):
+        return f"lit({self.value!r})"
+
+
+_OPS: dict = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+    "&": lambda a, b: a & b,
+    "|": lambda a, b: a | b,
+}
+
+
+class BinOp(Expr):
+    def __init__(self, op: str, left: Expr, right: Expr):
+        self.op, self.left, self.right = op, left, right
+
+    def __call__(self, table: Table) -> np.ndarray:
+        l, r = self.left(table), self.right(table)
+        # string-dictionary comparison: translate the literal to a code test
+        if self.op in ("==", "!=", "<", "<=", ">", ">="):
+            l, r = _align_dict_operands(self.left, self.right, l, r, table)
+        return _OPS[self.op](l, r)
+
+    def columns(self) -> set:
+        return self.left.columns() | self.right.columns()
+
+    def __repr__(self):
+        return f"({self.left!r} {self.op} {self.right!r})"
+
+
+class UnaryOp(Expr):
+    def __init__(self, op: str, operand: Expr):
+        self.op, self.operand = op, operand
+
+    def __call__(self, table: Table) -> np.ndarray:
+        v = self.operand(table)
+        if self.op == "~":
+            return ~v
+        raise ValueError(self.op)
+
+    def columns(self) -> set:
+        return self.operand.columns()
+
+
+class IsIn(Expr):
+    def __init__(self, operand: Expr, values: Sequence[Any]):
+        self.operand, self.values = operand, list(values)
+
+    def __call__(self, table: Table) -> np.ndarray:
+        vals = self.values
+        if isinstance(self.operand, Col):
+            v = self.operand(table)
+            c = table[self.operand.name]
+            if c.is_string:
+                vals = _codes_for(c.dictionary, vals)
+        elif hasattr(self.operand, "result_column"):  # DictMap etc.
+            c = self.operand.result_column(table)
+            v = c.data
+            if c.is_string:
+                vals = _codes_for(c.dictionary, vals)
+        else:
+            v = self.operand(table)
+        return np.isin(v, np.asarray(vals))
+
+    def columns(self) -> set:
+        return self.operand.columns()
+
+
+class Like(Expr):
+    """SQL LIKE on a dictionary-encoded column ('%' and '_' wildcards)."""
+
+    def __init__(self, operand: Col, pattern: str, negate: bool = False):
+        self.operand, self.pattern, self.negate = operand, pattern, negate
+
+    def __call__(self, table: Table) -> np.ndarray:
+        c = table[self.operand.name]
+        assert c.is_string, "LIKE needs a string column"
+        regex = re.compile(
+            "^" + re.escape(self.pattern).replace("%", ".*").replace("_", ".")
+            .replace("\\%", "%").replace("\\_", "_") + "$")
+        match_codes = np.array(
+            [i for i, s in enumerate(c.dictionary) if regex.match(str(s))],
+            dtype=c.data.dtype)
+        m = np.isin(c.data, match_codes)
+        return ~m if self.negate else m
+
+    def columns(self) -> set:
+        return self.operand.columns()
+
+
+class Func(Expr):
+    """Escape hatch for odd projections (e.g. extract-year)."""
+
+    def __init__(self, fn: Callable[..., np.ndarray], *operands: Expr,
+                 cols: Optional[set] = None):
+        self.fn, self.operands = fn, [wrap(o) for o in operands]
+        self._cols = cols
+
+    def __call__(self, table: Table) -> np.ndarray:
+        return self.fn(*[o(table) for o in self.operands])
+
+    def columns(self) -> set:
+        if self._cols is not None:
+            return self._cols
+        out: set = set()
+        for o in self.operands:
+            out |= o.columns()
+        return out
+
+
+class DictMap(Expr):
+    """Apply a python string function over a dict column's vocabulary
+    (e.g. substring); evaluation is O(|vocab|), the per-row cost is a
+    recode. Returns recoded values; `result_column` also returns the new
+    dictionary (used by Project to keep string-ness)."""
+
+    def __init__(self, operand: Col, fn: Callable[[str], str]):
+        self.operand, self.fn = operand, fn
+
+    def _mapped(self, table: Table):
+        c = table[self.operand.name]
+        assert c.is_string, "dict_map needs a string column"
+        mapped = np.array([self.fn(str(s)) for s in c.dictionary])
+        vocab, codes = np.unique(mapped, return_inverse=True)
+        return vocab, codes.astype(c.data.dtype)[c.data]
+
+    def __call__(self, table: Table) -> np.ndarray:
+        return self._mapped(table)[1]
+
+    def result_column(self, table: Table) -> Column:
+        vocab, data = self._mapped(table)
+        return Column(data, vocab, table[self.operand.name].valid)
+
+    def columns(self) -> set:
+        return self.operand.columns()
+
+
+class CaseWhen(Expr):
+    def __init__(self, cond: Expr, then: Expr, otherwise: Expr):
+        self.cond, self.then, self.otherwise = cond, wrap(then), wrap(otherwise)
+
+    def __call__(self, table: Table) -> np.ndarray:
+        return np.where(self.cond(table), self.then(table),
+                        self.otherwise(table))
+
+    def columns(self) -> set:
+        return (self.cond.columns() | self.then.columns()
+                | self.otherwise.columns())
+
+
+# -- helpers ---------------------------------------------------------------
+
+def wrap(v: Any) -> Expr:
+    return v if isinstance(v, Expr) else Lit(v)
+
+
+def col(name: str) -> Col:
+    return Col(name)
+
+
+def lit(v: Any) -> Lit:
+    return Lit(v)
+
+
+def isin(e: Expr, values: Sequence[Any]) -> IsIn:
+    return IsIn(e, values)
+
+
+def between(e: Expr, lo: Any, hi: Any) -> Expr:
+    return (e >= lo) & (e <= hi)
+
+
+def like(c: Col, pattern: str) -> Like:
+    return Like(c, pattern)
+
+
+def not_like(c: Col, pattern: str) -> Like:
+    return Like(c, pattern, negate=True)
+
+
+def dict_map(c: Col, fn: Callable[[str], str]) -> DictMap:
+    return DictMap(c, fn)
+
+
+def substring(c: Col, start: int, length: int) -> DictMap:
+    """SQL substring (1-based start)."""
+    return DictMap(c, lambda s: s[start - 1: start - 1 + length])
+
+
+def case(cond: Expr, then: Any, otherwise: Any) -> CaseWhen:
+    return CaseWhen(cond, then, otherwise)
+
+
+def _codes_for(dictionary: np.ndarray, values: Sequence[Any]) -> np.ndarray:
+    """Map string literals to dictionary codes (missing -> -1, matches none)."""
+    lookup = {str(s): i for i, s in enumerate(dictionary)}
+    return np.array([lookup.get(str(v), -1) for v in values], dtype=np.int64)
+
+
+def _align_dict_operands(le: Expr, re_: Expr, l: Any, r: Any, table: Table):
+    """If one side is a dict column and the other a string literal, compare
+    on codes. Ordered comparisons use the fact that np.unique sorts the
+    vocabulary, so code order == lexicographic order."""
+    def dict_of(e):
+        if isinstance(e, Col):
+            c = table[e.name]
+            if c.is_string:
+                return c.dictionary
+        return None
+
+    ld, rd = dict_of(le), dict_of(re_)
+    if ld is not None and isinstance(re_, Lit) and isinstance(re_.value, str):
+        r = _scalar_code(ld, re_.value)
+    if rd is not None and isinstance(le, Lit) and isinstance(le.value, str):
+        l = _scalar_code(rd, le.value)
+    return l, r
+
+
+def _scalar_code(dictionary: np.ndarray, s: str) -> float:
+    """Comparable stand-in for a string literal in code space.
+
+    np.unique sorts the vocabulary, so code order == lexicographic order.
+    If the literal is present we return its exact code; otherwise the
+    insertion point minus 0.5, which makes every ordered comparison (and
+    the impossibility of equality) come out right in float space."""
+    idx = int(np.searchsorted(dictionary, s))
+    if idx < len(dictionary) and str(dictionary[idx]) == s:
+        return float(idx)
+    return idx - 0.5

@@ -1,0 +1,173 @@
+"""Columnar Table: host-resident numpy columns + optional dictionaries.
+
+Design notes
+------------
+* Columns are 1-D numpy arrays (int64 / int32 / float64 / bool). String
+  columns are dictionary-encoded: the column stores int32 codes and the
+  Column carries the vocabulary (numpy array of python str). All engine
+  math operates on codes.
+* NULLs are carried as a per-column boolean validity mask (None = all
+  valid). Only outer joins introduce nulls in TPC-H, so most columns have
+  no mask.
+* Tables are immutable; operators return new Tables sharing column buffers
+  where possible (gather produces copies, as in any engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Column:
+    data: np.ndarray                       # 1-D values or dictionary codes
+    dictionary: Optional[np.ndarray] = None  # vocab for string columns
+    valid: Optional[np.ndarray] = None       # bool mask; None = all valid
+
+    def __post_init__(self):
+        assert self.data.ndim == 1, "columns are 1-D"
+        if self.valid is not None:
+            assert self.valid.shape == self.data.shape
+
+    def __len__(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def is_string(self) -> bool:
+        return self.dictionary is not None
+
+    def gather(self, idx: np.ndarray) -> "Column":
+        """Take rows by index; idx == -1 yields a NULL row."""
+        has_neg = bool((idx < 0).any()) if idx.size else False
+        if len(self.data) == 0:
+            # gathering from an empty column: only NULL rows are legal
+            # (outer join against an empty build side)
+            assert not idx.size or (idx < 0).all(), idx
+            return Column(np.zeros(len(idx), self.data.dtype),
+                          self.dictionary, np.zeros(len(idx), bool))
+        safe = np.where(idx < 0, 0, idx) if has_neg else idx
+        data = self.data[safe]
+        valid = self.valid[safe] if self.valid is not None else None
+        if has_neg:
+            v = np.ones(idx.shape, dtype=bool) if valid is None else valid.copy()
+            v[idx < 0] = False
+            valid = v
+        return Column(data, self.dictionary, valid)
+
+    def decode(self) -> np.ndarray:
+        """Materialize strings (testing/debug only)."""
+        if self.dictionary is None:
+            return self.data
+        return self.dictionary[self.data]
+
+
+class Table:
+    """Ordered mapping column-name -> Column, all of equal length."""
+
+    def __init__(self, columns: Mapping[str, Column], name: str = ""):
+        self.columns: Dict[str, Column] = dict(columns)
+        self.name = name
+        lens = {len(c) for c in self.columns.values()}
+        assert len(lens) <= 1, f"ragged table {name}: {lens}"
+        self._nrows = lens.pop() if lens else 0
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def from_arrays(arrays: Mapping[str, np.ndarray], name: str = "",
+                    dictionaries: Optional[Mapping[str, np.ndarray]] = None
+                    ) -> "Table":
+        dictionaries = dictionaries or {}
+        cols = {}
+        for k, v in arrays.items():
+            v = np.asarray(v)
+            if v.dtype.kind in ("U", "S", "O"):
+                vocab, codes = np.unique(v, return_inverse=True)
+                cols[k] = Column(codes.astype(np.int32), vocab)
+            else:
+                cols[k] = Column(v, dictionaries.get(k))
+        return Table(cols, name)
+
+    # -- basic accessors ---------------------------------------------------
+    def __len__(self) -> int:
+        return self._nrows
+
+    @property
+    def nrows(self) -> int:
+        return self._nrows
+
+    @property
+    def names(self) -> Sequence[str]:
+        return list(self.columns.keys())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    def __getitem__(self, name: str) -> Column:
+        return self.columns[name]
+
+    def array(self, name: str) -> np.ndarray:
+        return self.columns[name].data
+
+    def nbytes(self) -> int:
+        return sum(c.data.nbytes for c in self.columns.values())
+
+    # -- row operations ----------------------------------------------------
+    def gather(self, idx: np.ndarray) -> "Table":
+        return Table({k: c.gather(idx) for k, c in self.columns.items()},
+                     self.name)
+
+    def compact(self, mask: np.ndarray) -> "Table":
+        """Keep rows where mask is True (the materialization boundary)."""
+        if mask.dtype != bool:
+            raise TypeError("compact expects a boolean mask")
+        idx = np.flatnonzero(mask)
+        return self.gather(idx)
+
+    def select(self, names: Iterable[str]) -> "Table":
+        return Table({n: self.columns[n] for n in names}, self.name)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        return Table({mapping.get(k, k): v for k, v in self.columns.items()},
+                     self.name)
+
+    def with_column(self, name: str, column: Column) -> "Table":
+        cols = dict(self.columns)
+        cols[name] = column
+        return Table(cols, self.name)
+
+    def with_prefix(self, prefix: str) -> "Table":
+        return Table({prefix + k: v for k, v in self.columns.items()},
+                     self.name)
+
+    def head(self, n: int) -> "Table":
+        return self.gather(np.arange(min(n, self._nrows)))
+
+    def to_pydict(self, decode: bool = True) -> Dict[str, np.ndarray]:
+        return {k: (c.decode() if decode else c.data)
+                for k, c in self.columns.items()}
+
+    def __repr__(self) -> str:
+        cols = ", ".join(f"{k}:{c.data.dtype}{'*' if c.is_string else ''}"
+                         for k, c in self.columns.items())
+        return f"Table({self.name!r}, rows={self._nrows}, [{cols}])"
+
+
+def concat_tables(tables: Sequence[Table]) -> Table:
+    """Vertical concat; dictionaries must match (true for shards of one gen)."""
+    assert tables
+    first = tables[0]
+    cols = {}
+    for k in first.names:
+        dic = first[k].dictionary
+        data = np.concatenate([t[k].data for t in tables])
+        valids = [t[k].valid for t in tables]
+        if any(v is not None for v in valids):
+            valid = np.concatenate([
+                v if v is not None else np.ones(len(t), bool)
+                for v, t in zip(valids, tables)])
+        else:
+            valid = None
+        cols[k] = Column(data, dic, valid)
+    return Table(cols, first.name)

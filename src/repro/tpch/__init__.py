@@ -1,0 +1,6 @@
+"""TPC-H: schema-faithful generator + the 20 join queries as plan IR."""
+
+from repro.tpch.gen import generate, date, TABLES
+from repro.tpch.queries import QUERIES, build_query
+
+__all__ = ["generate", "date", "TABLES", "QUERIES", "build_query"]

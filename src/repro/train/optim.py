@@ -1,0 +1,192 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+* AdamW with configurable state dtype — bf16 moments halve optimizer HBM
+  (the difference between fitting and not fitting jamba-398B on 256
+  chips; DESIGN.md §7).
+* Adafactor (factored second moment, optional momentum) — O(rows+cols)
+  state for 2-D+ leaves.
+* global-norm clipping, cosine/linear LR schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), g
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[jnp.ndarray],
+                                                    jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                     0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Any = jnp.float32
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(z, params),
+                          jax.tree.map(z, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, dict]:
+        gnorm = jnp.zeros((), jnp.float32)
+        if self.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / bc1
+            vhat = vf / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, mf.astype(self.state_dtype), \
+                vf.astype(self.state_dtype)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newv = jax.tree.map(lambda t: t[2], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        return newp, AdamWState(step, newm, newv), \
+            {"lr": lr, "grad_norm": gnorm}
+
+
+# --------------------------------------------------------------------------
+# Adafactor
+# --------------------------------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any      # row accumulators (or full v for <2D leaves)
+    vc: Any      # col accumulators (or None sentinel zeros)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    state_dtype: Any = jnp.float32
+
+    def init(self, params) -> AdafactorState:
+        def vrow(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], self.state_dtype)
+            return jnp.zeros(p.shape, self.state_dtype)
+
+        def vcol(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                 self.state_dtype)
+            return jnp.zeros((1,), self.state_dtype)
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vrow, params),
+                              jax.tree.map(vcol, params))
+
+    def update(self, grads, state: AdafactorState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        lr = self.lr(step)
+
+        def upd(p, g, vr, vc):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if p.ndim >= 2:
+                vrf = beta * vr.astype(jnp.float32) \
+                    + (1 - beta) * g2.mean(axis=-1)
+                vcf = beta * vc.astype(jnp.float32) \
+                    + (1 - beta) * g2.mean(axis=-2)
+                r = vrf / jnp.maximum(
+                    vrf.mean(axis=-1, keepdims=True), self.eps)
+                # v̂[i,j] ≈ r[i] * vc[j]  (factored second moment)
+                update = gf * jax.lax.rsqrt(
+                    r[..., :, None] * vcf[..., None, :] + self.eps)
+                new_vr, new_vc = vrf, vcf
+            else:
+                vrf = beta * vr.astype(jnp.float32) + (1 - beta) * g2
+                update = gf * jax.lax.rsqrt(vrf + self.eps)
+                new_vr, new_vc = vrf, vc.astype(jnp.float32)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(update * update) + 1e-12)
+            update = update / jnp.maximum(1.0, rms / self.clip_threshold)
+            newp = p.astype(jnp.float32) - lr * update
+            if self.weight_decay and p.ndim >= 2:
+                newp = newp - lr * self.weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), new_vr.astype(self.state_dtype), \
+                new_vc.astype(self.state_dtype)
+
+        out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), AdafactorState(step, pick(1), pick(2)), {"lr": lr}
+
+
+def make_optimizer(name: str, lr_fn, **kw):
+    if name == "adamw":
+        return AdamW(lr=lr_fn, **kw)
+    if name == "adafactor":
+        return Adafactor(lr=lr_fn, **kw)
+    raise ValueError(name)

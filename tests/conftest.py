@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tpch_small():
+    """Shared tiny TPC-H catalog (sf=0.01)."""
+    from repro.tpch import generate
+    return generate(sf=0.01, seed=7)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,56 @@
+"""Validate the generated deliverable artifacts (if present): dry-run
+cell reports cover the full 40-cell x 2-mesh matrix and parse with sane
+fields; roofline tables have 40 rows each. Skipped cleanly when the
+artifacts have not been generated in this checkout."""
+import glob
+import json
+import os
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRYRUN = os.path.join(ROOT, "reports", "dryrun")
+
+
+@pytest.mark.skipif(not os.path.isdir(DRYRUN),
+                    reason="dry-run artifacts not generated")
+def test_dryrun_matrix_complete():
+    from repro.configs import ARCHS, SHAPES, get_config, shape_skip_reason
+    files = {os.path.basename(p) for p in glob.glob(f"{DRYRUN}/*.json")}
+    missing = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            for tag in ("single", "multi"):
+                name = f"{arch}__{shape}__{tag}.json"
+                if name not in files:
+                    missing.append(name)
+                    continue
+                with open(os.path.join(DRYRUN, name)) as f:
+                    cell = json.load(f)
+                if shape_skip_reason(cfg, shape):
+                    assert "skip" in cell, name
+                else:
+                    assert cell["devices"] == (512 if tag == "multi"
+                                               else 256), name
+                    assert cell["memory"]["temp_bytes"] > 0, name
+                    assert cell["collective_bytes_per_device"] >= 0, name
+    assert not missing, missing
+    assert len(files) == 80
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ROOT, "reports",
+                                    "roofline_single.json")),
+    reason="roofline not generated")
+def test_roofline_tables_complete():
+    for mesh in ("single", "multi"):
+        path = os.path.join(ROOT, "reports", f"roofline_{mesh}.json")
+        rows = json.load(open(path))
+        assert len(rows) == 40, (mesh, len(rows))
+        done = [r for r in rows if "skip" not in r]
+        assert len(done) == 33
+        for r in done:
+            assert r["compute_s"] > 0 and r["memory_s"] > 0
+            assert r["bottleneck"] in ("compute", "memory", "collective")
+            assert 0 < r["useful_ratio"] <= 1.0001, r

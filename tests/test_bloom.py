@@ -1,0 +1,92 @@
+"""Bloom-filter core: numpy/jax bit-exactness, probabilistic guarantees,
+fold/union algebra, hash-once cache paths. Property-based via hypothesis."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bloom, hashing
+
+KEYS = st.lists(st.integers(min_value=-2**62, max_value=2**62),
+                min_size=1, max_size=300)
+
+
+@settings(max_examples=40, deadline=None)
+@given(KEYS)
+def test_no_false_negatives(keys):
+    keys = np.array(keys, dtype=np.int64)
+    f = bloom.np_build(keys)
+    assert bloom.np_probe(f, keys).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(KEYS, st.integers(min_value=0, max_value=2**31))
+def test_masked_build_excludes_nothing_included(keys, seed):
+    keys = np.unique(np.array(keys, dtype=np.int64))
+    rng = np.random.default_rng(seed)
+    mask = rng.random(len(keys)) < 0.5
+    f = bloom.np_build(keys, mask)
+    if mask.any():
+        assert bloom.np_probe(f, keys[mask]).all()
+
+
+def test_false_positive_rate_bounded(rng):
+    keys = np.unique(rng.integers(0, 10**6, 20_000).astype(np.int64))
+    f = bloom.np_build(keys)
+    other = rng.integers(2 * 10**6, 3 * 10**6, 200_000).astype(np.int64)
+    fp = bloom.np_probe(f, other).mean()
+    assert fp < 0.01, fp
+
+
+@pytest.mark.parametrize("nblocks", [1, 4, 64, 512])
+def test_numpy_jax_bit_exact(rng, nblocks):
+    keys = rng.integers(-2**62, 2**62, 4096).astype(np.int64)
+    mask = rng.random(4096) < 0.7
+    lo, hi = hashing.key_halves(keys)
+    w_np = bloom.build_np(lo, hi, mask, nblocks)
+    w_jx = np.asarray(bloom.build(jnp.asarray(lo), jnp.asarray(hi),
+                                  jnp.asarray(mask), nblocks))
+    np.testing.assert_array_equal(w_np, w_jx)
+    p_np = bloom.probe_np(w_np, lo, hi)
+    p_jx = np.asarray(bloom.probe(jnp.asarray(w_jx), jnp.asarray(lo),
+                                  jnp.asarray(hi)))
+    np.testing.assert_array_equal(p_np, p_jx)
+
+
+def test_fold_preserves_membership(rng):
+    keys = rng.integers(0, 10**9, 5000).astype(np.int64)
+    f = bloom.np_build(keys)
+    small = f.fold_to(f.nblocks // 4)
+    assert bloom.np_probe(small, keys).all()
+
+
+def test_union_is_superset(rng):
+    a = rng.integers(0, 10**6, 3000).astype(np.int64)
+    b = rng.integers(10**6, 2 * 10**6, 50).astype(np.int64)  # diff sizes
+    fa, fb = bloom.np_build(a), bloom.np_build(b)
+    u = fa.union(fb)
+    assert bloom.np_probe(u, a).all()
+    assert bloom.np_probe(u, b).all()
+
+
+def test_hashed_cache_paths_match_plain(rng):
+    keys = rng.integers(-2**40, 2**40, 3000).astype(np.int64)
+    mask = rng.random(3000) < 0.6
+    hk = bloom.hash_keys(keys)
+    nblocks = bloom.blocks_for(int(mask.sum()))
+    w = bloom.build_hashed(hk, mask, nblocks)
+    lo, hi = hashing.key_halves(keys)
+    np.testing.assert_array_equal(w, bloom.build_np(lo, hi, mask, nblocks))
+    # probe with live mask == plain probe AND mask
+    live = rng.random(3000) < 0.5
+    got = bloom.probe_hashed(w, hk, live=live)
+    exp = bloom.probe_np(w, lo, hi) & live
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_hash_mirrors_bit_exact(rng):
+    keys = rng.integers(-2**62, 2**62, 10_000).astype(np.int64)
+    lo, hi = hashing.key_halves(keys)
+    np.testing.assert_array_equal(
+        hashing.hash64_np(lo, hi),
+        np.asarray(hashing.hash64(jnp.asarray(lo), jnp.asarray(hi))))

@@ -1,0 +1,109 @@
+"""Checkpointing (sync/async/retention/reshard-shape) and fault-tolerance
+(preempt -> resume, straggler detection)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.configs import get_smoke_config
+from repro.ft import FaultTolerantTrainer, Preempted, StragglerMonitor
+from repro.models.model import Batch, Model
+from repro.train import optim as O
+from repro.train.step import TrainConfig, build_train_step
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32),
+            "b": {"x": jnp.asarray(rng.normal(size=(8,)), jnp.bfloat16),
+                  "step": jnp.zeros((), jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save_tree(t, str(tmp_path / "ck"))
+    out = restore_tree(str(tmp_path / "ck"), jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [20, 30]
+    step, out = mgr.restore_latest(_tree(0))
+    assert step == 30
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]), np.asarray(_tree(30)["w"]))
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, _tree(1))
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_tree(_tree(), str(tmp_path / "ck"))
+    bad = {"w": jnp.zeros((4, 4)), "b": {"x": jnp.zeros((8,)),
+                                         "step": jnp.zeros(())}}
+    with pytest.raises(AssertionError):
+        restore_tree(str(tmp_path / "ck"), bad)
+
+
+def _training(tmp_path, max_steps, save_every=5):
+    cfg = get_smoke_config("qwen1.5-4b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = O.AdamW(lr=lambda s: jnp.float32(1e-3))
+    step = jax.jit(build_train_step(model, opt, TrainConfig()))
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    trainer = FaultTolerantTrainer(step, mgr, save_every=save_every)
+    state = {"params": params, "opt": opt.init(params), "step": 0}
+
+    def batches():
+        rng = np.random.default_rng(0)
+        while True:
+            t = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)),
+                            jnp.int32)
+            yield Batch(t, jnp.roll(t, -1, 1), None)
+
+    return trainer, state, batches
+
+
+def test_preempt_checkpoint_resume(tmp_path):
+    trainer, state, batches = _training(tmp_path, 20)
+    gen = batches()
+
+    # run a few steps then simulate preemption mid-run
+    def interrupting():
+        for i, b in enumerate(gen):
+            if i == 7:
+                trainer.preempt()
+            yield b
+
+    with pytest.raises(Preempted):
+        trainer.run(state, interrupting(), max_steps=100)
+    assert trainer.ckpt.latest_step() == 7
+
+    # "restart": a fresh trainer resumes from the checkpoint
+    trainer2, state2, batches2 = _training(tmp_path, 20)
+    resumed = trainer2.resume_or_init(state2["params"], state2["opt"])
+    assert resumed["step"] == 7
+    out = trainer2.run(resumed, batches2(), max_steps=12)
+    assert out["step"] == 12
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(window=16, threshold=2.0)
+    for _ in range(10):
+        assert not mon.record(0.1)
+    assert mon.record(0.5)       # 5x median
+    assert mon.flagged == 1
+    assert not mon.record(0.11)

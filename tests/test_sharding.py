@@ -1,0 +1,102 @@
+"""Sharding rules: coverage, divisibility degradation, cache specs.
+These tests run on the 1-device session (specs are mesh-shape math; the
+512-device lowering is covered by the dry-run)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models.model import Model
+from repro.parallel import sharding as S
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape / .axis_names are consulted by the
+    spec builders."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_cover_and_divide(arch):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: __import__("repro.models.common",
+                           fromlist=["init_params"]).init_params(
+            jax.random.PRNGKey(0), cfg))
+    specs = S.param_specs(cfg, MESH)
+    leaves_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    leaves_a = jax.tree.leaves(shapes)
+    assert len(leaves_s) == len(leaves_a)
+    for spec, leaf in zip(leaves_s, leaves_a):
+        t = tuple(spec)
+        assert len(t) <= leaf.ndim, (spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, t + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([MESH.shape[a] for a in axes]))
+            assert dim % size == 0, (arch, spec, leaf.shape)
+
+
+def test_big_matrices_are_fully_sharded():
+    cfg = get_config("command-r-35b")
+    specs = S.param_specs(cfg, MESH)
+    wq = specs["layers"][0]["mixer"]["wq"]
+    assert tuple(wq) == (None, "data", "model")   # stacked, fsdp, tp
+    w2 = specs["layers"][0]["ffn"]["w2"]
+    assert tuple(w2) == (None, "model", "data")
+
+
+def test_moe_expert_parallel_when_divisible():
+    # deepseek: 64 experts % 16 == 0 -> EP over model
+    specs = S.param_specs(get_config("deepseek-v2-lite-16b"), MESH)
+    w1 = specs["layers"][0]["ffn"]["w1"]          # [reps, E, d, f]
+    assert tuple(w1)[1] == "model"
+    # mixtral: 8 experts % 16 != 0 -> TP inside experts instead
+    specs = S.param_specs(get_config("mixtral-8x7b"), MESH)
+    w1 = specs["layers"][0]["ffn"]["w1"]
+    t = tuple(w1)
+    assert t[1] is None and "model" in t, t
+
+
+def test_fit_spec_drops_nondividing():
+    got = S.fit_spec(P("model", "data"), (51865, 512), MESH)
+    assert tuple(got) == (None, "data")           # 51865 % 16 != 0
+
+
+def test_batch_spec_divisibility():
+    # PartitionSpec normalizes a 1-tuple axis group to the bare name
+    assert tuple(S.batch_spec(MESH, 256)) == ("data", None)
+    assert tuple(S.batch_spec(MESH, 3)) == (None, None)
+    assert tuple(S.batch_spec(MESH_POD, 256)) == (("pod", "data"), None)
+
+
+@pytest.mark.parametrize("arch", ["command-r-35b", "mixtral-8x7b",
+                                  "mamba2-370m", "deepseek-v2-lite-16b",
+                                  "whisper-base"])
+def test_cache_specs_match_cache_tree(arch):
+    cfg = get_config(arch)
+    model = Model(cfg)
+    caches = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    specs = S.cache_spec(cfg, MESH, 128)
+    jax.tree.map(lambda c, s: None, caches, specs)  # same structure
+    flat_c = jax.tree.leaves(caches)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(flat_c, flat_s):
+        for dim, ax in zip(leaf.shape, tuple(spec)
+                           + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([MESH.shape[a] for a in axes]))
+            assert dim % size == 0, (arch, leaf.shape, spec)
