@@ -18,14 +18,20 @@ def catalog(sf: float):
 
 
 def run_query(sf: float, qn: int, strategy: str, warm: int = 1,
-              **query_kw):
-    """Paper methodology: run twice, measure the second (warm) run."""
-    from repro.core.transfer import make_strategy
+              backend: Optional[str] = None, **query_kw):
+    """Paper methodology: run twice, measure the second (warm) run.
+
+    `backend=` selects the bloom engine (numpy | jax | pallas) for the
+    Bloom-based strategies; strategies that do no Bloom work ignore it.
+    """
+    from repro.core.transfer import BACKEND_AWARE, make_strategy
     from repro.relational import Executor
     from repro.tpch import build_query
     cat = catalog(sf)
+    skw = {"backend": backend} if (backend is not None
+                                   and strategy in BACKEND_AWARE) else {}
     res = stats = None
     for _ in range(warm + 1):
-        ex = Executor(cat, make_strategy(strategy))
+        ex = Executor(cat, make_strategy(strategy, **skw))
         res, stats = ex.execute(build_query(qn, sf=sf, **query_kw))
     return res, stats

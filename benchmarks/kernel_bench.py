@@ -1,12 +1,15 @@
 """Kernel microbenchmarks: ns/row for bloom build/probe/transfer and the
-semijoin table, host path vs jnp path (the Pallas kernels are TPU-target;
-interpret mode is not a performance proxy and is benchmarked only for
-completeness at small n)."""
+semijoin table, swept per op across the engine backends (numpy host
+mirror, jit'd jnp, pallas). The Pallas kernels are TPU-target; interpret
+mode is not a performance proxy and is benchmarked only for completeness
+at small n (the `*_pallas_interp` rows)."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
+
+PALLAS_N = 16_384   # interpret mode is slow; keep its sweep honest+small
 
 
 def _time(fn, *args, reps=3):
@@ -17,11 +20,65 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps, out
 
 
+def _engine_rows(n: int):
+    """numpy vs jax vs pallas(interpret) per op, through the engine."""
+    import jax
+
+    from repro.core import bloom
+    from repro.core.bloom import BloomFilter
+    from repro.core.engine_bloom import get_engine
+
+    rng = np.random.default_rng(0)
+    rows = []
+    on_tpu = jax.default_backend() == "tpu"
+    for backend in ("numpy", "jax", "pallas"):
+        # cap only the interpret-mode sweep; on a real TPU the pallas
+        # rows run at full n so ns/row is comparable across backends
+        nb = n if backend != "pallas" or on_tpu else min(n, PALLAS_N)
+        keys = rng.integers(0, 10**9, nb).astype(np.int64)
+        out_keys = keys * 7 + 3
+        eng = get_engine(backend)
+        tag = backend if backend != "pallas" or on_tpu \
+            else "pallas_interp"
+
+        # NB: keys() does different work per backend — numpy runs the
+        # full murmur finalization host-side, the device backends only
+        # split halves (they rehash on device inside build/probe). The
+        # row is labelled keyprep for devices so nobody compares it
+        # 1:1 against engine_hash_numpy.
+        dt, ek = _time(lambda: eng.keys(keys))
+        hrow = "engine_hash_numpy" if backend == "numpy" \
+            else f"engine_keyprep_{tag}"
+        rows.append((hrow, dt / nb * 1e9))
+        ok = eng.keys(out_keys)
+
+        def ready(x):
+            return jax.block_until_ready(x) if backend != "numpy" else x
+
+        dt, words = _time(lambda: ready(eng.build_filter(ek).words))
+        rows.append((f"engine_build_{tag}", dt / nb * 1e9))
+        bf = BloomFilter(words, eng.k)     # reuse the last timed build
+        dt, _ = _time(lambda: ready(eng.probe_filter(bf, ek)))
+        rows.append((f"engine_probe_{tag}", dt / nb * 1e9))
+
+        # fused probe->build transfer: one scan, two filters
+        nblocks = bloom.blocks_for(nb)
+        mask = np.ones(nb, bool)
+
+        def xfer():
+            scan = eng.begin(mask)
+            scan.probe([(bf.words, ek)])
+            return ready(scan.build(ok, nblocks))
+
+        dt, _ = _time(xfer)
+        rows.append((f"engine_transfer_{tag}", dt / nb * 1e9))
+    return rows
+
+
 def run(n: int = 1_000_000):
     from repro.core import bloom
     rng = np.random.default_rng(0)
     keys = rng.integers(0, 10**9, n).astype(np.int64)
-    out_keys = keys * 7 + 3
     rows = []
 
     dt, f = _time(lambda: bloom.np_build(keys))
@@ -46,6 +103,8 @@ def run(n: int = 1_000_000):
     rows.append(("bloom_build_jnp", dt / n * 1e9))
     dt, _ = _time(lambda: bloom.np_probe(filt, keys, backend="jax"))
     rows.append(("bloom_probe_jnp", dt / n * 1e9))
+
+    rows += _engine_rows(n)
 
     # precise membership (Yannakakis primitive) for the beta comparison
     from repro.relational.ops import semi_join_mask

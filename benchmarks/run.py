@@ -2,19 +2,44 @@
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention, then
 each exhibit's own table. `--sf` scales TPC-H (default 0.1; the paper
-uses 1.0 — pass --sf 1.0 for the full-size run)."""
+uses 1.0 — pass --sf 1.0 for the full-size run).
+
+``--json PATH`` additionally writes a machine-readable benchmark file
+(per-strategy per-query seconds, geomean speedups, kernel-bench rows,
+and a per-backend Q5 transfer-phase split) so the perf trajectory is
+tracked across PRs — see BENCH_tpch.json."""
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def q5_transfer_split(sf: float, backends=("numpy", "jax")):
+    """Transfer-phase wall time on Q5 per engine backend (median of 5
+    warm runs) — the engine hot path the perf gate watches."""
+    from benchmarks.common import run_query
+    out = {}
+    for backend in backends:
+        run_query(sf, 5, "pred-trans", backend=backend)   # warm caches
+        ts = []
+        for _ in range(5):
+            _, stats = run_query(sf, 5, "pred-trans", warm=0,
+                                 backend=backend)
+            ts.append(stats.transfer.seconds)
+        out[backend] = sorted(ts)[len(ts) // 2]
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sf", type=float, default=0.1)
     ap.add_argument("--kernel-n", type=int, default=1_000_000)
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated exhibit names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (BENCH_tpch.json)")
     args = ap.parse_args()
 
     from benchmarks import (curation_bench, distributed_transfer,
@@ -33,7 +58,8 @@ def main() -> None:
             max(int(args.sf * 1_000_000), 20_000)),
     }
     if args.only:
-        exhibits = {args.only: exhibits[args.only]}
+        names = args.only.split(",")
+        exhibits = {n: exhibits[n] for n in names}
 
     print("name,us_per_call,derived")
     timings = {}
@@ -50,6 +76,36 @@ def main() -> None:
             derived = (f"geomean_pred_trans="
                        f"{results[name][1]['pred-trans']['geomean_speedup']:.2f}x")
         print(f"{name},{us:.0f},{derived}")
+
+    if args.json:
+        # merge into an existing same-sf file: keys this run didn't
+        # produce (e.g. the recorded seed baseline) survive
+        # regeneration. A different --sf starts fresh — every number
+        # in the file shares one provenance.
+        import os
+        doc = {}
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    prev = json.load(f)
+                if prev.get("sf") == args.sf:
+                    doc = prev
+            except (OSError, ValueError):
+                pass
+        doc["sf"] = args.sf
+        if "figure2_tpch" in results:
+            rows, summary = results["figure2_tpch"]
+            doc["tpch"] = {"per_query_seconds": rows,
+                           "summary": summary}
+            # TPC-H already scoped by this run, so the Q5 engine split
+            # (the perf-gate number) is re-measured too
+            print("\n===== q5_transfer_split =====", file=sys.stderr)
+            doc["q5_transfer_seconds"] = q5_transfer_split(args.sf)
+        if "kernel_bench" in results:
+            doc["kernel_bench_ns_per_row"] = dict(results["kernel_bench"])
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -9,8 +9,10 @@ This module is the framework-level (pure jnp, jit-compatible) implementation
 and is also the oracle for the Pallas kernels in `repro.kernels.bloom`.
 
 Shapes are static: filters are sized by `blocks_for(n)` and key batches are
-padded to buckets by the engine layer (`repro.core.engine_bloom`), so jit
-caches stay small.
+padded to power-of-two buckets by the engine layer — see
+`repro.core.engine_bloom` (batched, backend-pluggable runtime wiring these
+ops and the Pallas kernels into the transfer hot path) — so jit caches
+stay at O(log n) entries.
 """
 from __future__ import annotations
 
@@ -293,8 +295,11 @@ def probe_hashed(words: np.ndarray, hk: HashedKeys,
 # backend="numpy" (default) runs the host mirror; backend="jax" pads key
 # batches to power-of-two buckets so the jit cache holds O(log n) entries.
 
-def _bucket(n: int) -> int:
-    return max(64, int(2 ** np.ceil(np.log2(max(n, 1)))))
+def _bucket(n: int, floor: int = 64) -> int:
+    """Power-of-two batch size (>= floor): keeps per-op jit/pallas
+    caches at O(log n) entries. Canonical copy — the engine layer and
+    the distributed shard helpers reuse it."""
+    return max(floor, int(2 ** np.ceil(np.log2(max(n, 1)))))
 
 
 def _pad(a: np.ndarray, n: int, fill=0) -> np.ndarray:

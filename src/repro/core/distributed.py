@@ -17,7 +17,10 @@ The semi-join alternative (`distributed_semi_join`) must all-gather the
 (benchmarks/distributed_transfer.py) quantifies the gap; this asymmetry
 is the paper's "succinct filter" insight mapped onto ICI collectives.
 
-Everything here is shard_map-based and jit-compatible.
+Everything here is shard_map-based and jit-compatible. Filter sizing and
+host-side batching live in `repro.core.engine_bloom` (the engine's
+`make_distributed_transfer` / `shard_keys` are the strategy-facing entry
+points); this module owns the collectives.
 """
 from __future__ import annotations
 
@@ -120,13 +123,18 @@ def distributed_semi_join(mesh: Mesh, axis: str = "data"):
     return jax.jit(fn)
 
 
-def shard_table_arrays(keys: np.ndarray, mesh: Mesh, axis: str = "data"
+def shard_table_arrays(keys: np.ndarray, mesh: Mesh, axis: str = "data",
+                       bucket: bool = False
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Host helper: split int64 keys into padded (lo, hi, mask) device
-    arrays row-sharded over `axis`."""
+    arrays row-sharded over `axis`. With `bucket=True` the per-shard row
+    count is rounded up to a power-of-two bucket (engine contract: the
+    jit cache then holds O(log n) entries across table sizes)."""
     n_shards = mesh.shape[axis]
     n = len(keys)
     per = -(-n // n_shards)
+    if bucket:
+        per = bloom._bucket(per)
     pad = per * n_shards - n
     keys_p = np.concatenate([keys, np.zeros(pad, keys.dtype)])
     mask = np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])

@@ -1,0 +1,552 @@
+"""Batched Bloom transfer engine: the hot path between the transfer
+strategies and the filter kernels (DESIGN.md §7).
+
+`repro.core.transfer.PredTrans` describes *what* flows along the transfer
+graph; this module decides *how* each vertex's filter work is executed:
+
+* **hash once** — `BloomEngine.keys` turns a key column into backend
+  hash state exactly once per (vertex, column); every probe, build and
+  transfer across both passes reuses it (the vectorized form of the
+  paper's "transformation scans the join keys only once", §3.2);
+* **fused multi-filter probe** — all filters incoming at a vertex are
+  packed into one concatenated word array with per-filter block offsets
+  (`PackedFilters`) and applied in the given (LIP, most-selective-first)
+  order over a single shrinking survivor set: rows leave the working set
+  the moment one hash round of one filter misses, and the vertex's
+  validity mask is materialized once, not once per edge;
+* **one scan probe→build** — a `VertexScan` carries the survivor set
+  from the probe half to the build half, so emitting each outgoing
+  filter is a gather over survivors, never a rescan of the table; the
+  device backends additionally route the first outgoing build through
+  the fused `transfer` op (probe + build in one kernel pass);
+* **bucketed batches** — key batches are padded to power-of-two buckets
+  (`TILE`-aligned for Pallas) so the jit / pallas_call caches hold
+  O(log n) entries per (op, nblocks), fulfilling the shape contract in
+  `repro.core.bloom`'s docstring.
+
+Three backends with bit-identical filter semantics (`tests/
+test_engine_bloom.py` asserts word-level equality against the
+`bloom.build_np` / `probe_np` oracle):
+
+* ``numpy``  — host mirror; the CPU wall-clock path (DESIGN.md §7);
+* ``jax``    — jit'd `repro.core.bloom` ops; the distributed path;
+* ``pallas`` — `repro.kernels.bloom` TPU kernels (interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+_LITTLE_ENDIAN = sys.byteorder == "little"
+
+from repro.core import bloom, hashing
+from repro.core.bloom import (
+    BLOCK_BITS, DEFAULT_BITS_PER_KEY, DEFAULT_K, LANES, BloomFilter,
+    _bucket, _pad, blocks_for,
+)
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+# --------------------------------------------------------------------------
+# key hash state
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineKeys:
+    """Per-column hash state, computed once and reused across all edges
+    and passes.
+
+    Host backend keeps the block hash and double-hash generators as
+    uint32 (4-byte probe-round traffic; int64 state measured ~1.5x
+    slower on the Q5 hot path). Device backends keep the raw uint32 key
+    halves and rehash on device; padded device copies are cached per
+    bucket size."""
+
+    n: int
+    lo: Optional[np.ndarray] = None   # uint32 [n] (device backends)
+    hi: Optional[np.ndarray] = None   # uint32 [n] (device backends)
+    h: Optional[np.ndarray] = None    # uint32 [n] block hash (host)
+    g1: Optional[np.ndarray] = None   # uint32 [n] (host)
+    g2: Optional[np.ndarray] = None   # uint32 [n] (odd; host)
+    _dev: Dict[int, Tuple] = dataclasses.field(default_factory=dict)
+
+    def __len__(self):
+        return self.n
+
+    def dev(self, bucket: int):
+        """Padded (lo, hi) device arrays, cached per power-of-two bucket."""
+        hit = self._dev.get(bucket)
+        if hit is None:
+            import jax.numpy as jnp
+            hit = (jnp.asarray(_pad(self.lo, bucket)),
+                   jnp.asarray(_pad(self.hi, bucket)))
+            self._dev[bucket] = hit
+        return hit
+
+
+def _fmix_into(h: np.ndarray, tmp: np.ndarray) -> np.ndarray:
+    """murmur3 finalizer, in place on `h` (owned uint32 scratch `tmp` of
+    the same shape). Identical op sequence to `hashing.fmix32_np` —
+    bit-exact, two live arrays instead of per-op temporaries."""
+    np.right_shift(h, 16, out=tmp)
+    np.bitwise_xor(h, tmp, out=h)
+    np.multiply(h, np.uint32(0x85EBCA6B), out=h)
+    np.right_shift(h, 13, out=tmp)
+    np.bitwise_xor(h, tmp, out=h)
+    np.multiply(h, np.uint32(0xC2B2AE35), out=h)
+    np.right_shift(h, 16, out=tmp)
+    np.bitwise_xor(h, tmp, out=h)
+    return h
+
+
+# --------------------------------------------------------------------------
+# packed incoming filters (numpy fused probe)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedFilters:
+    """Incoming filters of one vertex, concatenated for a single fused
+    probe: `words` stacks every filter's blocks, `offsets[f]` is filter
+    f's first block in the stack, `log2nb[f]` its own block-count (each
+    filter keeps its native size — no folding, so probing the pack is
+    bit-identical to probing the filters one by one)."""
+
+    words: np.ndarray                 # uint32 [sum(nblocks_f), LANES]
+    offsets: np.ndarray               # int64 [m]
+    log2nb: Tuple[int, ...]
+    k: int
+
+
+def pack_filters(filters: Sequence[np.ndarray], k: int) -> PackedFilters:
+    log2nb = tuple(int(np.log2(w.shape[0])) for w in filters)
+    if len(filters) == 1:
+        words = np.ascontiguousarray(filters[0])
+        offsets = np.zeros(1, np.int64)
+    else:
+        words = np.concatenate([np.asarray(w) for w in filters], axis=0)
+        offsets = np.cumsum([0] + [w.shape[0] for w in filters[:-1]],
+                            dtype=np.int64)
+    return PackedFilters(words, offsets, log2nb, k)
+
+
+def probe_packed_np(packed: PackedFilters, keys: Sequence[EngineKeys],
+                    alive: Optional[np.ndarray], n_rows: int
+                    ) -> Tuple[Optional[np.ndarray], int]:
+    """Apply every packed filter, in order, to the `alive` row-index set
+    (`alive=None` means every row — the common first-pass case, probed
+    without materializing an index array or gathering hash state).
+
+    Returns (surviving indices or None if all survived, rows actually
+    probed). Survivors-only early exit at two levels: rows are dropped
+    after the first missing hash round, and later filters see only
+    earlier survivors."""
+    flat = packed.words.reshape(-1)
+    rows_probed = 0
+    _u5, _u31, _upos = np.uint32(5), np.uint32(31), np.uint32(
+        BLOCK_BITS - 1)
+    for f in range(len(packed.offsets)):
+        if alive is not None and alive.size == 0:
+            break
+        m = n_rows if alive is None else int(alive.size)
+        rows_probed += m
+        ek = keys[f]
+        l2 = packed.log2nb[f]
+        h = ek.h if alive is None else ek.h[alive]
+        g1 = ek.g1 if alive is None else ek.g1[alive]
+        g2 = ek.g2 if alive is None else ek.g2[alive]
+        off = int(packed.offsets[f])
+        # uint32 word indices when the packed stack is small enough —
+        # halves the index-arithmetic memory traffic on the hot round
+        small = (off + (1 << l2)) * LANES < 2**31
+        idt = np.uint32 if small else np.int64
+        if l2:
+            base = h >> np.uint32(32 - l2)          # fresh array, owned
+            if not small:
+                base = base.astype(np.int64)
+            if off:
+                base += idt(off)
+            base *= idt(LANES)
+        else:
+            base = np.full(m, off * LANES, idt)
+        cur = alive
+        with np.errstate(over="ignore"):
+            for j in range(packed.k):
+                pos = (g1 & _upos) if j == 0 else \
+                    ((g1 + np.uint32(j) * g2) & _upos)
+                w = flat[base + (pos >> _u5)]
+                hit = ((w >> (pos & _u31)) & np.uint32(1)) == 1
+                if not hit.all():
+                    # narrow by gathering survivors (reads ~survivors,
+                    # not three full boolean passes)
+                    sel = np.flatnonzero(hit)
+                    cur = sel if cur is None else cur.take(sel)
+                    base = base.take(sel)
+                    g1 = g1.take(sel)
+                    g2 = g2.take(sel)
+                    if sel.size == 0:
+                        break
+        alive = cur
+    return alive, rows_probed
+
+
+def build_alive_np(ek: EngineKeys, alive: Optional[np.ndarray],
+                   nblocks: int, k: int) -> np.ndarray:
+    """Build filter words from the survivor index set (`alive=None` means
+    every row). Bit-identical to `bloom.build_np` over the same rows."""
+    h = ek.h if alive is None else ek.h[alive]
+    g1 = ek.g1 if alive is None else ek.g1[alive]
+    g2 = ek.g2 if alive is None else ek.g2[alive]
+    l2 = int(np.log2(nblocks))
+    if l2:
+        blk = (h >> np.uint32(32 - l2)).astype(np.int64) * BLOCK_BITS
+    else:
+        blk = np.int64(0)
+    bits = np.zeros(nblocks * BLOCK_BITS, bool)
+    with np.errstate(over="ignore"):
+        for j in range(k):
+            pos = (g1 + np.uint32(j) * g2) & np.uint32(BLOCK_BITS - 1)
+            bits[blk + pos] = True
+    return np.packbits(bits, bitorder="little").view(np.uint32).reshape(
+        nblocks, LANES)
+
+
+# --------------------------------------------------------------------------
+# vertex scans: probe half + build half over one survivor set
+# --------------------------------------------------------------------------
+
+
+class VertexScan:
+    """One vertex's transfer step. `probe` applies the (LIP-ordered)
+    incoming filters; `build` emits an outgoing filter from the same
+    survivor set — the probe→build pair is one logical scan."""
+
+    def probe(self, incoming: Sequence[Tuple[np.ndarray, EngineKeys]]
+              ) -> int:
+        raise NotImplementedError
+
+    @property
+    def mask(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def live(self) -> int:
+        raise NotImplementedError
+
+    def build(self, ek: EngineKeys, nblocks: int):
+        raise NotImplementedError
+
+
+class _NumpyScan(VertexScan):
+    def __init__(self, mask: np.ndarray, k: int):
+        self._k = k
+        self._mask0 = np.asarray(mask, bool)
+        # _alive is the survivor index set; None means "every masked row"
+        # — and when the mask is all-True, probes and builds run on the
+        # raw hash arrays with no index materialization or gathers
+        self._alive: Optional[np.ndarray] = None
+        self._full: Optional[bool] = None          # lazy mask0.all()
+        self._probed = False
+        self._mask_out: Optional[np.ndarray] = None
+
+    def _is_full(self) -> bool:
+        if self._full is None:
+            self._full = bool(self._mask0.all())
+        return self._full
+
+    def probe(self, incoming):
+        if not incoming:
+            return 0
+        if self._alive is None and not self._is_full():
+            self._alive = np.flatnonzero(self._mask0)
+        packed = pack_filters([w for w, _ in incoming], self._k)
+        self._alive, rows = probe_packed_np(
+            packed, [ek for _, ek in incoming], self._alive,
+            len(self._mask0))
+        self._probed = True
+        self._mask_out = None
+        return rows
+
+    @property
+    def mask(self):
+        if not self._probed or self._alive is None:
+            return self._mask0          # alive None after probe => all hit
+        if self._mask_out is None:
+            out = np.zeros(len(self._mask0), bool)
+            out[self._alive] = True
+            self._mask_out = out
+        return self._mask_out
+
+    @property
+    def live(self):
+        if self._alive is not None:
+            return int(self._alive.size)
+        if self._is_full():
+            return len(self._mask0)
+        return int(self._mask0.sum())
+
+    def build(self, ek, nblocks):
+        if self._alive is None and not self._is_full():
+            self._alive = np.flatnonzero(self._mask0)
+        return build_alive_np(ek, self._alive, nblocks, self._k)
+
+
+class _DeviceScan(VertexScan):
+    """Shared jax/pallas scan: padded device mask, sequential bucketed
+    probes, first build fused with the last probe via the `transfer` op
+    (the transfer's survivor output *is* the scan's mask from then on)."""
+
+    def __init__(self, mask: np.ndarray, engine: "BloomEngine"):
+        import jax.numpy as jnp
+        self._e = engine
+        self._n = len(mask)
+        self._bucket = engine.bucket(self._n)
+        self._m = jnp.asarray(_pad(np.asarray(mask, bool),
+                                   self._bucket, False))
+        self._last: Optional[Tuple] = None   # (words, ek, pre_mask)
+        self._fused = False
+        self._live: Optional[int] = None
+        self._mask_out: Optional[np.ndarray] = None
+
+    def probe(self, incoming):
+        if not incoming:
+            return 0
+        import jax.numpy as jnp
+        pre_live = []
+        for words, ek in incoming:
+            lo, hi = ek.dev(self._bucket)
+            pre = self._m
+            pre_live.append(pre.sum())
+            self._last = (words, ek, pre)
+            self._m = pre & self._e.probe_op(words, lo, hi)
+        self._live = None
+        self._mask_out = None
+        return int(np.asarray(jnp.stack(pre_live)).sum())
+
+    @property
+    def mask(self):
+        if self._mask_out is None:
+            self._mask_out = np.asarray(self._m)[: self._n]
+        return self._mask_out
+
+    @property
+    def live(self):
+        if self._live is None:
+            self._live = int(self.mask.sum())
+        return self._live
+
+    def build(self, ek, nblocks):
+        lo, hi = ek.dev(self._bucket)
+        if self._last is not None and not self._fused:
+            # fused probe→build: redo the final probe and the first
+            # build in one kernel pass; `ok` is bit-identical to the
+            # chained mask and becomes the scan's mask of record
+            w_in, ek_in, pre = self._last
+            ilo, ihi = ek_in.dev(self._bucket)
+            ok, words = self._e.transfer_op(w_in, ilo, ihi, lo, hi, pre,
+                                            nblocks)
+            self._m = ok
+            self._fused = True
+            return words
+        return self._e.build_op(lo, hi, self._m, nblocks)
+
+
+# --------------------------------------------------------------------------
+# engines
+# --------------------------------------------------------------------------
+
+
+class BloomEngine:
+    """Backend-pluggable batched Bloom runtime. Subclasses provide the
+    raw ops; this base provides the strategy-facing API:
+
+    * ``keys(values)``            — hash a key column once;
+    * ``begin(mask)``             — open a `VertexScan`;
+    * ``build_filter`` / ``probe_filter`` — one-shot ops (Bloom-Join,
+      benches, tests)."""
+
+    backend = "base"
+
+    def __init__(self, k: int = DEFAULT_K):
+        self.k = k
+
+    # -- strategy-facing ----------------------------------------------
+    def keys(self, values: np.ndarray) -> EngineKeys:
+        raise NotImplementedError
+
+    def begin(self, mask: np.ndarray) -> VertexScan:
+        raise NotImplementedError
+
+    def bucket(self, n: int) -> int:
+        return _bucket(n)
+
+    def build_filter(self, ek: EngineKeys,
+                     mask: Optional[np.ndarray] = None,
+                     bits_per_key: int = DEFAULT_BITS_PER_KEY,
+                     nblocks: Optional[int] = None) -> BloomFilter:
+        n_live = len(ek) if mask is None else int(np.asarray(mask).sum())
+        if nblocks is None:
+            nblocks = blocks_for(max(n_live, 1), bits_per_key)
+        scan = self.begin(np.ones(len(ek), bool) if mask is None
+                          else np.asarray(mask, bool))
+        return BloomFilter(scan.build(ek, nblocks), self.k)
+
+    def probe_filter(self, filt: BloomFilter, ek: EngineKeys,
+                     live: Optional[np.ndarray] = None) -> np.ndarray:
+        scan = self.begin(np.ones(len(ek), bool) if live is None
+                          else np.asarray(live, bool))
+        scan.probe([(filt.words, ek)])
+        return scan.mask
+
+    # -- distributed hook ---------------------------------------------
+    def make_distributed_transfer(self, mesh, live_keys: int,
+                                  bits_per_key: int = DEFAULT_BITS_PER_KEY,
+                                  axis: str = "data",
+                                  tree_or: bool = False):
+        """Sharded one-edge transfer (build → OR all-reduce → probe),
+        filter sized by the building relation's live keys. The engine is
+        the sizing/padding authority; `repro.core.distributed` owns the
+        collectives."""
+        from repro.core import distributed
+        nblocks = blocks_for(max(live_keys, 1), bits_per_key)
+        return distributed.make_distributed_transfer(
+            mesh, nblocks, k=self.k, axis=axis, tree_or=tree_or)
+
+    def shard_keys(self, keys: np.ndarray, mesh, axis: str = "data"):
+        """Row-shard a key column, padding each shard to a power-of-two
+        bucket so resharded re-runs reuse the jit cache."""
+        from repro.core import distributed
+        return distributed.shard_table_arrays(keys, mesh, axis,
+                                              bucket=True)
+
+
+class NumpyEngine(BloomEngine):
+    """Host mirror backend — the relational executor's CPU wall-clock
+    path (DESIGN.md §7)."""
+
+    backend = "numpy"
+
+    def keys(self, values):
+        keys = np.asarray(values).astype(np.int64, copy=False)
+        if not keys.flags.c_contiguous:
+            keys = np.ascontiguousarray(keys)
+        # strided views of the int64 words: same bits as
+        # hashing.key_halves, one pass instead of mask+shift+cast
+        v32 = keys.view(np.uint32)
+        lo_s, hi_s = v32[0::2], v32[1::2]
+        if not _LITTLE_ENDIAN:
+            lo_s, hi_s = hi_s, lo_s
+        tmp = np.empty(len(keys), np.uint32)
+        # .copy() (never ascontiguousarray: a 1-row strided view IS
+        # contiguous and would alias the table column) — _fmix_into
+        # mutates its argument
+        with np.errstate(over="ignore"):
+            if hi_s.any():
+                # h = fmix32(lo ^ fmix32(hi))
+                h = _fmix_into(hi_s.copy(), tmp)
+                np.bitwise_xor(h, lo_s, out=h)
+                _fmix_into(h, tmp)
+            else:
+                # fmix32(0) == 0, so 32-bit keys (every TPC-H key)
+                # skip the hi mix: h = fmix32(lo)
+                h = _fmix_into(lo_s.copy(), tmp)
+            g1 = _fmix_into(h ^ hashing.GOLDEN, tmp)
+            g2 = _fmix_into(h ^ np.uint32(0x7FEB352D), tmp)
+            np.bitwise_or(g2, np.uint32(1), out=g2)
+        return EngineKeys(len(keys), h=h, g1=g1, g2=g2)
+
+    def begin(self, mask):
+        return _NumpyScan(mask, self.k)
+
+
+class JaxEngine(BloomEngine):
+    """jit'd `repro.core.bloom` ops over bucketed batches."""
+
+    backend = "jax"
+
+    def keys(self, values):
+        lo, hi = hashing.key_halves(np.asarray(values))
+        return EngineKeys(len(lo), lo=lo, hi=hi)
+
+    def begin(self, mask):
+        return _DeviceScan(mask, self)
+
+    def probe_op(self, words, lo, hi):
+        return bloom.probe(words, lo, hi, k=self.k)
+
+    def build_op(self, lo, hi, mask, nblocks):
+        return bloom.build(lo, hi, mask, nblocks, k=self.k)
+
+    def transfer_op(self, in_words, ilo, ihi, olo, ohi, mask, nblocks):
+        return bloom.transfer(in_words, ilo, ihi, olo, ohi, mask,
+                              nblocks, k=self.k)
+
+
+class PallasEngine(BloomEngine):
+    """`repro.kernels.bloom` TPU kernels; interpret mode off-TPU.
+    Buckets are TILE-aligned (the kernels' grid contract)."""
+
+    backend = "pallas"
+
+    def __init__(self, k: int = DEFAULT_K,
+                 interpret: Optional[bool] = None):
+        super().__init__(k)
+        if interpret is None:
+            import jax
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+
+    def keys(self, values):
+        lo, hi = hashing.key_halves(np.asarray(values))
+        return EngineKeys(len(lo), lo=lo, hi=hi)
+
+    def begin(self, mask):
+        return _DeviceScan(mask, self)
+
+    def bucket(self, n):
+        from repro.kernels.bloom import bloom as _k
+        return _bucket(n, floor=_k.TILE)
+
+    def probe_op(self, words, lo, hi):
+        from repro.kernels.bloom import bloom as _k
+        return _k.probe_pallas(words, lo, hi, k=self.k,
+                               interpret=self.interpret)
+
+    def build_op(self, lo, hi, mask, nblocks):
+        from repro.kernels.bloom import bloom as _k
+        return _k.build_pallas(lo, hi, mask, nblocks, k=self.k,
+                               interpret=self.interpret)
+
+    def transfer_op(self, in_words, ilo, ihi, olo, ohi, mask, nblocks):
+        from repro.kernels.bloom import bloom as _k
+        return _k.transfer_pallas(in_words, ilo, ihi, olo, ohi, mask,
+                                  nblocks, k=self.k,
+                                  interpret=self.interpret)
+
+
+_ENGINES: Dict[Tuple, BloomEngine] = {}
+
+
+def get_engine(backend: str = "numpy", k: int = DEFAULT_K,
+               interpret: Optional[bool] = None) -> BloomEngine:
+    """Engine instances are cached so jit/pallas caches and key-hash
+    device pads are shared across strategies and queries."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown bloom backend {backend!r}; "
+                         f"choose from {BACKENDS}")
+    key = (backend, k, interpret if backend == "pallas" else None)
+    eng = _ENGINES.get(key)
+    if eng is None:
+        if backend == "numpy":
+            eng = NumpyEngine(k)
+        elif backend == "jax":
+            eng = JaxEngine(k)
+        else:
+            eng = PallasEngine(k, interpret=interpret)
+        _ENGINES[key] = eng
+    return eng

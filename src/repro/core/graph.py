@@ -68,9 +68,12 @@ class Edge:
 @dataclasses.dataclass
 class TransferStats:
     strategy: str = ""
+    backend: str = ""             # bloom engine backend (numpy/jax/pallas)
     seconds: float = 0.0
     filters_built: int = 0
     filter_bytes: int = 0
+    # rows_probed counts rows actually tested against a filter (the live
+    # set at the moment each filter is applied), NOT the survivors
     rows_probed: int = 0
     rows_semijoin_build: int = 0
     rows_semijoin_probe: int = 0

@@ -16,9 +16,10 @@ Implements the paper's §3 exactly:
   filtering inside each join, `NoPredTrans` does nothing — the paper's
   three baselines.
 
-All per-row work (hashing, Bloom build/probe/transfer) runs through
-`repro.core.bloom` (JAX) — see `repro.kernels.bloom` for the Pallas TPU
-kernels with identical semantics.
+All per-row work (hashing, Bloom build/probe/transfer) runs through the
+batched engine layer `repro.core.engine_bloom` — backend-pluggable over
+the `repro.core.bloom` host/jnp ops and the `repro.kernels.bloom` Pallas
+TPU kernels, all with identical filter semantics.
 """
 from __future__ import annotations
 
@@ -28,10 +29,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import bloom
+from repro.core.engine_bloom import BloomEngine, EngineKeys, get_engine
 from repro.core.graph import (  # noqa: F401  (re-exported)
     Edge, NoPredTrans, Strategy, TransferStats, Vertex,
 )
 from repro.relational import ops
+
+# strategies that take a `backend=` engine switch (numpy | jax | pallas)
+BACKEND_AWARE = {"bloom-join", "pred-trans", "pred-trans-opt"}
+
 
 class BloomJoin(Strategy):
     """One-hop, one-direction Bloom filtering inside each join (paper §2.1)."""
@@ -39,14 +45,27 @@ class BloomJoin(Strategy):
     name = "bloom-join"
     uses_per_join_filter = True
 
+    def __init__(self, bits_per_key: int = bloom.DEFAULT_BITS_PER_KEY,
+                 k: int = bloom.DEFAULT_K, backend: str = "numpy",
+                 interpret: Optional[bool] = None):
+        self.bits_per_key = bits_per_key
+        self.engine: BloomEngine = get_engine(backend, k=k,
+                                              interpret=interpret)
+
+    def prefilter(self, vertices, edges):
+        # no transfer phase, but record which engine the per-join
+        # filters below will run on
+        return TransferStats(strategy=self.name,
+                             backend=self.engine.backend)
+
     def per_join_filter(self, build, probe, build_keys, probe_keys, stats):
-        bkeys = ops.composite_key(build, build_keys)
-        filt = bloom.np_build(bkeys)
-        pkeys = ops.composite_key(probe, probe_keys)
-        hit = bloom.np_probe(filt, pkeys)
+        bk = self.engine.keys(ops.composite_key(build, build_keys))
+        filt = self.engine.build_filter(bk, bits_per_key=self.bits_per_key)
+        pk = self.engine.keys(ops.composite_key(probe, probe_keys))
+        hit = self.engine.probe_filter(filt, pk)
         stats.filters_built += 1
         stats.filter_bytes += filt.nbytes()
-        stats.rows_probed += len(pkeys)
+        stats.rows_probed += len(pk)
         return hit
 
 
@@ -60,13 +79,17 @@ def _transfer_order(vertices: Dict[int, Vertex]) -> List[int]:
 class PredTrans(Strategy):
     """The paper's contribution. Forward + backward Bloom-filter passes over
     the small→large DAG; each vertex applies all incoming filters and emits
-    transformed outgoing filters from a single (vectorized) scan."""
+    transformed outgoing filters from a single scan, executed by the
+    batched `repro.core.engine_bloom` runtime (`backend=` selects the
+    numpy host mirror, the jit'd jnp ops, or the Pallas TPU kernels)."""
 
     name = "pred-trans"
 
     def __init__(self, bits_per_key: int = bloom.DEFAULT_BITS_PER_KEY,
                  k: int = bloom.DEFAULT_K, passes: int = 2,
-                 prune: bool = False, lip_order: bool = True):
+                 prune: bool = False, lip_order: bool = True,
+                 backend: str = "numpy",
+                 interpret: Optional[bool] = None):
         self.bits_per_key = bits_per_key
         self.k = k
         self.passes = passes  # 2 = forward+backward (paper); more allowed
@@ -78,36 +101,48 @@ class PredTrans(Strategy):
         # lip_order: apply incoming filters most-selective-first (LIP-style
         # ordering, explicitly sanctioned in paper §3.2).
         self.lip_order = lip_order
+        self.engine: BloomEngine = get_engine(backend, k=k,
+                                              interpret=interpret)
 
     def prefilter(self, vertices, edges):
-        stats = TransferStats(strategy=self.name)
+        stats = TransferStats(strategy=self.name,
+                              backend=self.engine.backend)
         before = {lid: v.live for lid, v in vertices.items()}
         t0 = time.perf_counter()
         order = _transfer_order(vertices)
         rank = {lid: i for i, lid in enumerate(order)}
         self._hk_cache: Dict[Tuple[int, Tuple[str, ...]],
-                             bloom.HashedKeys] = {}
+                             EngineKeys] = {}
+        # per-vertex edge adjacency, computed once per prefilter (the
+        # passes below are O(V + E) per pass, not O(V·E))
+        adj: Dict[int, List[Tuple[int, Edge]]] = {lid: []
+                                                 for lid in vertices}
+        for ei, e in enumerate(edges):
+            if e.u in adj:
+                adj[e.u].append((ei, e))
+            if e.v in adj and e.v != e.u:
+                adj[e.v].append((ei, e))
 
         for p in range(self.passes):
             forward = (p % 2 == 0)
             seq = order if forward else order[::-1]
-            self._one_pass(seq, rank, forward, vertices, edges, stats)
+            self._one_pass(seq, rank, forward, vertices, adj, stats)
 
         stats.seconds = time.perf_counter() - t0
         stats.record_vertices(vertices, before)
         return stats
 
-    def _hashed(self, v: Vertex, cols: Sequence[str]) -> bloom.HashedKeys:
+    def _hashed(self, v: Vertex, cols: Sequence[str]) -> EngineKeys:
         """Hash a vertex's key column once and reuse across all edges and
         passes (the paper's one-scan transformation, vectorized)."""
         key = (v.leaf_id, tuple(cols))
         hk = self._hk_cache.get(key)
         if hk is None:
-            hk = bloom.hash_keys(ops.composite_key(v.table, cols), self.k)
+            hk = self.engine.keys(ops.composite_key(v.table, cols))
             self._hk_cache[key] = hk
         return hk
 
-    def _one_pass(self, seq, rank, forward, vertices, edges, stats):
+    def _one_pass(self, seq, rank, forward, vertices, adj, stats):
         """Process vertices in `seq` order; a filter flows along edge
         (a,b) iff rank order matches the pass direction and the edge
         allows that direction."""
@@ -120,39 +155,43 @@ class PredTrans(Strategy):
 
         for lid in seq:
             v = vertices[lid]
-            # 1. apply all incoming filters (single logical scan; rows are
-            #    dropped from the working set as soon as one filter misses)
+            scan = self.engine.begin(v.mask)
+            # 1. apply all incoming filters — one fused multi-filter
+            #    probe over a single shrinking survivor set (rows leave
+            #    the working set as soon as one filter misses)
             incoming = []
-            for ei, e in enumerate(edges):
-                if lid not in (e.u, e.v):
-                    continue
+            for ei, e in adj[lid]:
                 src = e.other(lid)
-                if not flows(src, lid, e) or ei not in pending:
-                    continue
-                incoming.append((pending[ei][1], ei, e))
+                if flows(src, lid, e) and ei in pending:
+                    incoming.append((pending[ei][1], ei, e))
             if self.lip_order:          # most selective first (LIP-style)
                 incoming.sort(key=lambda t: t[0])
-            for _, ei, e in incoming:
-                hk = self._hashed(v, e.endpoint_cols(lid))
-                v.mask = bloom.probe_hashed(pending[ei][0].words, hk,
-                                            live=v.mask)
-                stats.rows_probed += int(v.mask.sum())
-            # 2. build transformed outgoing filters from the reduced table
+            if incoming:
+                stats.rows_probed += scan.probe(
+                    [(pending[ei][0].words,
+                      self._hashed(v, e.endpoint_cols(lid)))
+                     for _, ei, e in incoming])
+                v.mask = scan.mask
+            # 2. build transformed outgoing filters from the same
+            #    survivor set — probe→build is one scan, never a rescan
             if self.prune and not v.informative:
                 continue                # transfer-path pruning (§3.2)
-            for ei, e in enumerate(edges):
-                if lid not in (e.u, e.v):
-                    continue
-                dst = e.other(lid)
-                if not flows(lid, dst, e):
-                    continue
+            out_edges = [(ei, e) for ei, e in adj[lid]
+                         if flows(lid, e.other(lid), e)]
+            if not out_edges:
+                continue
+            live = scan.live
+            nblocks = bloom.blocks_for(max(live, 1), self.bits_per_key)
+            sel = live / max(v.base_rows if v.base_rows > 0
+                             else len(v.table), 1)
+            built: Dict[int, np.ndarray] = {}   # same cols => same filter
+            for ei, e in out_edges:
                 hk = self._hashed(v, e.endpoint_cols(lid))
-                nblocks = bloom.blocks_for(max(v.live, 1),
-                                           self.bits_per_key)
-                filt = bloom.BloomFilter(
-                    bloom.build_hashed(hk, v.mask, nblocks), self.k)
-                sel = v.live / max(v.base_rows if v.base_rows > 0
-                                   else len(v.table), 1)
+                words = built.get(id(hk))
+                if words is None:
+                    words = scan.build(hk, nblocks)
+                    built[id(hk)] = words
+                filt = bloom.BloomFilter(words, self.k)
                 pending[ei] = (filt, sel)
                 stats.filters_built += 1
                 stats.filter_bytes += filt.nbytes()
@@ -245,4 +284,9 @@ STRATEGIES = {
 
 
 def make_strategy(name: str, **kw) -> Strategy:
+    """`backend="numpy"|"jax"|"pallas"` selects the bloom engine for the
+    strategies in BACKEND_AWARE; other strategies reject it (they do no
+    Bloom work)."""
+    if "backend" in kw and name not in BACKEND_AWARE:
+        raise ValueError(f"strategy {name!r} takes no bloom backend")
     return STRATEGIES[name](**kw)

@@ -45,7 +45,7 @@ def _slot_hash(lo, hi):
 
 
 def _build_kernel(lo_ref, hi_ref, mask_ref, klo_ref, khi_ref, occ_ref,
-                  *, cap: int):
+                  *, cap: int, interpret: bool):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         occ_ref[...] = jnp.zeros_like(occ_ref)
@@ -58,11 +58,29 @@ def _build_kernel(lo_ref, hi_ref, mask_ref, klo_ref, khi_ref, occ_ref,
     h = _slot_hash(lo, hi)
 
     def insert(i, _):
+        if interpret:
+            # snapshot the table as values: within one insert the table
+            # is read-only, and keeping refs out of the while_loop lets
+            # interpret mode discharge the state (while-with-ref-cond
+            # has no discharge rule)
+            occ = occ_ref[0, :]
+            klo = klo_ref[0, :]
+            khi = khi_ref[0, :]
+
+            def slot_state(s):
+                return occ[s], klo[s], khi[s]
+        else:
+            # compiled mode keeps per-slot scalar ref reads — a
+            # full-table snapshot per insert would be O(n*cap) traffic
+            def slot_state(s):
+                return occ_ref[0, s], klo_ref[0, s], khi_ref[0, s]
+
         def find(slot):
             # advance until empty slot or the same key (dedup insert)
             def cond(s):
-                occupied = occ_ref[0, s] != 0
-                same = (klo_ref[0, s] == lo[i]) & (khi_ref[0, s] == hi[i])
+                s_occ, s_lo, s_hi = slot_state(s)
+                occupied = s_occ != 0
+                same = (s_lo == lo[i]) & (s_hi == hi[i])
                 return occupied & ~same
 
             def step(s):
@@ -90,7 +108,7 @@ def build_pallas(lo, hi, mask, cap: int, interpret: bool = True):
     assert n % TILE == 0 and cap & (cap - 1) == 0
     g = n // TILE
     klo, khi, occ = pl.pallas_call(
-        functools.partial(_build_kernel, cap=cap),
+        functools.partial(_build_kernel, cap=cap, interpret=interpret),
         grid=(g,),
         in_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0))] * 3,
         out_specs=[pl.BlockSpec((1, cap), lambda i: (0, 0))] * 3,

@@ -3,7 +3,9 @@ fold/union algebra, hash-once cache paths. Property-based via hypothesis."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bloom, hashing
 

@@ -2,7 +2,9 @@
 aggregation vs numpy, expressions, dictionary encoding."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.relational import Table, col, isin, like, ops
 from repro.relational.expr import between, case, not_like, substring

@@ -33,6 +33,22 @@ def test_query_strategies_agree(tpch_small, qn):
         _assert_equal(ref, res, (qn, s))
 
 
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_pred_trans_engine_backends_end_to_end(tpch_small, backend):
+    """The paper's Q5 through the batched engine's device backends
+    (pallas runs the TPU kernels in interpret mode off-TPU): identical
+    results and identical per-vertex reductions vs the numpy engine."""
+    ref, ref_stats = Executor(
+        tpch_small, make_strategy("pred-trans")).execute(
+        build_query(5, sf=0.01))
+    res, stats = Executor(
+        tpch_small, make_strategy("pred-trans", backend=backend)).execute(
+        build_query(5, sf=0.01))
+    _assert_equal(ref, res, backend)
+    assert stats.transfer.backend == backend
+    assert stats.transfer.per_vertex == ref_stats.transfer.per_vertex
+
+
 def test_q5_join_graph_is_cyclic(tpch_small):
     """The paper's Fig 1a: 6 equi-join predicates over 6 relations => the
     join graph contains a cycle (customer-orders-lineitem-supplier)."""

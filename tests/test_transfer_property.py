@@ -3,7 +3,9 @@ micro-schemas (star + chain + cyclic joins, random local predicates,
 inner/left/semi/anti), for every strategy."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.transfer import make_strategy
 from repro.relational import Executor, Table, col
