@@ -4,10 +4,13 @@ strategies and the filter kernels (DESIGN.md §7).
 `repro.core.transfer.PredTrans` describes *what* flows along the transfer
 graph; this module decides *how* each vertex's filter work is executed:
 
-* **hash once** — `BloomEngine.keys` turns a key column into backend
-  hash state exactly once per (vertex, column); every probe, build and
-  transfer across both passes reuses it (the vectorized form of the
-  paper's "transformation scans the join keys only once", §3.2);
+* **hash once, lazily** — `BloomEngine.keys` wraps a key column in
+  `EngineKeys`; the full column's hash state materializes at most once
+  per (vertex, column) — and only when a mostly-alive row set needs it,
+  a survivor subset that earlier filters already shrank hashes just its
+  own rows (the vectorized form of the paper's "transformation scans
+  the join keys only once", §3.2, minus the rows that never survive to
+  be scanned);
 * **fused multi-filter probe** — all filters incoming at a vertex are
   packed into one concatenated word array with per-filter block offsets
   (`PackedFilters`) and applied in the given (LIP, most-selective-first)
@@ -16,9 +19,14 @@ graph; this module decides *how* each vertex's filter work is executed:
   validity mask is materialized once, not once per edge;
 * **one scan probe→build** — a `VertexScan` carries the survivor set
   from the probe half to the build half, so emitting each outgoing
-  filter is a gather over survivors, never a rescan of the table; the
-  device backends additionally route the first outgoing build through
-  the fused `transfer` op (probe + build in one kernel pass);
+  filter is a gather over survivors, never a rescan of the table;
+* **compacted device scans** — the device backends keep a re-bucketed
+  survivor-id array between probes (later filters probe ~survivors,
+  not the padded column), hash each column on device once
+  (`bloom.hash_state` + `probe_hashed_dev`), and off-TPU route builds
+  through the bit-identical host mirror and compaction through host
+  flatnonzero (XLA:CPU serializes the build scatter and scans for
+  sized-nonzero; DESIGN.md §7);
 * **bucketed batches** — key batches are padded to power-of-two buckets
   (`TILE`-aligned for Pallas) so the jit / pallas_call caches hold
   O(log n) entries per (op, nblocks), fulfilling the shape contract in
@@ -35,12 +43,16 @@ test_engine_bloom.py` asserts word-level equality against the
 from __future__ import annotations
 
 import dataclasses
+import functools
 import sys
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 _LITTLE_ENDIAN = sys.byteorder == "little"
+
+import jax
+import jax.numpy as jnp
 
 from repro.core import bloom, hashing
 from repro.core.bloom import (
@@ -61,11 +73,14 @@ class EngineKeys:
     """Per-column hash state, computed once and reused across all edges
     and passes.
 
-    Host backend keeps the block hash and double-hash generators as
-    uint32 (4-byte probe-round traffic; int64 state measured ~1.5x
-    slower on the Q5 hot path). Device backends keep the raw uint32 key
-    halves and rehash on device; padded device copies are cached per
-    bucket size."""
+    Host backend keeps the raw int64 keys and hashes *lazily*: the full
+    column is hashed (and cached) only when a mostly-alive row set needs
+    it; a shrunken survivor set is hashed directly from the raw keys —
+    rows that an earlier filter already rejected are never hashed at
+    all. Hash state is uint32 block hash + double-hash generators
+    (4-byte probe-round traffic; int64 state measured ~1.5x slower on
+    the Q5 hot path). Device backends keep the raw uint32 key halves and
+    rehash on device; padded device copies are cached per bucket size."""
 
     n: int
     lo: Optional[np.ndarray] = None   # uint32 [n] (device backends)
@@ -73,10 +88,36 @@ class EngineKeys:
     h: Optional[np.ndarray] = None    # uint32 [n] block hash (host)
     g1: Optional[np.ndarray] = None   # uint32 [n] (host)
     g2: Optional[np.ndarray] = None   # uint32 [n] (odd; host)
+    raw: Optional[np.ndarray] = None  # int64 [n] (host, lazy source)
     _dev: Dict[int, Tuple] = dataclasses.field(default_factory=dict)
+    _devh: Dict[int, Tuple] = dataclasses.field(default_factory=dict)
 
     def __len__(self):
         return self.n
+
+    def _hash_subset(self, alive: np.ndarray) -> Tuple:
+        if self.raw is not None:
+            return _hash_host(self.raw[alive])
+        return _hash_host_halves(self.lo[alive], self.hi[alive])
+
+    def hga(self, alive: Optional[np.ndarray] = None) -> Tuple:
+        """(h, g1, g2) over `alive` rows (None = every row). The full
+        hash is computed once and cached; survivor subsets under half
+        the column hash just their own rows (works from `raw` int64
+        keys or from the device backends' uint32 halves — bit-identical
+        either way)."""
+        if self.h is None:
+            if alive is not None and alive.size * 2 < self.n:
+                return self._hash_subset(alive)
+            if self.raw is not None:
+                self.h, self.g1, self.g2 = _hash_host(self.raw)
+            else:
+                self.h, self.g1, self.g2 = _hash_host_halves(self.lo,
+                                                             self.hi)
+        if alive is None:
+            return self.h, self.g1, self.g2
+        return (self.h.take(alive), self.g1.take(alive),
+                self.g2.take(alive))
 
     def dev(self, bucket: int):
         """Padded (lo, hi) device arrays, cached per power-of-two bucket."""
@@ -87,6 +128,55 @@ class EngineKeys:
                    jnp.asarray(_pad(self.hi, bucket)))
             self._dev[bucket] = hit
         return hit
+
+    def dev_hashed(self, bucket: int):
+        """Padded (h, g1, g2) device hash state, computed once per
+        bucket and reused by every probe (hash once, also on device)."""
+        hit = self._devh.get(bucket)
+        if hit is None:
+            lo, hi = self.dev(bucket)
+            hit = bloom.hash_state(lo, hi)
+            self._devh[bucket] = hit
+        return hit
+
+
+def _hash_host(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]:
+    """(h, g1, g2) uint32 hash state from int64 keys — the host mirror's
+    hash pipeline (strided key halves, fused murmur finalizers)."""
+    if not keys.flags.c_contiguous:
+        keys = np.ascontiguousarray(keys)
+    # strided views of the int64 words: same bits as hashing.key_halves,
+    # one pass instead of mask+shift+cast
+    v32 = keys.view(np.uint32)
+    lo_s, hi_s = v32[0::2], v32[1::2]
+    if not _LITTLE_ENDIAN:
+        lo_s, hi_s = hi_s, lo_s
+    return _hash_host_halves(lo_s, hi_s)
+
+
+def _hash_host_halves(lo_s: np.ndarray, hi_s: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Hash pipeline from uint32 halves. `lo_s`/`hi_s` may be strided
+    views — never mutated in place."""
+    tmp = np.empty(len(lo_s), np.uint32)
+    # .copy() (never ascontiguousarray: a 1-row strided view IS
+    # contiguous and would alias the table column) — _fmix_into
+    # mutates its argument
+    with np.errstate(over="ignore"):
+        if hi_s.any():
+            # h = fmix32(lo ^ fmix32(hi))
+            h = _fmix_into(hi_s.copy(), tmp)
+            np.bitwise_xor(h, lo_s, out=h)
+            _fmix_into(h, tmp)
+        else:
+            # fmix32(0) == 0, so 32-bit keys (every TPC-H key)
+            # skip the hi mix: h = fmix32(lo)
+            h = _fmix_into(lo_s.copy(), tmp)
+        g1 = _fmix_into(h ^ hashing.GOLDEN, tmp)
+        g2 = _fmix_into(h ^ np.uint32(0x7FEB352D), tmp)
+        np.bitwise_or(g2, np.uint32(1), out=g2)
+    return h, g1, g2
 
 
 def _fmix_into(h: np.ndarray, tmp: np.ndarray) -> np.ndarray:
@@ -155,11 +245,8 @@ def probe_packed_np(packed: PackedFilters, keys: Sequence[EngineKeys],
             break
         m = n_rows if alive is None else int(alive.size)
         rows_probed += m
-        ek = keys[f]
         l2 = packed.log2nb[f]
-        h = ek.h if alive is None else ek.h[alive]
-        g1 = ek.g1 if alive is None else ek.g1[alive]
-        g2 = ek.g2 if alive is None else ek.g2[alive]
+        h, g1, g2 = keys[f].hga(alive)
         off = int(packed.offsets[f])
         # uint32 word indices when the packed stack is small enough —
         # halves the index-arithmetic memory traffic on the hot round
@@ -199,9 +286,7 @@ def build_alive_np(ek: EngineKeys, alive: Optional[np.ndarray],
                    nblocks: int, k: int) -> np.ndarray:
     """Build filter words from the survivor index set (`alive=None` means
     every row). Bit-identical to `bloom.build_np` over the same rows."""
-    h = ek.h if alive is None else ek.h[alive]
-    g1 = ek.g1 if alive is None else ek.g1[alive]
-    g2 = ek.g2 if alive is None else ek.g2[alive]
+    h, g1, g2 = ek.hga(alive)
     l2 = int(np.log2(nblocks))
     if l2:
         blk = (h >> np.uint32(32 - l2)).astype(np.int64) * BLOCK_BITS
@@ -214,6 +299,69 @@ def build_alive_np(ek: EngineKeys, alive: Optional[np.ndarray],
             bits[blk + pos] = True
     return np.packbits(bits, bitorder="little").view(np.uint32).reshape(
         nblocks, LANES)
+
+
+# --------------------------------------------------------------------------
+# device-scan jit helpers (bucketed shapes => O(log n) cache entries; the
+# live-row count is a traced scalar so shrinking survivor counts never
+# retrace)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _probe_hashed_count(words, h, g1, g2, count, k):
+    ok = bloom.probe_hashed_dev(words, h, g1, g2, k=k)
+    return ok & (jnp.arange(ok.shape[0]) < count)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _probe_hashed_gather(words, h, g1, g2, idx, count, k):
+    ok = bloom.probe_hashed_dev(words, h[idx], g1[idx], g2[idx], k=k)
+    return ok & (jnp.arange(idx.shape[0]) < count)
+
+
+@functools.partial(jax.jit, static_argnames=("nblocks", "k"))
+def _build_count(lo, hi, count, nblocks, k):
+    mask = jnp.arange(lo.shape[0]) < count
+    return bloom.build(lo, hi, mask, nblocks, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("nblocks", "k"))
+def _build_gather(lo, hi, idx, count, nblocks, k):
+    mask = jnp.arange(idx.shape[0]) < count
+    return bloom.build(lo[idx], hi[idx], mask, nblocks, k=k)
+
+
+@jax.jit
+def _gather2(lo, hi, idx):
+    return lo[idx], hi[idx]
+
+
+@jax.jit
+def _mask_count(ok, count):
+    return ok & (jnp.arange(ok.shape[0]) < count)
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _iota_mask(size, count):
+    return jnp.arange(size) < count
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _nonzero_idx(ok, size):
+    return jnp.nonzero(ok, size=size, fill_value=0)[0].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _nonzero_gather(ok, idx, size):
+    return idx[jnp.nonzero(ok, size=size, fill_value=0)[0]]
+
+
+def _compact(ok, idx, bucket: int):
+    """New survivor-id array (original row ids) from a probe mask."""
+    if idx is None:
+        return _nonzero_idx(ok, bucket)
+    return _nonzero_gather(ok, idx, bucket)
 
 
 # --------------------------------------------------------------------------
@@ -297,63 +445,98 @@ class _NumpyScan(VertexScan):
 
 
 class _DeviceScan(VertexScan):
-    """Shared jax/pallas scan: padded device mask, sequential bucketed
-    probes, first build fused with the last probe via the `transfer` op
-    (the transfer's survivor output *is* the scan's mask from then on)."""
+    """Shared jax/pallas scan over a *compacted* survivor set.
+
+    The working set is a device array of original row ids, re-bucketed
+    (power-of-two, TILE floor for pallas) after every filter — so later
+    filters probe ~survivors, not the full padded column, mirroring the
+    host mirror's early exit at bucket granularity. Rows are `(idx,
+    count)`: the first `count` entries are live, the tail is padding
+    (clipped to row 0, masked by an iota compare — no separate validity
+    array to maintain).
+
+    Builds read the survivor ids; off-TPU the jax engine routes them
+    through the bit-identical host mirror (`build_alive_np`), because
+    XLA:CPU serializes the build's scatter (~1 µs/row — measured 30x
+    slower than the host mirror); on TPU the device build kernel runs
+    from the same compacted ids."""
 
     def __init__(self, mask: np.ndarray, engine: "BloomEngine"):
-        import jax.numpy as jnp
         self._e = engine
         self._n = len(mask)
-        self._bucket = engine.bucket(self._n)
-        self._m = jnp.asarray(_pad(np.asarray(mask, bool),
-                                   self._bucket, False))
-        self._last: Optional[Tuple] = None   # (words, ek, pre_mask)
-        self._fused = False
-        self._live: Optional[int] = None
+        mask = np.asarray(mask, bool)
+        if mask.all():
+            self._idx = None                 # identity: all rows live
+            self._count = self._n
+            self._bucket = engine.bucket(self._n)
+        else:
+            host_idx = np.flatnonzero(mask).astype(np.int32)
+            self._count = int(host_idx.size)
+            self._bucket = engine.bucket(self._count)
+            self._idx = _pad(host_idx, self._bucket)
+            if not engine.host_compact:
+                self._idx = jnp.asarray(self._idx)
         self._mask_out: Optional[np.ndarray] = None
 
     def probe(self, incoming):
         if not incoming:
             return 0
-        import jax.numpy as jnp
-        pre_live = []
+        rows = 0
         for words, ek in incoming:
-            lo, hi = ek.dev(self._bucket)
-            pre = self._m
-            pre_live.append(pre.sum())
-            self._last = (words, ek, pre)
-            self._m = pre & self._e.probe_op(words, lo, hi)
-        self._live = None
-        self._mask_out = None
-        return int(np.asarray(jnp.stack(pre_live)).sum())
+            if self._count == 0:
+                break
+            rows += self._count
+            ok = self._e.probe_idx(words, ek, self._idx, self._count,
+                                   self._n)
+            if self._e.host_compact:
+                # off-TPU: XLA's sized-nonzero is O(n) scan-heavy and the
+                # count sync materializes the mask anyway — compact the
+                # tiny survivor-id array on host
+                live = np.flatnonzero(np.asarray(ok))
+                count = int(live.size)
+                if count != self._count:
+                    self._bucket = self._e.bucket(count)
+                    ids = live.astype(np.int32) if self._idx is None \
+                        else np.asarray(self._idx)[live]
+                    self._idx = _pad(ids, self._bucket)
+            else:
+                count = int(ok.sum())
+                if count != self._count:
+                    self._bucket = self._e.bucket(count)
+                    self._idx = _compact(ok, self._idx, self._bucket)
+            if count != self._count:
+                self._count = count
+                self._mask_out = None
+        return rows
+
+    def _host_idx(self) -> Optional[np.ndarray]:
+        """Live original row ids on host (None = every row)."""
+        if self._idx is None:
+            return None
+        return np.asarray(self._idx)[: self._count].astype(np.int64)
 
     @property
     def mask(self):
         if self._mask_out is None:
-            self._mask_out = np.asarray(self._m)[: self._n]
+            idx = self._host_idx()
+            if idx is None:
+                self._mask_out = np.ones(self._n, bool)
+            else:
+                out = np.zeros(self._n, bool)
+                out[idx] = True
+                self._mask_out = out
         return self._mask_out
 
     @property
     def live(self):
-        if self._live is None:
-            self._live = int(self.mask.sum())
-        return self._live
+        return self._count
 
     def build(self, ek, nblocks):
-        lo, hi = ek.dev(self._bucket)
-        if self._last is not None and not self._fused:
-            # fused probe→build: redo the final probe and the first
-            # build in one kernel pass; `ok` is bit-identical to the
-            # chained mask and becomes the scan's mask of record
-            w_in, ek_in, pre = self._last
-            ilo, ihi = ek_in.dev(self._bucket)
-            ok, words = self._e.transfer_op(w_in, ilo, ihi, lo, hi, pre,
-                                            nblocks)
-            self._m = ok
-            self._fused = True
-            return words
-        return self._e.build_op(lo, hi, self._m, nblocks)
+        if self._e.host_build:
+            return jnp.asarray(build_alive_np(ek, self._host_idx(),
+                                              nblocks, self._e.k))
+        return self._e.build_idx(ek, self._idx, self._count, self._n,
+                                 nblocks)
 
 
 # --------------------------------------------------------------------------
@@ -371,9 +554,27 @@ class BloomEngine:
       benches, tests)."""
 
     backend = "base"
+    #: device engines set True off-TPU: filter builds run through the
+    #: bit-identical host mirror (XLA:CPU serializes the build scatter)
+    host_build = False
+    #: device engines set True off-TPU: survivor compaction runs on host
+    #: (XLA:CPU's sized-nonzero is scan-heavy; the mask is synced for the
+    #: live count regardless)
+    host_compact = False
 
     def __init__(self, k: int = DEFAULT_K):
         self.k = k
+
+    # -- device-scan hooks (jax/pallas) --------------------------------
+    def probe_idx(self, words, ek: "EngineKeys", idx, count: int,
+                  n: int):
+        """Probe `words` over the compacted survivor ids (None =
+        identity); returns a device bool mask with padding False."""
+        raise NotImplementedError
+
+    def build_idx(self, ek: "EngineKeys", idx, count: int, n: int,
+                  nblocks: int):
+        raise NotImplementedError
 
     # -- strategy-facing ----------------------------------------------
     def keys(self, values: np.ndarray) -> EngineKeys:
@@ -435,39 +636,28 @@ class NumpyEngine(BloomEngine):
         keys = np.asarray(values).astype(np.int64, copy=False)
         if not keys.flags.c_contiguous:
             keys = np.ascontiguousarray(keys)
-        # strided views of the int64 words: same bits as
-        # hashing.key_halves, one pass instead of mask+shift+cast
-        v32 = keys.view(np.uint32)
-        lo_s, hi_s = v32[0::2], v32[1::2]
-        if not _LITTLE_ENDIAN:
-            lo_s, hi_s = hi_s, lo_s
-        tmp = np.empty(len(keys), np.uint32)
-        # .copy() (never ascontiguousarray: a 1-row strided view IS
-        # contiguous and would alias the table column) — _fmix_into
-        # mutates its argument
-        with np.errstate(over="ignore"):
-            if hi_s.any():
-                # h = fmix32(lo ^ fmix32(hi))
-                h = _fmix_into(hi_s.copy(), tmp)
-                np.bitwise_xor(h, lo_s, out=h)
-                _fmix_into(h, tmp)
-            else:
-                # fmix32(0) == 0, so 32-bit keys (every TPC-H key)
-                # skip the hi mix: h = fmix32(lo)
-                h = _fmix_into(lo_s.copy(), tmp)
-            g1 = _fmix_into(h ^ hashing.GOLDEN, tmp)
-            g2 = _fmix_into(h ^ np.uint32(0x7FEB352D), tmp)
-            np.bitwise_or(g2, np.uint32(1), out=g2)
-        return EngineKeys(len(keys), h=h, g1=g1, g2=g2)
+        # lazy: EngineKeys.hga hashes the full column once on first
+        # mostly-alive use, or just the survivor subset when earlier
+        # filters already shrank the working set
+        return EngineKeys(len(keys), raw=keys)
 
     def begin(self, mask):
         return _NumpyScan(mask, self.k)
 
 
 class JaxEngine(BloomEngine):
-    """jit'd `repro.core.bloom` ops over bucketed batches."""
+    """jit'd `repro.core.bloom` ops over bucketed, survivor-compacted
+    batches: device hash state per column is computed once
+    (`EngineKeys.dev_hashed`), every probe is the hashed flat-gather op,
+    and off-TPU builds run through the host mirror."""
 
     backend = "jax"
+
+    def __init__(self, k: int = DEFAULT_K):
+        super().__init__(k)
+        off_tpu = jax.default_backend() != "tpu"
+        self.host_build = off_tpu
+        self.host_compact = off_tpu
 
     def keys(self, values):
         lo, hi = hashing.key_halves(np.asarray(values))
@@ -476,15 +666,18 @@ class JaxEngine(BloomEngine):
     def begin(self, mask):
         return _DeviceScan(mask, self)
 
-    def probe_op(self, words, lo, hi):
-        return bloom.probe(words, lo, hi, k=self.k)
+    def probe_idx(self, words, ek, idx, count, n):
+        h, g1, g2 = ek.dev_hashed(self.bucket(n))
+        if idx is None:
+            return _probe_hashed_count(words, h, g1, g2, count, self.k)
+        return _probe_hashed_gather(words, h, g1, g2, idx, count, self.k)
 
-    def build_op(self, lo, hi, mask, nblocks):
-        return bloom.build(lo, hi, mask, nblocks, k=self.k)
+    def build_idx(self, ek, idx, count, n, nblocks):
+        lo, hi = ek.dev(self.bucket(n))
+        if idx is None:
+            return _build_count(lo, hi, count, nblocks, self.k)
+        return _build_gather(lo, hi, idx, count, nblocks, self.k)
 
-    def transfer_op(self, in_words, ilo, ihi, olo, ohi, mask, nblocks):
-        return bloom.transfer(in_words, ilo, ihi, olo, ohi, mask,
-                              nblocks, k=self.k)
 
 
 class PallasEngine(BloomEngine):
@@ -497,9 +690,11 @@ class PallasEngine(BloomEngine):
                  interpret: Optional[bool] = None):
         super().__init__(k)
         if interpret is None:
-            import jax
             interpret = jax.default_backend() != "tpu"
         self.interpret = bool(interpret)
+        # builds stay on the Pallas kernels (interpret mode is the
+        # off-TPU validation harness); compaction still goes host-side
+        self.host_compact = jax.default_backend() != "tpu"
 
     def keys(self, values):
         lo, hi = hashing.key_halves(np.asarray(values))
@@ -512,6 +707,21 @@ class PallasEngine(BloomEngine):
         from repro.kernels.bloom import bloom as _k
         return _bucket(n, floor=_k.TILE)
 
+    def probe_idx(self, words, ek, idx, count, n):
+        lo, hi = ek.dev(self.bucket(n))
+        if idx is not None:
+            lo, hi = _gather2(lo, hi, idx)
+        return _mask_count(self.probe_op(words, lo, hi), count)
+
+    def build_idx(self, ek, idx, count, n, nblocks):
+        lo, hi = ek.dev(self.bucket(n))
+        if idx is not None:
+            lo, hi = _gather2(lo, hi, idx)
+            mask = _iota_mask(idx.shape[0], count)
+        else:
+            mask = _iota_mask(lo.shape[0], count)
+        return self.build_op(lo, hi, mask, nblocks)
+
     def probe_op(self, words, lo, hi):
         from repro.kernels.bloom import bloom as _k
         return _k.probe_pallas(words, lo, hi, k=self.k,
@@ -521,12 +731,6 @@ class PallasEngine(BloomEngine):
         from repro.kernels.bloom import bloom as _k
         return _k.build_pallas(lo, hi, mask, nblocks, k=self.k,
                                interpret=self.interpret)
-
-    def transfer_op(self, in_words, ilo, ihi, olo, ohi, mask, nblocks):
-        from repro.kernels.bloom import bloom as _k
-        return _k.transfer_pallas(in_words, ilo, ihi, olo, ohi, mask,
-                                  nblocks, k=self.k,
-                                  interpret=self.interpret)
 
 
 _ENGINES: Dict[Tuple, BloomEngine] = {}

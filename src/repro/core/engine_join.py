@@ -1,0 +1,532 @@
+"""Late-materialized, backend-pluggable join runtime (DESIGN.md §8).
+
+Predicate transfer shrinks join *inputs*; this module makes the join
+phase itself stop re-materializing them. Two layers:
+
+* **selection-vector cursors** (`JoinCursor`) — a join subtree's
+  intermediate result is a set of per-source *selection vectors*
+  (int64 row indices into each source leaf, -1 = outer-join NULL)
+  composed through the join tree, never a materialized table. Payload
+  columns are gathered exactly once, by `materialize()`, at the first
+  operator that truly needs values (GroupBy / Project / Sort / a
+  non-equi `extra` predicate — and those gather only the columns they
+  reference). Keys are the only per-join gather, and per-leaf composite
+  keys are computed once per query and shared with the transfer phase
+  (`Vertex.raw_keys`, stashed by the strategies and compacted by the
+  executor).
+
+* **join-index engines** (`JoinEngine`) — `join_indices(build, probe)`
+  with the same backend split as `repro.core.engine_bloom`:
+
+  - ``numpy``  — sort-based build + binary-search probe (the reference
+    order every backend must reproduce bit-exactly), with a
+    radix-partitioned variant for large build sides: both key vectors
+    are partitioned by the top bits of a Fibonacci hash, each partition
+    is joined independently, and the output is scattered back into
+    global probe order — identical (build_idx, probe_idx) to the sorted
+    path because equal keys always share a partition and the
+    partition-local stable sort preserves their global relative order;
+  - ``jax``    — jit'd open-addressing hash map (build→probe) from
+    `repro.kernels.semijoin.ops`, used when the build side is
+    duplicate-free (the dimension-table case; detected from the map's
+    occupancy, which dedups equal keys), host fallback otherwise;
+  - ``pallas`` — the TPU kernels in `repro.kernels.semijoin` (interpret
+    mode off-TPU), same unique-build contract.
+
+The output contract — probe rows in original order; a probe row's
+matches in the build side's stable key order — makes every downstream
+float reduction order-deterministic, so query results are bitwise
+identical across backends (tests/test_engine_join.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, \
+    Tuple
+
+import numpy as np
+
+if TYPE_CHECKING:   # type-only: relational imports this module's engines
+    from repro.relational.table import Table
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+_FIB64 = np.uint64(0x9E3779B97F4A7C15)
+
+
+# --------------------------------------------------------------------------
+# join-index engines
+# --------------------------------------------------------------------------
+
+
+def sorted_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
+                        how: str = "inner"
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Equi-join two int64 key vectors (the reference implementation).
+
+    Returns (build_idx, probe_idx) row-index pairs. ``how``:
+      inner  : matched pairs
+      left   : every probe row; unmatched get build_idx == -1
+               (probe side is the "left"/outer side here)
+      semi   : probe rows with >=1 match (probe_idx only; build_idx == -1)
+      anti   : probe rows with no match
+    """
+    order = np.argsort(build_key, kind="stable")
+    sorted_key = build_key[order]
+    lo = np.searchsorted(sorted_key, probe_key, side="left")
+    hi = np.searchsorted(sorted_key, probe_key, side="right")
+    counts = hi - lo
+
+    if how == "semi":
+        sel = np.flatnonzero(counts > 0)
+        return np.full(len(sel), -1, np.int64), sel
+    if how == "anti":
+        sel = np.flatnonzero(counts == 0)
+        return np.full(len(sel), -1, np.int64), sel
+
+    if how == "left":
+        out_counts = np.maximum(counts, 1)
+    elif how == "inner":
+        out_counts = counts
+    else:
+        raise ValueError(how)
+
+    total = int(out_counts.sum())
+    probe_idx = np.repeat(np.arange(len(probe_key), dtype=np.int64),
+                          out_counts)
+    # offsets within each probe row's match run
+    starts = np.zeros(len(out_counts) + 1, np.int64)
+    np.cumsum(out_counts, out=starts[1:])
+    within = np.arange(total, dtype=np.int64) - starts[probe_idx]
+    build_pos = lo[probe_idx] + within
+    build_idx = order[np.minimum(build_pos, len(order) - 1)] \
+        if len(order) else np.full(total, -1, np.int64)
+    if how == "left":
+        unmatched = counts[probe_idx] == 0
+        build_idx = np.where(unmatched, np.int64(-1), build_idx)
+    return build_idx.astype(np.int64), probe_idx
+
+
+def _partition_ids(keys: np.ndarray, bits: int) -> np.ndarray:
+    """Top `bits` of a Fibonacci key hash (one uint64 multiply). Both
+    join sides must use the same hash family — equal keys must share a
+    partition — and the choice only affects partition *assignment*,
+    never the join output."""
+    with np.errstate(over="ignore"):
+        h = keys.astype(np.uint64) * _FIB64
+    return (h >> np.uint64(64 - bits)).astype(np.int32)
+
+
+def radix_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
+                       how: str = "inner", target_rows: int = 8192
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Radix-partitioned build→probe: bit-identical output to
+    `sorted_join_indices`, but the build-side sort runs per partition
+    (cache-resident) and both sides are split by an O(n) counting sort
+    on small-int partition ids."""
+    nb, npr = len(build_key), len(probe_key)
+    bits = max(1, min(8, int(np.log2(max(nb // target_rows, 2)))))
+    nparts = 1 << bits
+    pid_b = _partition_ids(build_key, bits)
+    pid_p = _partition_ids(probe_key, bits)
+    ob = np.argsort(pid_b, kind="stable")      # radix sort on int32
+    op = np.argsort(pid_p, kind="stable")
+    sb = np.zeros(nparts + 1, np.int64)
+    np.cumsum(np.bincount(pid_b, minlength=nparts), out=sb[1:])
+    sp = np.zeros(nparts + 1, np.int64)
+    np.cumsum(np.bincount(pid_p, minlength=nparts), out=sp[1:])
+
+    counts = np.zeros(npr, np.int64)
+    parts = []
+    for i in range(nparts):
+        pseg = op[sp[i]:sp[i + 1]]
+        bseg = ob[sb[i]:sb[i + 1]]
+        if pseg.size == 0 or bseg.size == 0:
+            continue
+        so = np.argsort(build_key[bseg], kind="stable")
+        skeys = build_key[bseg][so]
+        pkeys = probe_key[pseg]
+        lo = np.searchsorted(skeys, pkeys, side="left")
+        c = np.searchsorted(skeys, pkeys, side="right") - lo
+        counts[pseg] = c
+        parts.append((bseg, so, lo, pseg, c))
+
+    if how == "semi":
+        sel = np.flatnonzero(counts > 0)
+        return np.full(len(sel), -1, np.int64), sel
+    if how == "anti":
+        sel = np.flatnonzero(counts == 0)
+        return np.full(len(sel), -1, np.int64), sel
+    if how == "left":
+        out_counts = np.maximum(counts, 1)
+    elif how == "inner":
+        out_counts = counts
+    else:
+        raise ValueError(how)
+
+    starts = np.zeros(npr + 1, np.int64)
+    np.cumsum(out_counts, out=starts[1:])
+    total = int(starts[-1])
+    probe_idx = np.repeat(np.arange(npr, dtype=np.int64), out_counts)
+    build_idx = np.full(total, -1, np.int64)   # left-join unmatched stay -1
+    for bseg, so, lo, pseg, c in parts:
+        tot = int(c.sum())
+        if tot == 0:
+            continue
+        rep = np.repeat(np.arange(len(pseg), dtype=np.int64), c)
+        lst = np.zeros(len(pseg) + 1, np.int64)
+        np.cumsum(c, out=lst[1:])
+        within = np.arange(tot, dtype=np.int64) - lst[rep]
+        grows = bseg[so[lo[rep] + within]]
+        build_idx[starts[pseg[rep]] + within] = grows
+    return build_idx, probe_idx
+
+
+class JoinEngine:
+    """Backend-pluggable `join_indices`."""
+
+    backend = "base"
+
+    def join_indices(self, build_key: np.ndarray, probe_key: np.ndarray,
+                     how: str = "inner"
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+
+class NumpyJoinEngine(JoinEngine):
+    """Host path: sorted reference below `radix_min` build rows, the
+    radix-partitioned variant above."""
+
+    backend = "numpy"
+
+    def __init__(self, radix_min: int = 1 << 16):
+        self.radix_min = radix_min
+
+    def join_indices(self, build_key, probe_key, how="inner"):
+        if len(build_key) >= self.radix_min and len(probe_key):
+            return radix_join_indices(build_key, probe_key, how)
+        return sorted_join_indices(build_key, probe_key, how)
+
+
+class _HashMapJoinEngine(JoinEngine):
+    """Shared jax/pallas path: open-addressing joinmap build + lookup
+    (`repro.kernels.semijoin.ops`). Valid when the build side is
+    duplicate-free — with unique keys every probe row has 0 or 1
+    matches, so (build_idx, probe_idx) is order-identical to the sorted
+    reference. Duplicates are detected from the map occupancy (equal
+    keys dedup into one slot) and fall back to the host engine."""
+
+    #: builds above this size fall back to host (the serial-insert build
+    #: is only worth jit/kernel dispatch below it off-TPU)
+    device_max_build = 1 << 22
+
+    def __init__(self):
+        self._host = NumpyJoinEngine()
+
+    def _build(self, build_key):
+        raise NotImplementedError
+
+    def _lookup(self, table, probe_key):
+        raise NotImplementedError
+
+    def join_indices(self, build_key, probe_key, how="inner"):
+        nb = len(build_key)
+        if (nb == 0 or len(probe_key) == 0
+                or nb > self.device_max_build):
+            return self._host.join_indices(build_key, probe_key, how)
+        table, occupied = self._build(build_key)
+        if occupied < nb:                     # duplicate build keys
+            return self._host.join_indices(build_key, probe_key, how)
+        rows = self._lookup(table, probe_key)  # int64 [n_probe], -1 miss
+        found = rows >= 0
+        if how == "semi":
+            sel = np.flatnonzero(found)
+            return np.full(len(sel), -1, np.int64), sel
+        if how == "anti":
+            sel = np.flatnonzero(~found)
+            return np.full(len(sel), -1, np.int64), sel
+        if how == "left":
+            return rows, np.arange(len(probe_key), dtype=np.int64)
+        if how == "inner":
+            sel = np.flatnonzero(found)
+            return rows[sel], sel
+        raise ValueError(how)
+
+
+class JaxJoinEngine(_HashMapJoinEngine):
+    backend = "jax"
+
+    def _build(self, build_key):
+        from repro.kernels.semijoin import ops as sj
+        return sj.joinmap_build(build_key, use_pallas=False)
+
+    def _lookup(self, table, probe_key):
+        from repro.kernels.semijoin import ops as sj
+        return sj.joinmap_lookup(table, probe_key, use_pallas=False)
+
+
+class PallasJoinEngine(_HashMapJoinEngine):
+    """TPU kernels; interpret mode off-TPU. The serialized build loop is
+    prohibitive under the interpreter, so off-TPU builds route through
+    the jit'd jnp builder (insert order is identical, so the table
+    layout — and therefore every lookup — is bit-identical) while
+    lookups always exercise the Pallas kernel."""
+
+    backend = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        super().__init__()
+        if interpret is None:
+            import jax
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+
+    def _build(self, build_key):
+        from repro.kernels.semijoin import ops as sj
+        return sj.joinmap_build(build_key, use_pallas=not self.interpret,
+                                interpret=self.interpret)
+
+    def _lookup(self, table, probe_key):
+        from repro.kernels.semijoin import ops as sj
+        return sj.joinmap_lookup(table, probe_key, use_pallas=True,
+                                 interpret=self.interpret)
+
+
+_ENGINES: Dict[Tuple, JoinEngine] = {}
+
+
+def get_join_engine(backend: str = "numpy",
+                    interpret: Optional[bool] = None) -> JoinEngine:
+    """Engine instances are cached so jit/pallas caches are shared
+    across executors and queries (mirrors `engine_bloom.get_engine`)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown join backend {backend!r}; "
+                         f"choose from {BACKENDS}")
+    key = (backend, interpret if backend == "pallas" else None)
+    eng = _ENGINES.get(key)
+    if eng is None:
+        if backend == "numpy":
+            eng = NumpyJoinEngine()
+        elif backend == "jax":
+            eng = JaxJoinEngine()
+        else:
+            eng = PallasJoinEngine(interpret=interpret)
+        _ENGINES[key] = eng
+    return eng
+
+
+# --------------------------------------------------------------------------
+# selection-vector cursors
+# --------------------------------------------------------------------------
+
+_slot_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Slot:
+    """One join source (a reduced leaf, or a materialized intermediate
+    wrapped as a pseudo-leaf). `keys` caches composite join keys over
+    the *full* slot table — computed once per query per column set,
+    seeded from the transfer phase where possible."""
+
+    table: Table
+    keys: Dict[Tuple[str, ...], np.ndarray] = dataclasses.field(
+        default_factory=dict)
+    sid: int = dataclasses.field(default_factory=lambda: next(_slot_ids))
+
+    def key(self, cols: Tuple[str, ...]) -> np.ndarray:
+        k = self.keys.get(cols)
+        if k is None:
+            from repro.relational import ops
+            k = ops.composite_key(self.table, cols)
+            self.keys[cols] = k
+        return k
+
+
+def _compose(sel: Optional[np.ndarray], idx: np.ndarray) -> np.ndarray:
+    """sel∘idx for non-negative idx (sel may carry -1 NULLs, preserved)."""
+    return idx if sel is None else sel[idx]
+
+
+def _compose_nullable(sel: Optional[np.ndarray], idx: np.ndarray
+                      ) -> np.ndarray:
+    """sel∘idx where idx == -1 rows stay NULL.
+
+    NULL rows keep -1 through composition and materialize with
+    `valid=False` and a clipped row-0 *representative* payload. The
+    validity mask is the authoritative NULL signal (the engine's NULL
+    contract, `relational.table`); the representative byte values are
+    unspecified and may differ from the eager chain's (which clips into
+    whatever intermediate table existed at its join)."""
+    if sel is None:
+        return idx
+    if len(sel) == 0:
+        # outer join against a side filtered to zero rows: every idx is
+        # -1 (there was nothing to match), so every output row is NULL
+        return np.full(len(idx), -1, np.int64)
+    neg = idx < 0
+    out = sel[np.where(neg, 0, idx)]
+    return np.where(neg, np.int64(-1), out)
+
+
+class JoinCursor:
+    """A join subtree's result as selection vectors over its slots.
+
+    `cols` fixes the output column order — probe-side columns first,
+    then build-side columns not shadowed by the probe side — matching
+    the materializing `ops.hash_join` exactly."""
+
+    __slots__ = ("slots", "sel", "cols", "colmap", "nullable", "nrows",
+                 "name")
+
+    def __init__(self, slots: Dict[int, Slot],
+                 sel: Dict[int, Optional[np.ndarray]],
+                 cols: List[Tuple[str, int]], nullable: Set[int],
+                 nrows: int, name: str):
+        self.slots = slots
+        self.sel = sel
+        self.cols = cols
+        self.colmap = {n: sid for n, sid in cols}
+        self.nullable = nullable
+        self.nrows = nrows
+        self.name = name
+
+    # -- constructors --------------------------------------------------
+    @staticmethod
+    def from_slot(slot: Slot) -> "JoinCursor":
+        cols = [(n, slot.sid) for n in slot.table.names]
+        return JoinCursor({slot.sid: slot}, {slot.sid: None}, cols,
+                          set(), len(slot.table), slot.table.name)
+
+    @staticmethod
+    def from_table(table: Table) -> "JoinCursor":
+        return JoinCursor.from_slot(Slot(table))
+
+    def __len__(self) -> int:
+        return self.nrows
+
+    # -- row selection -------------------------------------------------
+    def take(self, idx: np.ndarray) -> "JoinCursor":
+        """Rows by position (idx >= 0)."""
+        sel = {sid: _compose(s, idx) for sid, s in self.sel.items()}
+        return JoinCursor(self.slots, sel, self.cols,
+                          set(self.nullable), len(idx), self.name)
+
+    # -- column access -------------------------------------------------
+    def _sel_safe(self, sid: int) -> Optional[np.ndarray]:
+        """Selection vector with NULL rows clipped to row 0 — the same
+        representative-row semantics a chain of `Column.gather` calls
+        produces for materialized NULLs."""
+        s = self.sel[sid]
+        if s is not None and sid in self.nullable:
+            return np.where(s < 0, 0, s)
+        return s
+
+    def key(self, names: Sequence[str]) -> np.ndarray:
+        """Composite int64 join key over the cursor's current rows."""
+        from repro.relational import ops
+        names = tuple(names)
+        sids = {self.colmap[n] for n in names}
+        if (len(sids) == 1
+                and ops.stable_key_encoding(
+                    self.slots[next(iter(sids))].table, names)):
+            # cached full-slot composite, row-sliced — valid only when
+            # the packed-vs-mixed decision cannot flip under filtering
+            # (otherwise recompute below from the gathered view, as the
+            # eager oracle effectively does)
+            sid = sids.pop()
+            raw = self.slots[sid].key(names)
+            s = self._sel_safe(sid)
+            if s is None:
+                return raw
+            if len(raw) == 0:
+                # every row is an outer-join NULL against an empty build
+                # side; the eager chain gathers zero-filled columns there
+                return np.zeros(len(s), np.int64)
+            return raw[s]
+        # key columns from different sources (e.g. Q5's
+        # (l_suppkey, c_nationkey)) or an encoding-unstable column set:
+        # gather each column, then combine
+        return ops.composite_key(self.columns_view(names), names)
+
+    def key_valid(self, names: Sequence[str]) -> Optional[np.ndarray]:
+        """Rows whose key columns are all non-NULL (None = every row).
+        NULL rows carry clipped representative bytes in `key`, so join
+        matching must exclude them (`ops.join_indices_nullsafe`) — in
+        both this runtime and the eager oracle, NULL keys never match."""
+        out = None
+        for n in names:
+            sid = self.colmap[n]
+            col = self.slots[sid].table[n]
+            cv = None
+            if col.valid is not None and len(col):
+                s = self._sel_safe(sid)
+                cv = col.valid if s is None else col.valid[s]
+            s = self.sel[sid]
+            if sid in self.nullable and s is not None:
+                nn = s >= 0
+                cv = nn if cv is None else cv & nn
+            if cv is not None:
+                out = cv if out is None else out & cv
+        return out
+
+    def columns_view(self, names: Sequence[str]) -> "Table":
+        """Thin materialization of just `names` (expression inputs)."""
+        from repro.relational.table import Table
+        cols = {}
+        for n in names:
+            sid = self.colmap[n]
+            c = self.slots[sid].table[n]
+            s = self.sel[sid]
+            cols[n] = c if s is None else c.gather(s)
+        return Table(cols, self.name)
+
+    # -- composition ---------------------------------------------------
+    @staticmethod
+    def join(probe: "JoinCursor", build: "JoinCursor",
+             build_idx: np.ndarray, probe_idx: np.ndarray,
+             how: str) -> "JoinCursor":
+        slots = dict(probe.slots)
+        sel = {sid: _compose(s, probe_idx)
+               for sid, s in probe.sel.items()}
+        nullable = set(probe.nullable)
+        cols = list(probe.cols)
+        if how in ("inner", "left"):
+            null_build = how == "left"
+            for sid, slot in build.slots.items():
+                slots[sid] = slot
+                if null_build:
+                    sel[sid] = _compose_nullable(build.sel[sid], build_idx)
+                    nullable.add(sid)
+                else:
+                    sel[sid] = _compose(build.sel[sid], build_idx)
+                    if sid in build.nullable:
+                        nullable.add(sid)
+            cols += [(n, sid) for n, sid in build.cols
+                     if n not in probe.colmap]
+        # semi/anti keep probe columns only (as hash_join does)
+        return JoinCursor(slots, sel, cols, nullable, len(probe_idx),
+                          probe.name)
+
+    # -- materialization ----------------------------------------------
+    def materialize(self, names: Optional[Sequence[str]] = None
+                    ) -> Tuple["Table", int]:
+        """Gather payload columns once (all of them, or just `names` for
+        an operator that only reads a subset). Returns
+        (table, gathered_bytes) — the join phase's materialization
+        traffic."""
+        from repro.relational.table import Table
+        keep = None if names is None else set(names)
+        cols = {}
+        nbytes = 0
+        for n, sid in self.cols:
+            if keep is not None and n not in keep:
+                continue
+            c = self.slots[sid].table[n]
+            s = self.sel[sid]
+            if s is not None:
+                c = c.gather(s)
+                nbytes += c.data.nbytes
+            cols[n] = c
+        return Table(cols, self.name), nbytes

@@ -27,10 +27,29 @@ class Vertex:
     mask: np.ndarray              # current validity (bool, len == table)
     base_rows: int = -1           # catalog rows before local predicates
     derived: bool = False         # subquery output (always informative)
+    # composite join keys computed by the transfer phase, stashed per
+    # key-column tuple so the join runtime reuses them (compacted by
+    # the executor) instead of re-deriving per join — "hash once per
+    # query" across both phases
+    raw_keys: Dict[Tuple[str, ...], "np.ndarray"] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def live(self) -> int:
         return int(self.mask.sum())
+
+    def key(self, cols: Sequence[str]) -> "np.ndarray":
+        """Composite join key over `table` for `cols`, computed once per
+        column set and stashed in `raw_keys` — the single get-or-compute
+        site every strategy shares, so the cross-phase key-reuse
+        contract cannot desynchronize."""
+        cols = tuple(cols)
+        k = self.raw_keys.get(cols)
+        if k is None:
+            from repro.relational import ops
+            k = ops.composite_key(self.table, cols)
+            self.raw_keys[cols] = k
+        return k
 
     @property
     def informative(self) -> bool:

@@ -134,11 +134,13 @@ class PredTrans(Strategy):
 
     def _hashed(self, v: Vertex, cols: Sequence[str]) -> EngineKeys:
         """Hash a vertex's key column once and reuse across all edges and
-        passes (the paper's one-scan transformation, vectorized)."""
+        passes (the paper's one-scan transformation, vectorized). The
+        raw composite key is stashed on the vertex so the join phase
+        reuses it too (`repro.core.engine_join`)."""
         key = (v.leaf_id, tuple(cols))
         hk = self._hk_cache.get(key)
         if hk is None:
-            hk = self.engine.keys(ops.composite_key(v.table, cols))
+            hk = self.engine.keys(v.key(cols))
             self._hk_cache[key] = hk
         return hk
 
@@ -243,9 +245,8 @@ class Yannakakis(Strategy):
             if not e.allows(src, dst):
                 return
             vd, vs = vertices[dst], vertices[src]
-            dkeys = ops.composite_key(vd.table, e.endpoint_cols(dst))
-            skeys = ops.composite_key(vs.table, e.endpoint_cols(src))
-            skeys = skeys[vs.mask]
+            dkeys = vd.key(e.endpoint_cols(dst))
+            skeys = vs.key(e.endpoint_cols(src))[vs.mask]
             hit = ops.semi_join_mask(dkeys, skeys)
             vd.mask &= hit
             stats.rows_semijoin_build += len(skeys)

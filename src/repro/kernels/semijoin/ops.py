@@ -1,6 +1,7 @@
 """Public wrappers for the semijoin kernel."""
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -62,3 +63,105 @@ def semi_mask(probe_keys: np.ndarray, build_keys: np.ndarray,
     """R ⋉ S membership mask, end to end through the Pallas kernels."""
     table = semijoin_build(build_keys, build_mask, interpret=interpret)
     return semijoin_probe(table, probe_keys, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# joinmap: build with row payload + lookup (join-runtime primitive)
+# --------------------------------------------------------------------------
+#
+# The jnp mirrors insert rows in the same sequential order as the Pallas
+# build kernel, so both builders produce the identical table layout and
+# can be mixed freely (the engine builds with jnp off-TPU, where the
+# interpreter would serialize the insert loop at Python speed, while the
+# lookup still exercises the Pallas kernel in interpret mode).
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _joinmap_build_jnp(lo, hi, mask, cap: int):
+    h = _k._slot_hash(lo, hi)
+
+    def insert(i, state):
+        klo, khi, occ, row = state
+
+        def cond(s):
+            occupied = occ[s] != 0
+            same = (klo[s] == lo[i]) & (khi[s] == hi[i])
+            return occupied & ~same
+
+        def step(s):
+            return (s + 1) & (cap - 1)
+
+        slot = jax.lax.while_loop(
+            cond, step, (h[i] & jnp.uint32(cap - 1)).astype(jnp.int32))
+
+        def store(st):
+            klo, khi, occ, row = st
+            return (klo.at[slot].set(lo[i]), khi.at[slot].set(hi[i]),
+                    occ.at[slot].set(jnp.uint32(1)),
+                    row.at[slot].set(jnp.uint32(i)))
+
+        return jax.lax.cond(mask[i], store, lambda st: st, state)
+
+    init = tuple(jnp.zeros(cap, jnp.uint32) for _ in range(4))
+    return jax.lax.fori_loop(0, lo.shape[0], insert, init)
+
+
+@jax.jit
+def _joinmap_lookup_jnp(klo, khi, occ, row, lo, hi):
+    cap = klo.shape[0]
+    h = _k._slot_hash(lo, hi)
+    slot = (h & jnp.uint32(cap - 1)).astype(jnp.int32)
+
+    def cond(state):
+        _, resolved, _ = state
+        return ~jnp.all(resolved)
+
+    def step(state):
+        slot, resolved, ans = state
+        s_occ = occ[slot] != 0
+        hit = s_occ & (klo[slot] == lo) & (khi[slot] == hi)
+        ans = jnp.where(hit & ~resolved, row[slot].astype(jnp.int32), ans)
+        resolved = resolved | hit | ~s_occ
+        slot = jnp.where(resolved, slot, (slot + 1) & (cap - 1))
+        return slot, resolved, ans
+
+    init = (slot, jnp.zeros(lo.shape, jnp.bool_),
+            jnp.full(lo.shape, -1, jnp.int32))
+    return jax.lax.while_loop(cond, step, init)[2]
+
+
+def joinmap_build(keys: np.ndarray, use_pallas: bool = True,
+                  interpret: Optional[bool] = None):
+    """Build an open-addressing (key -> row) map. Returns
+    ((klo, khi, occ, row), occupied): `occupied < len(keys)` iff the
+    keys contain duplicates (equal keys dedup into one slot), which is
+    the join engine's fallback signal."""
+    keys = np.asarray(keys)
+    cap = capacity_for(len(keys))
+    lo, hi = hashing.key_halves(_pad_to_tile(keys))
+    mask = _pad_to_tile(np.ones(len(keys), bool), False)
+    if use_pallas:
+        table = _k.build_rows_pallas(jnp.asarray(lo), jnp.asarray(hi),
+                                     jnp.asarray(mask), cap,
+                                     interpret=_interpret(interpret))
+    else:
+        table = _joinmap_build_jnp(jnp.asarray(lo), jnp.asarray(hi),
+                                   jnp.asarray(mask), cap)
+    occupied = int(jnp.sum(table[2]))
+    return table, occupied
+
+
+def joinmap_lookup(table, keys: np.ndarray, use_pallas: bool = True,
+                   interpret: Optional[bool] = None) -> np.ndarray:
+    """Matched build row per probe key (int64), -1 on miss."""
+    klo, khi, occ, row = table
+    keys = np.asarray(keys)
+    lo, hi = hashing.key_halves(_pad_to_tile(keys))
+    if use_pallas:
+        out = _k.lookup_pallas(klo, khi, occ, row, jnp.asarray(lo),
+                               jnp.asarray(hi),
+                               interpret=_interpret(interpret))
+    else:
+        out = _joinmap_lookup_jnp(klo, khi, occ, row, jnp.asarray(lo),
+                                  jnp.asarray(hi))
+    return np.asarray(out)[: len(keys)].astype(np.int64)

@@ -155,6 +155,146 @@ def _probe_kernel(klo_ref, khi_ref, occ_ref, lo_ref, hi_ref, out_ref,
     out_ref[0, :] = found
 
 
+# --------------------------------------------------------------------------
+# joinmap: build with row payload + lookup (the join runtime's primitive)
+# --------------------------------------------------------------------------
+
+
+def _build_rows_kernel(lo_ref, hi_ref, mask_ref, klo_ref, khi_ref, occ_ref,
+                       row_ref, *, cap: int, interpret: bool):
+    """`_build_kernel` plus a row-index lane: slot -> originating build
+    row, so a probe hit resolves to a join partner, not just membership.
+    Duplicate keys overwrite the row lane (last wins) — the join engine
+    only takes this path for duplicate-free build sides, detected from
+    the occupancy count."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        occ_ref[...] = jnp.zeros_like(occ_ref)
+        klo_ref[...] = jnp.zeros_like(klo_ref)
+        khi_ref[...] = jnp.zeros_like(khi_ref)
+        row_ref[...] = jnp.zeros_like(row_ref)
+
+    lo = lo_ref[0, :]
+    hi = hi_ref[0, :]
+    mask = mask_ref[0, :]
+    h = _slot_hash(lo, hi)
+    base = pl.program_id(0) * TILE
+
+    def insert(i, _):
+        if interpret:
+            occ = occ_ref[0, :]
+            klo = klo_ref[0, :]
+            khi = khi_ref[0, :]
+
+            def slot_state(s):
+                return occ[s], klo[s], khi[s]
+        else:
+            def slot_state(s):
+                return occ_ref[0, s], klo_ref[0, s], khi_ref[0, s]
+
+        def find(slot):
+            def cond(s):
+                s_occ, s_lo, s_hi = slot_state(s)
+                occupied = s_occ != 0
+                same = (s_lo == lo[i]) & (s_hi == hi[i])
+                return occupied & ~same
+
+            def step(s):
+                return (s + 1) & (cap - 1)
+
+            return jax.lax.while_loop(cond, step, slot)
+
+        slot0 = (h[i] & jnp.uint32(cap - 1)).astype(jnp.int32)
+        slot = find(slot0)
+
+        @pl.when(mask[i])
+        def _store():
+            klo_ref[0, slot] = lo[i]
+            khi_ref[0, slot] = hi[i]
+            occ_ref[0, slot] = jnp.uint32(1)
+            row_ref[0, slot] = (base + i).astype(jnp.uint32)
+
+        return 0
+
+    jax.lax.fori_loop(0, lo.shape[0], insert, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def build_rows_pallas(lo, hi, mask, cap: int, interpret: bool = True):
+    n = lo.shape[0]
+    assert n % TILE == 0 and cap & (cap - 1) == 0
+    g = n // TILE
+    klo, khi, occ, row = pl.pallas_call(
+        functools.partial(_build_rows_kernel, cap=cap, interpret=interpret),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0))] * 3,
+        out_specs=[pl.BlockSpec((1, cap), lambda i: (0, 0))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((1, cap), jnp.uint32)] * 4,
+        interpret=interpret,
+    )(lo.reshape(g, TILE), hi.reshape(g, TILE),
+      mask.reshape(g, TILE).astype(jnp.uint32))
+    return klo[0], khi[0], occ[0], row[0]
+
+
+def _lookup_kernel(klo_ref, khi_ref, occ_ref, row_ref, lo_ref, hi_ref,
+                   out_ref, *, cap: int):
+    """Tile-vectorized lookup: matched build row index, -1 on miss."""
+    lo = lo_ref[0, :]
+    hi = hi_ref[0, :]
+    h = _slot_hash(lo, hi)
+    slot = (h & jnp.uint32(cap - 1)).astype(jnp.int32)
+    klo = klo_ref[0, :]
+    khi = khi_ref[0, :]
+    occ = occ_ref[0, :]
+    row = row_ref[0, :]
+
+    def cond(state):
+        _, resolved, _ = state
+        return ~jnp.all(resolved)
+
+    def step(state):
+        slot, resolved, ans = state
+        s_lo = klo[slot]
+        s_hi = khi[slot]
+        s_occ = occ[slot] != 0
+        hit = s_occ & (s_lo == lo) & (s_hi == hi)
+        miss = ~s_occ
+        ans = jnp.where(hit & ~resolved, row[slot].astype(jnp.int32), ans)
+        resolved = resolved | hit | miss
+        slot = jnp.where(resolved, slot, (slot + 1) & (cap - 1))
+        return slot, resolved, ans
+
+    init = (slot, jnp.zeros_like(lo, jnp.bool_),
+            jnp.full(lo.shape, -1, jnp.int32))
+    _, _, ans = jax.lax.while_loop(cond, step, init)
+    out_ref[0, :] = ans
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lookup_pallas(klo, khi, occ, row, lo, hi, interpret: bool = True):
+    cap = klo.shape[0]
+    n = lo.shape[0]
+    assert n % TILE == 0
+    g = n // TILE
+    out = pl.pallas_call(
+        functools.partial(_lookup_kernel, cap=cap),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i: (0, 0)),
+            pl.BlockSpec((1, cap), lambda i: (0, 0)),
+            pl.BlockSpec((1, cap), lambda i: (0, 0)),
+            pl.BlockSpec((1, cap), lambda i: (0, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, TILE), jnp.int32),
+        interpret=interpret,
+    )(klo[None, :], khi[None, :], occ[None, :], row[None, :],
+      lo.reshape(g, TILE), hi.reshape(g, TILE))
+    return out.reshape(n)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def probe_pallas(klo, khi, occ, lo, hi, interpret: bool = True):
     cap = klo.shape[0]

@@ -1,1 +1,2 @@
 """Launchers: production mesh, dry-run compiler, roofline, train, serve."""
+from repro.launch import mesh as _mesh  # noqa: F401  (installs jax compat)

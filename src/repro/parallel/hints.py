@@ -22,9 +22,11 @@ import jax
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import get_abstract_mesh
+
 
 def _mesh():
-    m = jax.sharding.get_abstract_mesh()
+    m = get_abstract_mesh()
     return m if m is not None and m.axis_names else None
 
 

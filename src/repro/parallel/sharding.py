@@ -129,6 +129,8 @@ def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
     axes = batch_axes(mesh)
     size = int(np.prod([axis_size(mesh, a) for a in axes]))
     first = axes if (axes and batch % size == 0) else None
+    if isinstance(first, tuple) and len(first) == 1:
+        first = first[0]     # newer PartitionSpec normalizes 1-tuples
     return P(first, *([None] * extra_dims))
 
 

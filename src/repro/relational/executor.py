@@ -5,20 +5,29 @@ Phases (paper §3.1):
      (and execute subquery leaves first, per §3.4);
   1. transfer: the chosen `Strategy` pre-filters the leaf tables
      (no-op for No-Pred-Trans / Bloom-Join);
-  2. join: execute the plan bottom-up over the reduced leaves; Bloom-Join
-     applies its one-hop filter inside each join here.
+  2. join: execute the plan bottom-up over the reduced leaves through the
+     late-materialized join runtime (`repro.core.engine_join`): join
+     subtrees flow as selection-vector cursors, payload columns are
+     gathered once at the first value-needing operator, and join keys are
+     the per-leaf composites already computed by the transfer phase.
+     Bloom-Join applies its one-hop filter inside each join here.
+
+`late_materialize=False` runs the legacy eager path (`ops.hash_join` at
+every node) — kept as the bit-exactness oracle for the lazy runtime.
 
 The executor records the paper's accounting: per-join build (HT) and probe
-(PR) input rows, phase wall-times, and per-vertex reduction factors.
+(PR) input rows, phase wall-times, per-vertex reduction factors, and the
+join phase's materialization traffic in bytes.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.engine_join import JoinCursor, Slot, get_join_engine
 from repro.core.graph import (
     Edge, NoPredTrans, Strategy, TransferStats, Vertex,
 )
@@ -47,6 +56,9 @@ class ExecStats:
     transfer: Optional[TransferStats] = None
     joins: List[JoinStat] = dataclasses.field(default_factory=list)
     result_rows: int = 0
+    # bytes gathered by the join phase when materializing intermediate /
+    # final payload columns (the late-materialization win metric)
+    join_materialized_bytes: int = 0
     subqueries: List["ExecStats"] = dataclasses.field(default_factory=list)
 
     @property
@@ -61,9 +73,19 @@ class ExecStats:
 
 class Executor:
     def __init__(self, catalog: Mapping[str, Table],
-                 strategy: Optional[Strategy] = None):
+                 strategy: Optional[Strategy] = None,
+                 join_backend: str = "numpy",
+                 late_materialize: bool = True):
         self.catalog = dict(catalog)
         self.strategy = strategy or NoPredTrans()
+        self.join_backend = join_backend
+        self.late_materialize = late_materialize
+        self.join_engine = get_join_engine(join_backend)
+
+    def _sub_executor(self) -> "Executor":
+        return Executor(self.catalog, self.strategy,
+                        join_backend=self.join_backend,
+                        late_materialize=self.late_materialize)
 
     # ------------------------------------------------------------------
     def execute(self, plan: PlanNode) -> Tuple[Table, ExecStats]:
@@ -83,13 +105,26 @@ class Executor:
         t0 = time.perf_counter()
         edges = extract_join_graph(plan, vertices)
         stats.transfer = self.strategy.prefilter(vertices, edges)
-        reduced = {lid: v.table.compact(v.mask)
-                   for lid, v in vertices.items()}
+        # compact each vertex once; the transfer phase's composite keys
+        # are compacted alongside and seed the join runtime's key cache
+        slots: Dict[int, Slot] = {}
+        for lid, v in vertices.items():
+            idx = np.flatnonzero(v.mask)
+            full = idx.size == len(v.mask)
+            table = v.table if full else v.table.gather(idx)
+            # seed only keys whose encoding cannot flip under row
+            # filtering (ops.stable_key_encoding) — an unstable 2-col
+            # key is recomputed on the compacted table instead, exactly
+            # as the eager oracle would
+            keys = {cols: (raw if full else raw[idx])
+                    for cols, raw in v.raw_keys.items()
+                    if ops.stable_key_encoding(v.table, cols)}
+            slots[lid] = Slot(table, keys)
         stats.phase_seconds["transfer"] = time.perf_counter() - t0
 
         # -- phase 2: join ---------------------------------------------
         t0 = time.perf_counter()
-        result = self._exec(plan, reduced, stats)
+        result = self._exec(plan, slots, stats)
         stats.phase_seconds["join"] = time.perf_counter() - t0
         stats.result_rows = len(result)
         return result, stats
@@ -98,7 +133,7 @@ class Executor:
     def _resolve_leaf(self, leaf: LeafNode, stats: ExecStats,
                       needed: Optional[set] = None) -> Vertex:
         if isinstance(leaf, SubqueryScan):
-            sub = Executor(self.catalog, self.strategy)
+            sub = self._sub_executor()
             table, sub_stats = sub.execute(leaf.plan)
             stats.subqueries.append(sub_stats)
             table = Table(table.columns, leaf.alias)
@@ -125,35 +160,85 @@ class Executor:
                       np.ones(len(table), bool), base_rows=base_rows)
 
     # ------------------------------------------------------------------
-    def _exec(self, node: PlanNode, leaves: Dict[int, Table],
+    def _exec(self, node: PlanNode, slots: Dict[int, Slot],
               stats: ExecStats) -> Table:
+        out = self._exec_node(node, slots, stats)
+        if isinstance(out, JoinCursor):
+            out = self._materialize(out, stats)
+        return out
+
+    def _materialize(self, cur: JoinCursor, stats: ExecStats,
+                     names: Optional[set] = None) -> Table:
+        if names is not None:
+            avail = [n for n, _ in cur.cols if n in names]
+            if not avail and cur.cols:
+                # a value-free operator (e.g. bare count(*)) still needs
+                # the row count, which a zero-column Table loses
+                avail = [cur.cols[0][0]]
+            table, nbytes = cur.materialize(avail)
+        else:
+            table, nbytes = cur.materialize()
+        stats.join_materialized_bytes += nbytes
+        return table
+
+    @staticmethod
+    def _as_cursor(out: Union[Table, JoinCursor]) -> JoinCursor:
+        return out if isinstance(out, JoinCursor) \
+            else JoinCursor.from_table(out)
+
+    def _exec_node(self, node: PlanNode, slots: Dict[int, Slot],
+                   stats: ExecStats) -> Union[Table, JoinCursor]:
         if isinstance(node, LeafNode):
-            return leaves[node.leaf_id]
+            if not self.late_materialize:
+                return slots[node.leaf_id].table
+            return JoinCursor.from_slot(slots[node.leaf_id])
 
         if isinstance(node, Join):
-            probe = self._exec(node.left, leaves, stats)
-            build = self._exec(node.right, leaves, stats)
+            if not self.late_materialize:
+                return self._exec_join_eager(node, slots, stats)
+            probe = self._as_cursor(self._exec_node(node.left, slots,
+                                                    stats))
+            build = self._as_cursor(self._exec_node(node.right, slots,
+                                                    stats))
             pr_pre = len(probe)
             if (self.strategy.uses_per_join_filter
                     and node.how in ("inner", "semi")):
-                ts = stats.transfer
                 hit = self.strategy.per_join_filter(
-                    build, probe, node.right_on, node.left_on, ts)
-                probe = probe.compact(hit)
-            out = ops.hash_join(build, probe, node.right_on, node.left_on,
-                                how=node.how)
+                    build.columns_view(node.right_on),
+                    probe.columns_view(node.left_on),
+                    node.right_on, node.left_on, stats.transfer)
+                probe = probe.take(np.flatnonzero(
+                    np.asarray(hit, bool)))
+            bidx, pidx = ops.join_indices_nullsafe(
+                build.key(node.right_on), probe.key(node.left_on),
+                how=node.how,
+                build_valid=build.key_valid(node.right_on),
+                probe_valid=probe.key_valid(node.left_on),
+                engine=self.join_engine)
+            out = JoinCursor.join(probe, build, bidx, pidx, node.how)
             stats.joins.append(JoinStat(node.how, len(build), len(probe),
                                         pr_pre, len(out)))
             if node.extra is not None:
-                out = out.compact(np.asarray(node.extra(out), bool))
+                view = out.columns_view(sorted(node.extra.columns()))
+                keep = np.asarray(node.extra(view), bool)
+                out = out.take(np.flatnonzero(keep))
             return out
 
         if isinstance(node, Filter):
-            t = self._exec(node.child, leaves, stats)
+            t = self._exec_node(node.child, slots, stats)
+            if isinstance(t, JoinCursor):
+                view = t.columns_view(sorted(node.predicate.columns()))
+                keep = np.asarray(node.predicate(view), bool)
+                return t.take(np.flatnonzero(keep))
             return t.compact(np.asarray(node.predicate(t), bool))
 
         if isinstance(node, Project):
-            t = self._exec(node.child, leaves, stats)
+            t = self._exec_node(node.child, slots, stats)
+            if isinstance(t, JoinCursor):
+                needed = set()
+                for e in node.exprs.values():
+                    needed |= e.columns()
+                t = self._materialize(t, stats, needed)
             cols = {}
             for name, e in node.exprs.items():
                 if isinstance(e, Col):
@@ -168,8 +253,8 @@ class Executor:
             return Table(cols, t.name)
 
         if isinstance(node, Bind):
-            t = self._exec(node.child, leaves, stats)
-            sub = Executor(self.catalog, self.strategy)
+            t = self._exec(node.child, slots, stats)
+            sub = self._sub_executor()
             sub_t, sub_stats = sub.execute(node.subplan)
             stats.subqueries.append(sub_stats)
             assert len(sub_t) == 1, "Bind subplan must yield one row"
@@ -178,20 +263,58 @@ class Executor:
                                  Column(np.full(len(t), v)))
 
         if isinstance(node, GroupBy):
-            t = self._exec(node.child, leaves, stats)
+            t = self._exec_node(node.child, slots, stats)
+            if isinstance(t, JoinCursor):
+                # having filters aggregate *outputs*, so only the group
+                # keys and agg inputs need values
+                needed = set(node.keys) | {ic for _, _, ic in node.aggs
+                                           if ic}
+                t = self._materialize(t, stats, needed)
             out = ops.group_aggregate(t, node.keys, node.aggs)
             if node.having is not None:
                 out = out.compact(np.asarray(node.having(out), bool))
             return out
 
         if isinstance(node, Sort):
-            return ops.sort_table(self._exec(node.child, leaves, stats),
-                                  node.by)
+            t = self._exec_node(node.child, slots, stats)
+            if isinstance(t, JoinCursor):
+                # order from a thin key view; the payload stays lazy and
+                # is gathered once, already in output order (or trimmed
+                # further by a Limit above)
+                view, nbytes = t.materialize([n for n, _ in node.by])
+                stats.join_materialized_bytes += nbytes
+                return t.take(ops.sort_indices(view, node.by))
+            return ops.sort_table(t, node.by)
 
         if isinstance(node, Limit):
-            return ops.limit(self._exec(node.child, leaves, stats), node.n)
+            t = self._exec_node(node.child, slots, stats)
+            if isinstance(t, JoinCursor):
+                n = min(node.n, len(t))
+                return t.take(np.arange(n, dtype=np.int64))
+            return ops.limit(t, node.n)
 
         raise TypeError(f"unknown plan node {type(node)}")
+
+    # -- legacy eager join (oracle path) --------------------------------
+    def _exec_join_eager(self, node: Join, slots: Dict[int, Slot],
+                         stats: ExecStats) -> Table:
+        probe = self._exec(node.left, slots, stats)
+        build = self._exec(node.right, slots, stats)
+        pr_pre = len(probe)
+        if (self.strategy.uses_per_join_filter
+                and node.how in ("inner", "semi")):
+            ts = stats.transfer
+            hit = self.strategy.per_join_filter(
+                build, probe, node.right_on, node.left_on, ts)
+            probe = probe.compact(hit)
+        out = ops.hash_join(build, probe, node.right_on, node.left_on,
+                            how=node.how)
+        stats.join_materialized_bytes += out.nbytes()
+        stats.joins.append(JoinStat(node.how, len(build), len(probe),
+                                    pr_pre, len(out)))
+        if node.extra is not None:
+            out = out.compact(np.asarray(node.extra(out), bool))
+        return out
 
 
 # --------------------------------------------------------------------------

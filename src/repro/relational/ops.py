@@ -37,14 +37,11 @@ def composite_key(table: Table, names: Sequence[str]) -> np.ndarray:
     """
     if len(names) == 1:
         return table.array(names[0]).astype(np.int64, copy=False)
-    arrays = [table.array(n).astype(np.int64, copy=False) for n in names]
+    cols = [table[n] for n in names]
+    arrays = [c.data.astype(np.int64, copy=False) for c in cols]
     if len(arrays) == 2:
         a, b = arrays
-        in_range = True
-        for x in (a, b):
-            if x.size and (int(x.min()) < 0 or int(x.max()) >= 2**31):
-                in_range = False
-        if in_range:
+        if _packable(cols[0]) and _packable(cols[1]):
             return (a << np.int64(32)) | b
     # hash-combine fallback (canonical, vanishing collision probability)
     key = arrays[0].copy()
@@ -58,6 +55,35 @@ def composite_key(table: Table, names: Sequence[str]) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 
+def _packable(c) -> bool:
+    """Can this column take composite_key's packed path?
+
+    Cached lineage bounds first (O(1) after the first touch of a base
+    buffer); they are conservative, so when they fail the test, fall
+    back to this buffer's exact range — the packed-vs-mixed decision
+    must depend on the values actually present, or two sides holding
+    identical key sets could encode differently and silently never
+    match."""
+    lo, hi = c.value_range()
+    if lo >= 0 and hi < 2**31:
+        return True
+    lo, hi = c.exact_value_range()
+    return lo >= 0 and hi < 2**31
+
+
+def stable_key_encoding(table: Table, names: Sequence[str]) -> bool:
+    """True iff `composite_key(table, names)` row-sliced equals
+    `composite_key` recomputed on any row subset of `table` — i.e. the
+    encoding decision cannot flip under filtering. Single columns and
+    3+-column keys encode value-wise (always stable); a 2-column key is
+    stable when it packs on the full table (subsets inherit the bounds
+    and pack too). The executor uses this to decide whether the transfer
+    phase's keys may seed the join runtime's per-slot cache."""
+    if len(names) != 2:
+        return True
+    return _packable(table[names[0]]) and _packable(table[names[1]])
+
+
 def join_indices(build_key: np.ndarray, probe_key: np.ndarray,
                  how: str = "inner") -> Tuple[np.ndarray, np.ndarray]:
     """Equi-join two key vectors.
@@ -68,51 +94,89 @@ def join_indices(build_key: np.ndarray, probe_key: np.ndarray,
                (probe side is the "left"/outer side here)
       semi   : probe rows with >=1 match (probe_idx only; build_idx == -1)
       anti   : probe rows with no match
+
+    Delegates to the host join engine (`repro.core.engine_join`): the
+    sorted reference below the radix threshold, the radix-partitioned
+    path above it — bit-identical outputs either way.
     """
-    order = np.argsort(build_key, kind="stable")
-    sorted_key = build_key[order]
-    lo = np.searchsorted(sorted_key, probe_key, side="left")
-    hi = np.searchsorted(sorted_key, probe_key, side="right")
-    counts = hi - lo
+    from repro.core.engine_join import get_join_engine
+    return get_join_engine("numpy").join_indices(build_key, probe_key,
+                                                 how=how)
 
-    if how == "semi":
-        sel = np.flatnonzero(counts > 0)
-        return np.full(len(sel), -1, np.int64), sel
-    if how == "anti":
-        sel = np.flatnonzero(counts == 0)
-        return np.full(len(sel), -1, np.int64), sel
 
-    if how == "left":
-        out_counts = np.maximum(counts, 1)
-    elif how == "inner":
-        out_counts = counts
+def key_validity(table: Table, names: Sequence[str]
+                 ) -> Optional[np.ndarray]:
+    """AND of the key columns' validity masks (None = every row valid).
+    A row whose key contains a NULL can never equi-join (`hash_join` /
+    the late-materialized runtime both enforce this): NULL data slots
+    hold representative bytes, which must not leak into key matching."""
+    v = None
+    for n in names:
+        cv = table[n].valid
+        if cv is not None:
+            v = cv if v is None else v & cv
+    return v
+
+
+def join_indices_nullsafe(build_key: np.ndarray, probe_key: np.ndarray,
+                          how: str = "inner",
+                          build_valid: Optional[np.ndarray] = None,
+                          probe_valid: Optional[np.ndarray] = None,
+                          engine=None) -> Tuple[np.ndarray, np.ndarray]:
+    """`join_indices` where rows flagged invalid never match: NULL-key
+    build rows are excluded from the build, NULL-key probe rows match
+    nothing (inner/semi drop them, left emits them unmatched, anti
+    keeps them). Output order contract unchanged. All-valid inputs take
+    the engine fast path untouched."""
+    if engine is None:
+        from repro.core.engine_join import get_join_engine
+        engine = get_join_engine("numpy")
+    if build_valid is not None and bool(build_valid.all()):
+        build_valid = None
+    if probe_valid is not None and bool(probe_valid.all()):
+        probe_valid = None
+    bkeep = None
+    if build_valid is not None:
+        bkeep = np.flatnonzero(build_valid)
+        build_key = build_key[bkeep]
+    if probe_valid is None:
+        bidx, pidx = engine.join_indices(build_key, probe_key, how=how)
     else:
-        raise ValueError(how)
-
-    total = int(out_counts.sum())
-    probe_idx = np.repeat(np.arange(len(probe_key), dtype=np.int64),
-                          out_counts)
-    # offsets within each probe row's match run
-    starts = np.zeros(len(out_counts) + 1, np.int64)
-    np.cumsum(out_counts, out=starts[1:])
-    within = np.arange(total, dtype=np.int64) - starts[probe_idx]
-    build_pos = lo[probe_idx] + within
-    build_idx = order[np.minimum(build_pos, len(order) - 1)] \
-        if len(order) else np.full(total, -1, np.int64)
-    if how == "left":
-        unmatched = counts[probe_idx] == 0
-        build_idx = np.where(unmatched, np.int64(-1), build_idx)
-    return build_idx.astype(np.int64), probe_idx
+        pkeep = np.flatnonzero(probe_valid)
+        bidx, pidx = engine.join_indices(build_key, probe_key[pkeep],
+                                         how=how)
+        pidx = pkeep[pidx]
+        dead = np.flatnonzero(~probe_valid)
+        if how in ("left", "anti") and dead.size:
+            # unmatched NULL-key probe rows re-enter in probe order
+            bidx = np.concatenate([bidx,
+                                   np.full(dead.size, -1, np.int64)])
+            pidx = np.concatenate([pidx, dead])
+            order = np.argsort(pidx, kind="stable")
+            bidx, pidx = bidx[order], pidx[order]
+    if bkeep is not None and len(bidx) and bkeep.size:
+        # (an all-invalid build leaves bidx all -1 — nothing to remap)
+        neg = bidx < 0
+        if neg.any():
+            bidx = np.where(neg, np.int64(-1),
+                            bkeep[np.where(neg, 0, bidx)])
+        else:
+            bidx = bkeep[bidx]
+    return bidx, pidx
 
 
 def hash_join(build: Table, probe: Table,
               build_keys: Sequence[str], probe_keys: Sequence[str],
               how: str = "inner",
               build_prefix: str = "", probe_prefix: str = "") -> Table:
-    """Materializing equi-join. ``how='left'`` keeps all probe rows."""
+    """Materializing equi-join. ``how='left'`` keeps all probe rows.
+    Rows whose key columns contain NULLs never match."""
     bk = composite_key(build, build_keys)
     pk = composite_key(probe, probe_keys)
-    bidx, pidx = join_indices(bk, pk, how=how)
+    bidx, pidx = join_indices_nullsafe(
+        bk, pk, how=how,
+        build_valid=key_validity(build, build_keys),
+        probe_valid=key_validity(probe, probe_keys))
     cols = {}
     pt = probe if not probe_prefix else probe.with_prefix(probe_prefix)
     bt = build if not build_prefix else build.with_prefix(build_prefix)
@@ -151,6 +215,39 @@ def semi_join_mask(probe_key: np.ndarray, build_key: np.ndarray
 _AGGS = ("sum", "min", "max", "count", "countv", "mean", "nunique")
 
 
+def _group_codes(key: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Group id per row (0..ngroups-1, ids ordered by key value).
+
+    Physically clustered keys (TPC-H fact tables are generated ordered
+    by orderkey, the common GROUP BY column) take an O(n) boundary-scan
+    path; otherwise np.unique's sort. Both return identical codes."""
+    n = len(key)
+    if n and bool(np.all(key[:-1] <= key[1:])):
+        flag = np.empty(n, bool)
+        flag[0] = True
+        np.not_equal(key[1:], key[:-1], out=flag[1:])
+        inverse = np.cumsum(flag) - 1
+        return inverse, int(inverse[-1]) + 1
+    _, inverse = np.unique(key, return_inverse=True)
+    return inverse.astype(np.int64, copy=False), \
+        (int(inverse.max()) + 1 if n else 0)
+
+
+def _value_codes(v: np.ndarray, n_fallback: int
+                 ) -> Tuple[np.ndarray, np.int64]:
+    """Small dense codes for nunique values: direct range offset when
+    the value span is modest (one O(n) min/max scan, no sort), else
+    np.unique compaction. The choice never changes any count — codes
+    only need to be injective within the span."""
+    if v.size:
+        vmin, vmax = int(v.min()), int(v.max())
+        span = vmax - vmin + 1
+        if span <= max(4 * len(v), 1 << 20):
+            return v - np.int64(vmin), np.int64(span)
+    _, codes = np.unique(v, return_inverse=True)
+    return codes.astype(np.int64, copy=False), np.int64(n_fallback + 1)
+
+
 def group_aggregate(table: Table, keys: Sequence[str],
                     aggs: Sequence[Tuple[str, str, str]]) -> Table:
     """GROUP BY keys with aggs = [(out_name, agg, in_col)].
@@ -161,8 +258,7 @@ def group_aggregate(table: Table, keys: Sequence[str],
     """
     if keys:
         key = composite_key(table, keys)
-        uniq, inverse = np.unique(key, return_inverse=True)
-        ngroups = len(uniq)
+        inverse, ngroups = _group_codes(key)
         # representative row per group for key columns
         rep = np.zeros(ngroups, np.int64)
         rep[inverse] = np.arange(len(key))
@@ -190,11 +286,10 @@ def group_aggregate(table: Table, keys: Sequence[str],
             continue
         if agg == "nunique":
             v = table.array(in_col).astype(np.int64)
-            _, vcodes = np.unique(v, return_inverse=True)  # compact range
-            pair = inverse.astype(np.int64) * np.int64(len(table) + 1) \
-                + vcodes.astype(np.int64)
+            vcodes, span = _value_codes(v, len(table))
+            pair = inverse.astype(np.int64) * span + vcodes
             upair = np.unique(pair)
-            grp = (upair // np.int64(len(table) + 1)).astype(np.int64)
+            grp = (upair // span).astype(np.int64)
             cols[out_name] = Column(
                 np.bincount(grp, minlength=ngroups).astype(np.int64))
             continue
@@ -229,14 +324,22 @@ def group_aggregate(table: Table, keys: Sequence[str],
 # --------------------------------------------------------------------------
 
 
-def sort_table(table: Table, by: Sequence[Tuple[str, bool]]) -> Table:
-    """by = [(col, ascending)] in major-to-minor order."""
+def sort_indices(table: Table, by: Sequence[Tuple[str, bool]]
+                 ) -> np.ndarray:
+    """Stable row order for `by` = [(col, ascending)] (major-to-minor).
+    Only reads the sort-key columns — the executor's lazy path feeds a
+    thin key view and reorders its cursor with the result."""
     keys = []
     for name, asc in reversed(by):  # lexsort: last key is primary
         v = table.array(name)
         keys.append(v if asc else _descending_view(v))
     idx = np.lexsort(tuple(keys)) if keys else np.arange(len(table))
-    return table.gather(idx.astype(np.int64))
+    return idx.astype(np.int64)
+
+
+def sort_table(table: Table, by: Sequence[Tuple[str, bool]]) -> Table:
+    """by = [(col, ascending)] in major-to-minor order."""
+    return table.gather(sort_indices(table, by))
 
 
 def _descending_view(v: np.ndarray) -> np.ndarray:

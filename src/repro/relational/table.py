@@ -38,6 +38,34 @@ class Column:
     def is_string(self) -> bool:
         return self.dictionary is not None
 
+    def value_range(self) -> tuple:
+        """Cached (min, max) value bounds, computed once per buffer.
+
+        Conservative under row selection: `gather`/`compact` children
+        inherit the parent's bounds instead of rescanning, so the
+        composite-key packability check (`ops.composite_key`) is O(1)
+        after the first touch of a column lineage. Conservative bounds
+        may over-report the range — callers that need a data-exact
+        answer when these bounds fail a test use `exact_value_range`.
+        Empty columns report (0, -1)."""
+        r = self.__dict__.get("_vrange")
+        if r is None:
+            r = self.exact_value_range()
+            object.__setattr__(self, "_vrange", r)
+        return r
+
+    def exact_value_range(self) -> tuple:
+        """(min, max) of *this buffer's* values (cached separately from
+        the inherited lineage bounds)."""
+        r = self.__dict__.get("_vrange_exact")
+        if r is None:
+            if len(self.data) == 0:
+                r = (0, -1)
+            else:
+                r = (int(self.data.min()), int(self.data.max()))
+            object.__setattr__(self, "_vrange_exact", r)
+        return r
+
     def gather(self, idx: np.ndarray) -> "Column":
         """Take rows by index; idx == -1 yields a NULL row."""
         has_neg = bool((idx < 0).any()) if idx.size else False
@@ -54,7 +82,11 @@ class Column:
             v = np.ones(idx.shape, dtype=bool) if valid is None else valid.copy()
             v[idx < 0] = False
             valid = v
-        return Column(data, self.dictionary, valid)
+        out = Column(data, self.dictionary, valid)
+        r = self.__dict__.get("_vrange")
+        if r is not None:      # bounds survive selection (conservative)
+            object.__setattr__(out, "_vrange", r)
+        return out
 
     def decode(self) -> np.ndarray:
         """Materialize strings (testing/debug only)."""

@@ -9,6 +9,13 @@ def tpch_small():
     return generate(sf=0.01, seed=7)
 
 
+@pytest.fixture(scope="session")
+def tpch_tiny():
+    """Minimal catalog for interpret-mode kernel paths (sf=0.002)."""
+    from repro.tpch import generate
+    return generate(sf=0.002, seed=11)
+
+
 @pytest.fixture()
 def rng():
     return np.random.default_rng(0)
