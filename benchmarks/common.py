@@ -1,7 +1,6 @@
 """Shared benchmark utilities: catalog cache, timed strategy runs."""
 from __future__ import annotations
 
-import time
 from typing import Dict, Optional
 
 _CATALOGS: Dict[float, dict] = {}

@@ -3,7 +3,6 @@ paper's technique, DESIGN.md §4): same selection, different pre-filtering.
 """
 from __future__ import annotations
 
-import time
 
 
 def run(n_docs: int = 100_000):

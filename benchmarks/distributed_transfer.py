@@ -1,4 +1,4 @@
-"""Distributed predicate transfer: per-edge cost accounting.
+"""Distributed transfer AND join: per-edge / per-query cost accounting.
 
 Honest framing (corrected from an earlier draft — see EXPERIMENTS.md
 §Perf DB-iteration 6): with p shards, combining per-shard Bloom filters
@@ -34,6 +34,62 @@ def edge_cost(live_keys: int, probe_rows: int, shards: int = 256,
         # per-row probe cost ratio measured by kernel_bench (beta)
         "probe_rows": probe_rows,
     }
+
+
+def distributed_join_main(sf: float, nshards: int = 8):
+    """Wire-byte accounting for the distributed join runtime
+    (`repro.core.engine_join_dist`) over all 20 TPC-H queries with
+    predicate transfer on: per query, the bytes the chosen strategies
+    would move across `nshards` shards — broadcast-build (all-gathered
+    transfer-shrunk build keys) vs radix all-to-all shuffle (both sides
+    repartitioned). Bytes are exchange-backend-independent (the
+    simulated and `shard_map` exchanges ship the same packed blocks),
+    so this bench runs anywhere and the numbers match the device run.
+    """
+    import time
+
+    from benchmarks.common import catalog
+    from repro.core.transfer import make_strategy
+    from repro.relational import Executor
+    from repro.tpch import QUERIES, build_query
+
+    cat = catalog(sf)
+
+    def dist_joins(stats):
+        """This executor's joins plus every (nested) subquery's — each
+        sub-executor forks its own engine, so the union is disjoint."""
+        out = list(stats.dist.joins) if stats.dist is not None else []
+        for sub in stats.subqueries:
+            out += dist_joins(sub)
+        return out
+
+    rows = []
+    print("query,joins,broadcasts,shuffles,broadcast_KiB,shuffle_KiB,"
+          "seconds")
+    for qn in sorted(QUERIES):
+        ex = Executor(cat, make_strategy("pred-trans"),
+                      engine="distributed", dist_shards=nshards)
+        t0 = time.perf_counter()
+        _, stats = ex.execute(build_query(qn, sf=sf))
+        dt = time.perf_counter() - t0
+        joins = dist_joins(stats)
+        row = {"query": f"Q{qn}",
+               "joins": len(joins),
+               "broadcasts": sum(j.strategy == "broadcast"
+                                 for j in joins),
+               "shuffles": sum(j.strategy == "shuffle" for j in joins),
+               "broadcast_bytes": sum(j.broadcast_bytes for j in joins),
+               "shuffle_bytes": sum(j.shuffle_bytes for j in joins),
+               "seconds": dt}
+        rows.append(row)
+        print(f"Q{qn},{row['joins']},{row['broadcasts']},"
+              f"{row['shuffles']},{row['broadcast_bytes']/2**10:.1f},"
+              f"{row['shuffle_bytes']/2**10:.1f},{dt:.3f}")
+    tot_b = sum(r["broadcast_bytes"] for r in rows)
+    tot_s = sum(r["shuffle_bytes"] for r in rows)
+    print(f"total broadcast {tot_b/2**20:.2f} MiB, "
+          f"shuffle {tot_s/2**20:.2f} MiB over {nshards} shards")
+    return {"nshards": nshards, "per_query": rows}
 
 
 def main():

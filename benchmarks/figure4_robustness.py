@@ -2,7 +2,6 @@
 least order-sensitive (bounded intermediates)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import STRATEGIES, run_query
 

@@ -12,8 +12,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+# runnable as `python benchmarks/run.py` from the repo root: make the
+# `benchmarks` package importable regardless of how we were invoked
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def q5_transfer_split(sf: float, backends=("numpy", "jax")):
@@ -188,6 +193,8 @@ def main() -> None:
         "figure4_robustness": lambda: figure4_robustness.main(args.sf),
         "kernel_bench": lambda: kernel_bench.main(args.kernel_n),
         "distributed_transfer": distributed_transfer.main,
+        "distributed_join": lambda: distributed_transfer
+        .distributed_join_main(args.sf),
         "curation_bench": lambda: curation_bench.main(
             max(int(args.sf * 1_000_000), 20_000)),
     }
@@ -216,7 +223,6 @@ def main() -> None:
         # produce (e.g. the recorded seed baseline) survive
         # regeneration. A different --sf starts fresh — every number
         # in the file shares one provenance.
-        import os
         doc = {}
         if os.path.exists(args.json):
             try:
@@ -240,8 +246,12 @@ def main() -> None:
             doc["check_paired_speedup"] = measure_paired_speedups(args.sf)
         if "kernel_bench" in results:
             doc["kernel_bench_ns_per_row"] = dict(results["kernel_bench"])
-        with open(args.json, "w") as f:
+        if "distributed_join" in results:
+            doc["distributed_join"] = results["distributed_join"]
+        tmp = args.json + ".tmp"
+        with open(tmp, "w") as f:       # atomic: a crash mid-dump must
             json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, args.json)      # not truncate the baseline
         print(f"wrote {args.json}", file=sys.stderr)
 
 

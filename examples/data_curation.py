@@ -19,7 +19,6 @@ def main():
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.configs import get_smoke_config
     from repro.data import CurationPipeline, synthetic_corpus

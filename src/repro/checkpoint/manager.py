@@ -23,7 +23,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np

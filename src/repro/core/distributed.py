@@ -24,7 +24,6 @@ points); this module owns the collectives.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -49,8 +49,6 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-_LITTLE_ENDIAN = sys.byteorder == "little"
-
 import jax
 import jax.numpy as jnp
 
@@ -59,6 +57,8 @@ from repro.core.bloom import (
     BLOCK_BITS, DEFAULT_BITS_PER_KEY, DEFAULT_K, LANES, BloomFilter,
     _bucket, _pad, blocks_for,
 )
+
+_LITTLE_ENDIAN = sys.byteorder == "little"
 
 BACKENDS = ("numpy", "jax", "pallas")
 

@@ -118,6 +118,64 @@ def _partition_ids(keys: np.ndarray, bits: int) -> np.ndarray:
     return (h >> np.uint64(64 - bits)).astype(np.int32)
 
 
+def join_partition(build_key: np.ndarray, build_rows: np.ndarray,
+                   probe_key: np.ndarray, probe_rows: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray, np.ndarray]:
+    """Sorted join of one hash partition; returns the `parts` record
+    consumed by `assemble_partitioned_join`: (build_rows, sort_order,
+    lo, probe_rows, match_counts). `*_rows` map partition-local
+    positions back to global row ids — equal keys always hash to one
+    partition and the stable partitioning preserved their global
+    relative order, so the assembled output is bit-identical to
+    `sorted_join_indices` over the unpartitioned inputs."""
+    so = np.argsort(build_key, kind="stable")
+    skeys = build_key[so]
+    lo = np.searchsorted(skeys, probe_key, side="left")
+    c = np.searchsorted(skeys, probe_key, side="right") - lo
+    return build_rows, so, lo, probe_rows, c
+
+
+def assemble_partitioned_join(npr: int, counts: np.ndarray, parts,
+                              how: str
+                              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Scatter per-partition join results back into global probe order.
+
+    `counts[probe_row]` is that row's match count; `parts` is a list of
+    `join_partition` records. Shared by the single-host radix path and
+    the distributed shuffle path (`repro.core.engine_join_dist`) — both
+    reduce to 'partition, join each partition sorted, scatter back'."""
+    if how == "semi":
+        sel = np.flatnonzero(counts > 0)
+        return np.full(len(sel), -1, np.int64), sel
+    if how == "anti":
+        sel = np.flatnonzero(counts == 0)
+        return np.full(len(sel), -1, np.int64), sel
+    if how == "left":
+        out_counts = np.maximum(counts, 1)
+    elif how == "inner":
+        out_counts = counts
+    else:
+        raise ValueError(how)
+
+    starts = np.zeros(npr + 1, np.int64)
+    np.cumsum(out_counts, out=starts[1:])
+    total = int(starts[-1])
+    probe_idx = np.repeat(np.arange(npr, dtype=np.int64), out_counts)
+    build_idx = np.full(total, -1, np.int64)   # left-join unmatched stay -1
+    for brows, so, lo, prows, c in parts:
+        tot = int(c.sum())
+        if tot == 0:
+            continue
+        rep = np.repeat(np.arange(len(prows), dtype=np.int64), c)
+        lst = np.zeros(len(prows) + 1, np.int64)
+        np.cumsum(c, out=lst[1:])
+        within = np.arange(tot, dtype=np.int64) - lst[rep]
+        grows = brows[so[lo[rep] + within]]
+        build_idx[starts[prows[rep]] + within] = grows
+    return build_idx, probe_idx
+
+
 def radix_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
                        how: str = "inner", target_rows: int = 8192
                        ) -> Tuple[np.ndarray, np.ndarray]:
@@ -144,43 +202,11 @@ def radix_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
         bseg = ob[sb[i]:sb[i + 1]]
         if pseg.size == 0 or bseg.size == 0:
             continue
-        so = np.argsort(build_key[bseg], kind="stable")
-        skeys = build_key[bseg][so]
-        pkeys = probe_key[pseg]
-        lo = np.searchsorted(skeys, pkeys, side="left")
-        c = np.searchsorted(skeys, pkeys, side="right") - lo
-        counts[pseg] = c
-        parts.append((bseg, so, lo, pseg, c))
-
-    if how == "semi":
-        sel = np.flatnonzero(counts > 0)
-        return np.full(len(sel), -1, np.int64), sel
-    if how == "anti":
-        sel = np.flatnonzero(counts == 0)
-        return np.full(len(sel), -1, np.int64), sel
-    if how == "left":
-        out_counts = np.maximum(counts, 1)
-    elif how == "inner":
-        out_counts = counts
-    else:
-        raise ValueError(how)
-
-    starts = np.zeros(npr + 1, np.int64)
-    np.cumsum(out_counts, out=starts[1:])
-    total = int(starts[-1])
-    probe_idx = np.repeat(np.arange(npr, dtype=np.int64), out_counts)
-    build_idx = np.full(total, -1, np.int64)   # left-join unmatched stay -1
-    for bseg, so, lo, pseg, c in parts:
-        tot = int(c.sum())
-        if tot == 0:
-            continue
-        rep = np.repeat(np.arange(len(pseg), dtype=np.int64), c)
-        lst = np.zeros(len(pseg) + 1, np.int64)
-        np.cumsum(c, out=lst[1:])
-        within = np.arange(tot, dtype=np.int64) - lst[rep]
-        grows = bseg[so[lo[rep] + within]]
-        build_idx[starts[pseg[rep]] + within] = grows
-    return build_idx, probe_idx
+        part = join_partition(build_key[bseg], bseg,
+                              probe_key[pseg], pseg)
+        counts[pseg] = part[-1]
+        parts.append(part)
+    return assemble_partitioned_join(npr, counts, parts, how)
 
 
 class JoinEngine:

@@ -1,0 +1,403 @@
+"""Distributed late-materialized join runtime (DESIGN.md §9).
+
+Predicate transfer is already sharded (`repro.core.distributed`, §6);
+this module distributes the *join* phase it feeds. The unit of
+distribution is PR 2's selection-vector cursor: a join intermediate is
+never a table, it is per-leaf row-index vectors, and those vectors are
+**row-sharded contiguously** across the `data` axis of a `jax.Mesh` —
+shard ``s`` owns cursor rows ``[bounds[s], bounds[s+1])``. Because the
+join output contract emits probe rows in original order, every join
+maps a contiguous probe range to a contiguous output range, so cursor
+shards stay contiguous through arbitrary join trees and the host-side
+global vector is exactly the concatenation of the shard-local ones
+(the off-TPU host-mirror idiom from §7/§8).
+
+Per join edge the runtime picks one of two exchange strategies, by
+modeled wire cost:
+
+* **broadcast-build** — all-gather the (transfer-shrunk) build-side key
+  vector so every shard joins its probe range against the full build
+  side locally. Wire: ``(p-1)·8·|B|`` bytes. This mirrors
+  `distributed_bloom_build`'s OR-all-reduce shape and is the common
+  case after predicate transfer, where build sides are dimension
+  tables cut to thousands of live rows.
+* **radix all-to-all shuffle** — both sides hash-partition by the top
+  ``log2(p)`` bits of the same Fibonacci hash the single-host radix
+  join uses; partition ``t`` of every shard travels to shard ``t`` in
+  one all-to-all; each shard sorted-joins its partition and results
+  scatter back to global probe order. Wire: ``≈ (1-1/p)·12·(|B|+|P|)``
+  bytes (12 = packed key halves + row id). The large–large fact-join
+  case.
+
+Both strategies reproduce `sorted_join_indices` bit for bit: broadcast
+because each shard sees the whole build side and a contiguous probe
+slice; shuffle because equal keys share a partition, the stable
+partitioning + source-ordered all-to-all reassembly preserve global
+relative order within each partition, and the scatter-back is the same
+`assemble_partitioned_join` the single-host radix path uses.
+
+The exchange itself is backend-pluggable, same split as every engine in
+this tree: `MeshExchange` runs real `lax.all_to_all` / `lax.all_gather`
+collectives inside `jax.shard_map` over a 1-D device mesh (int64 keys
+travel as `(lo, hi)` uint32 halves — `repro.core.hashing` — and blocks
+pad to power-of-two buckets so the jit cache stays O(log n));
+`SimulatedExchange` is the numpy mirror used when only one XLA device
+exists. Results are identical; tests assert it under 8 forced host
+devices (tests/test_distributed.py, tests/test_engine_join_dist.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine_join import (
+    JoinEngine, _partition_ids, assemble_partitioned_join, get_join_engine,
+    join_partition,
+)
+
+#: wire bytes per shuffled row: packed (key_lo, key_hi, row_id) uint32
+ROW_WIRE_BYTES = 12
+#: wire bytes per broadcast key: (key_lo, key_hi) uint32
+KEY_WIRE_BYTES = 8
+
+
+def shard_bounds(n: int, nshards: int) -> np.ndarray:
+    """Contiguous near-even row ranges: shard s owns [b[s], b[s+1])."""
+    return (np.arange(nshards + 1, dtype=np.int64) * n) // nshards
+
+
+def shard_cursor(cursor, nshards: int) -> List:
+    """Row-shard a `JoinCursor` into its per-shard cursors (the device
+    layout this runtime distributes; the input cursor is their host
+    mirror). Materializing the shards in order and concatenating equals
+    materializing the whole cursor — the cursor-sharding invariant."""
+    b = shard_bounds(len(cursor), nshards)
+    return [cursor.take(np.arange(b[s], b[s + 1], dtype=np.int64))
+            for s in range(nshards)]
+
+
+def _pack(keys: np.ndarray, rowids: Optional[np.ndarray] = None
+          ) -> np.ndarray:
+    """int64 keys (+ row ids) -> uint32 [n, 2|3] wire blocks."""
+    from repro.core.hashing import key_halves
+    lo, hi = key_halves(keys)
+    cols = [lo, hi]
+    if rowids is not None:
+        cols.append(rowids.astype(np.uint32))
+    return np.stack(cols, axis=1)
+
+
+def _unpack_keys(block: np.ndarray) -> np.ndarray:
+    u = block[:, 0].astype(np.uint64) | (block[:, 1].astype(np.uint64) << 32)
+    return u.view(np.int64)
+
+
+def _unpack_rowids(block: np.ndarray) -> np.ndarray:
+    return block[:, 2].astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# exchange backends
+# --------------------------------------------------------------------------
+
+
+class SimulatedExchange:
+    """Host mirror of the device collectives: same block layout, same
+    source-ordered reassembly, zero jax involvement. Used when the
+    process has a single XLA device (the default test session)."""
+
+    device_backed = False
+
+    def __init__(self, nshards: int):
+        if nshards < 1 or nshards & (nshards - 1):
+            raise ValueError(f"nshards must be a power of two, "
+                             f"got {nshards}")
+        self.nshards = nshards
+
+    def all_to_all(self, blocks: List[List[np.ndarray]]) -> List[np.ndarray]:
+        """blocks[s][t] = shard s's rows bound for shard t; returns
+        received[t] = concat over sources s in shard order (global row
+        order, since shards own ascending contiguous ranges)."""
+        p = self.nshards
+        return [np.concatenate([blocks[s][t] for s in range(p)])
+                for t in range(p)]
+
+    def all_gather(self, shards: List[np.ndarray]) -> np.ndarray:
+        return np.concatenate(shards)
+
+
+class MeshExchange:
+    """Real collectives over a 1-D `data` mesh inside `jax.shard_map`
+    (via the `launch/mesh.py` compat shims, so old and new jax spell it
+    identically). Blocks pad to a shared power-of-two bucket so each
+    (nshards, bucket, width) shape jit-compiles once."""
+
+    device_backed = True
+
+    def __init__(self, mesh=None, axis: str = "data",
+                 nshards: Optional[int] = None):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.mesh import make_data_mesh
+        from repro.parallel.sharding import axis_size
+        if mesh is None:
+            mesh = make_data_mesh(nshards, axis=axis)
+        self.mesh, self.axis = mesh, axis
+        self.nshards = axis_size(mesh, axis)
+        if self.nshards < 1 or self.nshards & (self.nshards - 1):
+            raise ValueError(f"nshards must be a power of two, "
+                             f"got {self.nshards}")
+        p = self.nshards
+
+        def a2a(x):              # local [1, p, B, C] -> [1, p, B, C]
+            return jax.lax.all_to_all(x[0], axis, 0, 0)[None]
+
+        def ag(x):               # local [1, B, C] -> [1, p, B, C]
+            return jax.lax.all_gather(x[0], axis)[None]
+
+        spec = P(axis)
+        self._a2a = jax.jit(jax.shard_map(
+            a2a, mesh=mesh, in_specs=spec, out_specs=spec))
+        self._ag = jax.jit(jax.shard_map(
+            ag, mesh=mesh, in_specs=spec, out_specs=spec))
+        self._sharding = NamedSharding(mesh, spec)
+        self._p = p
+
+    def _bucket(self, n: int) -> int:
+        from repro.core.bloom import _bucket
+        return _bucket(n, floor=8)
+
+    def _put(self, arr: np.ndarray):
+        import jax
+        return jax.device_put(arr, self._sharding)
+
+    def all_to_all(self, blocks: List[List[np.ndarray]]) -> List[np.ndarray]:
+        p = self._p
+        width = blocks[0][0].shape[1]
+        cnt = np.array([[len(blocks[s][t]) for t in range(p)]
+                        for s in range(p)], np.int64)
+        bucket = self._bucket(int(cnt.max()))
+        send = np.zeros((p, p, bucket, width), np.uint32)
+        for s in range(p):
+            for t in range(p):
+                send[s, t, :cnt[s, t]] = blocks[s][t]
+        recv = np.asarray(self._a2a(self._put(send)))
+        # recv[t, s] = block s->t; concat sources in shard order
+        return [np.concatenate([recv[t, s, :cnt[s, t]] for s in range(p)])
+                for t in range(p)]
+
+    def all_gather(self, shards: List[np.ndarray]) -> np.ndarray:
+        p = self._p
+        width = shards[0].shape[1]
+        cnt = [len(s) for s in shards]
+        bucket = self._bucket(max(cnt))
+        send = np.zeros((p, bucket, width), np.uint32)
+        for s in range(p):
+            send[s, :cnt[s]] = shards[s]
+        recv = np.asarray(self._ag(self._put(send)))
+        # every shard holds the full gather; reassemble from shard 0's
+        # copy (source-ordered => original global order)
+        return np.concatenate([recv[0, s, :cnt[s]] for s in range(p)])
+
+
+# --------------------------------------------------------------------------
+# distributed join strategies
+# --------------------------------------------------------------------------
+
+
+def broadcast_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
+                           how: str, exchange, engine: JoinEngine
+                           ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """All-gather the build keys; each shard joins its contiguous probe
+    range against the full build side. Returns (build_idx, probe_idx,
+    wire_bytes)."""
+    p = exchange.nshards
+    bb = shard_bounds(len(build_key), p)
+    full = _unpack_keys(exchange.all_gather(
+        [_pack(build_key[bb[s]:bb[s + 1]]) for s in range(p)]))
+    pb = shard_bounds(len(probe_key), p)
+    bidx, pidx = [], []
+    for s in range(p):
+        gb, gp = engine.join_indices(full, probe_key[pb[s]:pb[s + 1]],
+                                     how=how)
+        bidx.append(gb)
+        pidx.append(gp + pb[s])
+    wire = (p - 1) * len(build_key) * KEY_WIRE_BYTES
+    return np.concatenate(bidx), np.concatenate(pidx), wire
+
+
+def shuffle_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
+                         how: str, exchange
+                         ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Hash-partition both sides to their owning shard with one
+    all-to-all, sorted-join each partition locally, scatter back to
+    global probe order. Returns (build_idx, probe_idx, wire_bytes)."""
+    p = exchange.nshards
+    bits = int(np.log2(p))
+    npr = len(probe_key)
+    wire = 0
+    sides = []
+    for keys in (build_key, probe_key):
+        bounds = shard_bounds(len(keys), p)
+        pid = _partition_ids(keys, bits)
+        blocks = []
+        for s in range(p):
+            seg = slice(bounds[s], bounds[s + 1])
+            rows = np.arange(bounds[s], bounds[s + 1], dtype=np.int64)
+            order = np.argsort(pid[seg], kind="stable")
+            cuts = np.searchsorted(pid[seg][order], np.arange(p + 1))
+            packed = _pack(keys[seg][order], rows[order])
+            blocks.append([packed[cuts[t]:cuts[t + 1]] for t in range(p)])
+            moved = len(rows) - int(cuts[s + 1] - cuts[s])
+            wire += moved * ROW_WIRE_BYTES
+        sides.append(exchange.all_to_all(blocks))
+    recv_b, recv_p = sides
+
+    counts = np.zeros(npr, np.int64)
+    parts = []
+    for t in range(p):
+        brows = _unpack_rowids(recv_b[t])
+        prows = _unpack_rowids(recv_p[t])
+        if brows.size == 0 or prows.size == 0:
+            continue
+        part = join_partition(_unpack_keys(recv_b[t]), brows,
+                              _unpack_keys(recv_p[t]), prows)
+        counts[prows] = part[-1]
+        parts.append(part)
+    bidx, pidx = assemble_partitioned_join(npr, counts, parts, how)
+    return bidx, pidx, wire
+
+
+# --------------------------------------------------------------------------
+# engine + stats
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistJoinStat:
+    how: str
+    strategy: str            # broadcast | shuffle | local
+    build_rows: int
+    probe_rows: int
+    shuffle_bytes: int
+    broadcast_bytes: int
+
+
+@dataclasses.dataclass
+class DistStats:
+    nshards: int
+    device_backed: bool
+    joins: List[DistJoinStat] = dataclasses.field(default_factory=list)
+
+    @property
+    def shuffle_bytes(self) -> int:
+        return sum(j.shuffle_bytes for j in self.joins)
+
+    @property
+    def broadcast_bytes(self) -> int:
+        return sum(j.broadcast_bytes for j in self.joins)
+
+    def strategy_counts(self):
+        out = {}
+        for j in self.joins:
+            out[j.strategy] = out.get(j.strategy, 0) + 1
+        return out
+
+
+class DistributedJoinEngine(JoinEngine):
+    """`join_indices` over row-sharded key vectors.
+
+    Plugs into the same `ops.join_indices_nullsafe` seam as every other
+    engine, so NULL-key handling (-1 cursor slots excluded before the
+    engine, re-mapped after) and the executor's cursor composition are
+    shared with the single-host path — which stays the bit-exactness
+    oracle. `stats` accumulates per-join strategy/byte accounting; the
+    executor `fork()`s the engine per `execute()` so each query's stats
+    object stays immutable after the call returns.
+    """
+
+    backend = "distributed"
+
+    def __init__(self, nshards: Optional[int] = None,
+                 local_backend: str = "numpy",
+                 device: Optional[bool] = None, mesh=None):
+        self.local = get_join_engine(local_backend)
+        if device is None:
+            # auto: device-backed only when the requested shard count
+            # actually fits the device mesh (a power of two no larger
+            # than the device count); otherwise simulate — an explicit
+            # dist_shards must not crash on a smaller machine
+            dc = _device_count()
+            fits = nshards is None or (nshards <= dc
+                                       and nshards & (nshards - 1) == 0)
+            device = mesh is not None or (dc > 1 and fits)
+        if device:
+            self.exchange = MeshExchange(mesh=mesh, nshards=nshards)
+        else:
+            self.exchange = SimulatedExchange(nshards or 4)
+        self.nshards = self.exchange.nshards
+        self.stats = DistStats(self.nshards, self.exchange.device_backed)
+
+    def fork(self) -> "DistributedJoinEngine":
+        """A view sharing this engine's exchange (and its jit caches)
+        with a fresh stats sink — one per executor, so per-query byte
+        accounting never mixes across executors or subqueries."""
+        eng = object.__new__(DistributedJoinEngine)
+        eng.local = self.local
+        eng.exchange = self.exchange
+        eng.nshards = self.nshards
+        eng.stats = DistStats(self.nshards, self.exchange.device_backed)
+        return eng
+
+    def join_indices(self, build_key, probe_key, how="inner"):
+        nb, npr = len(build_key), len(probe_key)
+        p = self.nshards
+        if p == 1 or nb == 0 or npr == 0 or max(nb, npr) >= 1 << 32:
+            self.stats.joins.append(
+                DistJoinStat(how, "local", nb, npr, 0, 0))
+            return self.local.join_indices(build_key, probe_key, how=how)
+        # modeled wire cost; the crossover the bench measures (§9)
+        est_bcast = (p - 1) * nb * KEY_WIRE_BYTES
+        est_shuf = (nb + npr) * ROW_WIRE_BYTES * (p - 1) // p
+        if est_bcast <= est_shuf:
+            bidx, pidx, wire = broadcast_join_indices(
+                build_key, probe_key, how, self.exchange, self.local)
+            self.stats.joins.append(
+                DistJoinStat(how, "broadcast", nb, npr, 0, wire))
+        else:
+            bidx, pidx, wire = shuffle_join_indices(
+                build_key, probe_key, how, self.exchange)
+            self.stats.joins.append(
+                DistJoinStat(how, "shuffle", nb, npr, wire, 0))
+        return bidx, pidx
+
+
+_BASE_ENGINES = {}
+
+
+def get_distributed_engine(nshards: Optional[int] = None,
+                           local_backend: str = "numpy",
+                           device: Optional[bool] = None
+                           ) -> DistributedJoinEngine:
+    """Forked engine over a cached base — the (jitted) exchange is
+    shared across executors and queries (mirrors `get_join_engine`),
+    the stats sink is private to the caller."""
+    key = (nshards, local_backend, device)
+    base = _BASE_ENGINES.get(key)
+    if base is None:
+        base = DistributedJoinEngine(nshards=nshards,
+                                     local_backend=local_backend,
+                                     device=device)
+        _BASE_ENGINES[key] = base
+    return base.fork()
+
+
+def _device_count() -> int:
+    try:
+        import jax
+        return jax.device_count()
+    except Exception:           # jax unavailable/uninitializable: simulate
+        return 1

@@ -23,8 +23,7 @@ import numpy as np
 
 from repro.core.transfer import Strategy, make_strategy
 from repro.relational import Executor, Table, col
-from repro.relational.expr import between
-from repro.relational.plan import GroupBy, Join, Project, Scan, Sort
+from repro.relational.plan import Join, Project, Scan, Sort
 
 
 def synthetic_corpus(n_docs: int = 20_000, chunks_per_doc: int = 8,

@@ -5,7 +5,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.flashattn import flashattn as _k
 

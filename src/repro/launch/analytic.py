@@ -23,7 +23,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-import numpy as np
 
 from repro.configs import SHAPES, ShapeSpec
 from repro.models.common import ModelConfig, moe_layer_indices

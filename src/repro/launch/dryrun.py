@@ -30,7 +30,6 @@ import traceback
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_skip_reason

@@ -111,3 +111,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for unit tests (requires forced host devices)."""
     return _make_mesh(shape, axes)
+
+
+def make_data_mesh(nshards=None, axis="data"):
+    """1-D row-sharding mesh for the distributed join/transfer runtimes:
+    `nshards` devices on a single `axis` (default: the largest
+    power-of-two device count available — the shuffle partitioner
+    requires a power of two)."""
+    if nshards is None:
+        n = jax.device_count()
+        nshards = 1 << (max(n, 1).bit_length() - 1)
+    return _make_mesh((nshards,), (axis,))

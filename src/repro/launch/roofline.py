@@ -14,7 +14,7 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_skip_reason
 from repro.launch.analytic import (

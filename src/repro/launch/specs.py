@@ -10,7 +10,7 @@ dry-run's memory_analysis, recorded in EXPERIMENTS.md §Dry-run).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

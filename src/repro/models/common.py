@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -98,9 +98,6 @@ class ModelConfig:
         if self.moe is None:
             return total
         m = self.moe
-        n_moe_layers = sum(
-            1 for i in range(self.n_layers)
-            if self.layer_kind(i) == "attn" or True) // 1
         # count routed expert params then scale by top_k/num_experts
         per_expert = 3 * self.d_model * m.d_ff_expert
         n_moe = len(moe_layer_indices(self))

@@ -16,7 +16,7 @@ norms in fp32.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -485,7 +485,6 @@ def _ssd_chunked(xh, dt, a_log, B, C, chunk: int):
     Returns y [b,s,h,p], final_state [b,h,p,n].
     """
     b, s, hh, pp = xh.shape
-    n = B.shape[-1]
     assert s % chunk == 0
     c = s // chunk
     A = -jnp.exp(a_log.astype(jnp.float32))                  # [h]

@@ -12,8 +12,7 @@ Caches: softmax-attention layers carry a static-capacity `KVCache`
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -177,7 +176,6 @@ class Model:
     # ------------------------------------------------------------------
     def embed_inputs(self, params, batch: Batch):
         cfg = self.cfg
-        from repro.parallel import hints as HT
         x = params["embed"][batch.tokens]
         if cfg.frontend == "vision_stub" and batch.extra is not None:
             patches = batch.extra.astype(cfg.dtype) @ params["patch_proj"]

@@ -16,7 +16,6 @@ EXPERIMENTS.md §Perf iteration 1).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
 
 import jax
 import numpy as np

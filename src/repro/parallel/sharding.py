@@ -16,7 +16,7 @@ whisper's odd 51865 vocab).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -59,6 +59,10 @@ class ExecStats:
     # bytes gathered by the join phase when materializing intermediate /
     # final payload columns (the late-materialization win metric)
     join_materialized_bytes: int = 0
+    # distributed runtime accounting (engine="distributed" only):
+    # per-join strategy + shuffle/broadcast wire bytes
+    # (repro.core.engine_join_dist.DistStats)
+    dist: Optional[object] = None
     subqueries: List["ExecStats"] = dataclasses.field(default_factory=list)
 
     @property
@@ -75,21 +79,50 @@ class Executor:
     def __init__(self, catalog: Mapping[str, Table],
                  strategy: Optional[Strategy] = None,
                  join_backend: str = "numpy",
-                 late_materialize: bool = True):
+                 late_materialize: bool = True,
+                 engine: str = "single",
+                 dist_shards: Optional[int] = None,
+                 dist_device: Optional[bool] = None):
+        """`engine="single"` (default) runs the late-materialized join
+        runtime on one host; `engine="distributed"` routes every join
+        through `repro.core.engine_join_dist` — row-sharded cursors,
+        broadcast/all-to-all key exchange over `dist_shards` shards
+        (default: the device mesh when >1 XLA device exists, else 4
+        simulated shards). Results are bit-identical; the single-host
+        engine is the distributed runtime's correctness oracle."""
+        if engine not in ("single", "distributed"):
+            raise ValueError(f"unknown engine {engine!r}; "
+                             "choose 'single' or 'distributed'")
         self.catalog = dict(catalog)
         self.strategy = strategy or NoPredTrans()
         self.join_backend = join_backend
         self.late_materialize = late_materialize
-        self.join_engine = get_join_engine(join_backend)
+        self.engine = engine
+        self.dist_shards = dist_shards
+        self.dist_device = dist_device
+        if engine == "distributed":
+            from repro.core.engine_join_dist import get_distributed_engine
+            self.join_engine = get_distributed_engine(
+                dist_shards, join_backend, dist_device)
+        else:
+            self.join_engine = get_join_engine(join_backend)
 
     def _sub_executor(self) -> "Executor":
         return Executor(self.catalog, self.strategy,
                         join_backend=self.join_backend,
-                        late_materialize=self.late_materialize)
+                        late_materialize=self.late_materialize,
+                        engine=self.engine,
+                        dist_shards=self.dist_shards,
+                        dist_device=self.dist_device)
 
     # ------------------------------------------------------------------
     def execute(self, plan: PlanNode) -> Tuple[Table, ExecStats]:
         stats = ExecStats(strategy=self.strategy.name)
+        if self.engine == "distributed":
+            # fresh fork per execute(): a prior call's returned stats
+            # object must keep describing that call
+            self.join_engine = self.join_engine.fork()
+            stats.dist = self.join_engine.stats
 
         # -- phase 0: leaves (with projection pushdown) ------------------
         t0 = time.perf_counter()

@@ -9,7 +9,6 @@ dictionary, then reduced to an integer code test), and date arithmetic
 """
 from __future__ import annotations
 
-import fnmatch
 import re
 from typing import Any, Callable, Optional, Sequence
 

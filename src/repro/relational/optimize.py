@@ -11,7 +11,7 @@ those plans are executed by nested executors which do their own pushdown.
 """
 from __future__ import annotations
 
-from typing import Optional, Set
+from typing import Set
 
 from repro.relational.plan import (
     Bind, Filter, GroupBy, Join, Limit, PlanNode, Project, Scan, Sort,

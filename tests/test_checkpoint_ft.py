@@ -1,6 +1,5 @@
 """Checkpointing (sync/async/retention/reshard-shape) and fault-tolerance
 (preempt -> resume, straggler detection)."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,274 @@
+"""Distributed join runtime (`repro.core.engine_join_dist`):
+
+* property suite: hash-partition + all-to-all + local join (and the
+  broadcast-build strategy) over 1/2/4/8 shards is bit-exact with the
+  single-host `sorted_join_indices` reference — all `how` modes,
+  duplicate keys, negative keys, empty sides;
+* NULL-key (-1 cursor slot) propagation through distributed joins vs
+  the single-host path;
+* bit-exactness of all 20 TPC-H query results for
+  `Executor(engine="distributed")` against the single-host oracle —
+  simulated shards on one XLA device, real `shard_map` collectives when
+  the session has more (the CI multi-device job).
+
+The real-device exchange is additionally covered in
+tests/test_distributed.py via subprocesses with forced host devices.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # property tests skip, rest run
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **kw):                # no-op decorators keep the
+        return lambda f: pytest.mark.skip("hypothesis missing")(f)
+
+    def settings(*a, **kw):             # module importable without it
+        return lambda f: f
+
+    class st:                           # strategies resolved lazily at
+        def __getattr__(self, name):    # decoration time only
+            raise AttributeError(name)
+
+        @staticmethod
+        def lists(*a, **kw):
+            return None
+
+        @staticmethod
+        def integers(*a, **kw):
+            return None
+
+        @staticmethod
+        def sampled_from(*a, **kw):
+            return None
+
+from repro.core.engine_join import (  # noqa: E402
+    NumpyJoinEngine, sorted_join_indices,
+)
+from repro.core.engine_join_dist import (  # noqa: E402
+    DistributedJoinEngine, SimulatedExchange, broadcast_join_indices,
+    get_distributed_engine, shard_bounds, shard_cursor,
+    shuffle_join_indices,
+)
+from repro.relational import Executor, Table, col  # noqa: E402
+from repro.relational.plan import Join, Scan  # noqa: E402
+from repro.tpch import QUERIES, build_query  # noqa: E402
+
+HOWS = ("inner", "left", "semi", "anti")
+SHARDS = (1, 2, 4, 8)
+
+keys = st.lists(st.integers(min_value=-4, max_value=14),
+                min_size=0, max_size=60)
+
+
+def _assert_matches_reference(bk, pk, how, nshards):
+    eb, ep = sorted_join_indices(bk, pk, how)
+    ex = SimulatedExchange(nshards)
+    if len(bk) and len(pk) and nshards > 1:
+        gb, gp, wire = shuffle_join_indices(bk, pk, how, ex)
+        np.testing.assert_array_equal(gb, eb,
+                                      err_msg=f"shuffle/{how}/{nshards}")
+        np.testing.assert_array_equal(gp, ep,
+                                      err_msg=f"shuffle/{how}/{nshards}")
+        assert wire >= 0
+    gb, gp, _ = broadcast_join_indices(bk, pk, how, ex,
+                                       NumpyJoinEngine())
+    np.testing.assert_array_equal(gb, eb,
+                                  err_msg=f"broadcast/{how}/{nshards}")
+    np.testing.assert_array_equal(gp, ep,
+                                  err_msg=f"broadcast/{how}/{nshards}")
+
+
+@settings(max_examples=60, deadline=None)
+@given(keys, keys, st.sampled_from(HOWS), st.sampled_from(SHARDS))
+def test_shuffle_and_broadcast_match_reference(a, b, how, nshards):
+    """Duplicate-heavy small-domain keys: every strategy must reproduce
+    the single-host reference over any shard count."""
+    _assert_matches_reference(np.array(a, np.int64),
+                              np.array(b, np.int64), how, nshards)
+
+
+def test_strategies_match_reference_deterministic():
+    """Hypothesis-free mirror of the property test (runs everywhere)."""
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        nb, npr = int(rng.integers(0, 120)), int(rng.integers(0, 160))
+        bk = rng.integers(-5, 30, nb).astype(np.int64)
+        pk = rng.integers(-5, 35, npr).astype(np.int64)
+        for how in HOWS:
+            for p in SHARDS:
+                _assert_matches_reference(bk, pk, how, p)
+
+
+def test_engine_strategy_choice_and_byte_accounting():
+    """Small build => broadcast (transfer-shrunk dimension case), big
+    symmetric build => shuffle; wire bytes land in the right counter."""
+    eng = DistributedJoinEngine(nshards=4, device=False)
+    small_b = np.arange(10, dtype=np.int64)
+    big_p = np.arange(10_000, dtype=np.int64) % 10
+    eng.join_indices(small_b, big_p, "inner")
+    assert eng.stats.joins[-1].strategy == "broadcast"
+    assert eng.stats.joins[-1].broadcast_bytes == 3 * 10 * 8
+    assert eng.stats.joins[-1].shuffle_bytes == 0
+
+    big_b = np.arange(8_000, dtype=np.int64)
+    eng.join_indices(big_b, big_p, "inner")
+    assert eng.stats.joins[-1].strategy == "shuffle"
+    assert eng.stats.joins[-1].shuffle_bytes > 0
+    assert eng.stats.joins[-1].broadcast_bytes == 0
+
+    eng.join_indices(np.array([], np.int64), big_p, "inner")
+    assert eng.stats.joins[-1].strategy == "local"
+    assert eng.stats.strategy_counts() == {"broadcast": 1, "shuffle": 1,
+                                           "local": 1}
+
+
+def test_forked_engines_share_exchange_but_not_stats():
+    a = get_distributed_engine(4, device=False)
+    b = get_distributed_engine(4, device=False)
+    assert a.exchange is b.exchange
+    a.join_indices(np.arange(5, dtype=np.int64),
+                   np.arange(9, dtype=np.int64), "inner")
+    assert len(a.stats.joins) == 1 and len(b.stats.joins) == 0
+
+
+def test_shard_bounds_cover_and_stay_contiguous():
+    for n in (0, 1, 7, 64, 1000):
+        for p in SHARDS:
+            b = shard_bounds(n, p)
+            assert b[0] == 0 and b[-1] == n
+            assert (np.diff(b) >= 0).all()
+            assert int(np.diff(b).sum()) == n
+
+
+# --------------------------------------------------------------------------
+# cursor-level: NULL slots, sharding invariant, full plans
+# --------------------------------------------------------------------------
+
+
+def _assert_tables_exact(a: Table, b: Table, ctx):
+    assert a.names == b.names, ctx
+    assert len(a) == len(b), (ctx, len(a), len(b))
+    for n in a.names:
+        va = a[n].valid if a[n].valid is not None \
+            else np.ones(len(a), bool)
+        vb = b[n].valid if b[n].valid is not None \
+            else np.ones(len(b), bool)
+        np.testing.assert_array_equal(va, vb, err_msg=str((ctx, n)))
+        np.testing.assert_array_equal(a[n].data[va], b[n].data[vb],
+                                      err_msg=str((ctx, n)))
+
+
+def test_null_cursor_slots_through_distributed_joins():
+    """A left join's -1 cursor slots flow into a second, distributed
+    join: NULL keys must never match, identically to the single-host
+    runtime, for every second-join mode and shard count."""
+    cat = {
+        "ta": Table.from_arrays({"a": np.arange(40, dtype=np.int64),
+                                 "k": np.arange(40, dtype=np.int64) * 3},
+                                "ta"),
+        "tb": Table.from_arrays({"k2": np.arange(0, 60, 2,
+                                                 dtype=np.int64),
+                                 "b": np.arange(30, dtype=np.int64)},
+                                "tb"),
+        "td": Table.from_arrays({"b2": np.arange(0, 30, 3,
+                                                 dtype=np.int64),
+                                 "d": np.arange(10, dtype=np.int64) * 7},
+                                "td"),
+    }
+    for how2 in HOWS:
+        plan = Join(Join(Scan("ta"), Scan("tb", filter=col("b") < 20),
+                         ["k"], ["k2"], how="left"),
+                    Scan("td"), ["b"], ["b2"], how=how2)
+        ref, _ = Executor(cat).execute(plan)
+        for p in (2, 4):
+            got, stats = Executor(cat, engine="distributed",
+                                  dist_shards=p,
+                                  dist_device=False).execute(plan)
+            _assert_tables_exact(ref, got, (how2, p))
+            assert stats.dist is not None
+
+
+@settings(max_examples=30, deadline=None)
+@given(keys, keys, keys, st.sampled_from(HOWS), st.sampled_from(HOWS),
+       st.sampled_from((2, 4, 8)))
+def test_distributed_composition_matches_single_host(ka, kb, kc, how1,
+                                                     how2, nshards):
+    """(A ⋈ B) ⋈ C with random modes, including the duplicate-key and
+    left-join NULL-slot cases, over random shard counts."""
+    cat = {
+        "ta": Table.from_arrays({"a_key": np.array(ka, np.int64),
+                                 "a_val": np.arange(len(ka)) * 10}, "ta"),
+        "tb": Table.from_arrays({"b_key": np.array(kb, np.int64),
+                                 "b_val": np.arange(len(kb)) * 100}, "tb"),
+        "tc": Table.from_arrays({"c_key": np.array(kc, np.int64),
+                                 "c_val": np.arange(len(kc)) * 7}, "tc"),
+    }
+    on2 = "a_key" if how1 in ("semi", "anti") else "b_key"
+    plan = Join(Join(Scan("ta"), Scan("tb"), ["a_key"], ["b_key"],
+                     how=how1),
+                Scan("tc"), [on2], ["c_key"], how=how2)
+    ref, _ = Executor(cat).execute(plan)
+    got, _ = Executor(cat, engine="distributed", dist_shards=nshards,
+                      dist_device=False).execute(plan)
+    _assert_tables_exact(ref, got, (how1, how2, nshards))
+
+
+def test_shard_cursor_materialization_invariant(tpch_small):
+    """Materializing the per-shard cursors in shard order and stacking
+    equals materializing the host-mirror cursor whole — the invariant
+    that lets survivors stay sharded until the first value-needing
+    operator."""
+    from repro.core.engine_join import JoinCursor, Slot
+    from repro.relational import ops
+
+    lineitem = tpch_small["lineitem"]
+    orders = tpch_small["orders"]
+    cur = JoinCursor.from_slot(Slot(lineitem))
+    bidx, pidx = ops.join_indices_nullsafe(
+        ops.composite_key(orders, ["o_orderkey"]),
+        ops.composite_key(lineitem, ["l_orderkey"]), how="inner")
+    cur = JoinCursor.join(cur, JoinCursor.from_slot(Slot(orders)),
+                          bidx, pidx, "inner")
+    whole, _ = cur.materialize(["l_orderkey", "o_totalprice"])
+    for p in (2, 8):
+        shards = shard_cursor(cur, p)
+        assert sum(len(s) for s in shards) == len(cur)
+        parts = [s.materialize(["l_orderkey", "o_totalprice"])[0]
+                 for s in shards]
+        for name in whole.names:
+            np.testing.assert_array_equal(
+                whole[name].data,
+                np.concatenate([t[name].data for t in parts]),
+                err_msg=(name, p))
+
+
+# --------------------------------------------------------------------------
+# TPC-H: all 20 queries bit-exact vs the single-host oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qn", sorted(QUERIES))
+def test_tpch_distributed_engine_bit_exact(tpch_small, qn):
+    """Simulated shards on a single-device session; real `shard_map`
+    collectives when the session was launched with forced host devices
+    (the CI multi-device job runs this file under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    ref, _ = Executor(tpch_small).execute(build_query(qn, sf=0.01))
+    got, stats = Executor(tpch_small, engine="distributed").execute(
+        build_query(qn, sf=0.01))
+    _assert_tables_exact(ref, got, qn)
+    assert stats.dist is not None and stats.dist.nshards >= 2
+    assert stats.dist.joins, "no joins routed through the runtime"
+
+
+def test_tpch_q5_records_wire_bytes(tpch_small):
+    _, stats = Executor(tpch_small, engine="distributed").execute(
+        build_query(5, sf=0.01))
+    d = stats.dist
+    assert d.shuffle_bytes + d.broadcast_bytes > 0
+    counts = d.strategy_counts()
+    assert counts.get("broadcast", 0) + counts.get("shuffle", 0) > 0

@@ -1,7 +1,6 @@
 """HLO collective parser: synthetic snippets + a real compiled module."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo import collective_bytes, collective_stats
 

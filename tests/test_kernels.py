@@ -7,7 +7,7 @@ import pytest
 from repro.core import bloom as core_bloom, hashing
 from repro.kernels.bloom import bloom as kb
 from repro.kernels.bloom import bloom_build, bloom_probe, bloom_transfer
-from repro.kernels.semijoin import semi_mask, semijoin_build, semijoin_probe
+from repro.kernels.semijoin import semi_mask
 from repro.kernels.semijoin.ref import semi_mask_ref
 
 

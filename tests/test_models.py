@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES, applicable_cells, get_config, \
+from repro.configs import ARCHS, applicable_cells, get_config, \
     get_smoke_config
 from repro.models.model import Batch, Model
 

@@ -6,7 +6,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.relational import Table, col, isin, like, ops
+from repro.relational import Table, col, isin, like
 from repro.relational.expr import between, case, not_like, substring
 from repro.relational.ops import (
     composite_key, group_aggregate, hash_join, join_indices, semi_join_mask,

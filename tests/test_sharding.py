@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.configs import ARCHS, get_config
 from repro.models.model import Model
 from repro.parallel import sharding as S
 

@@ -1,6 +1,5 @@
 """Training substrate: optimizers, microbatching invariance, remat,
 gradient compression, loss goes down on a tiny model."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
