@@ -219,6 +219,54 @@ class JoinEngine:
                      ) -> Tuple[np.ndarray, np.ndarray]:
         raise NotImplementedError
 
+    def join_indices_valid(self, build_key: np.ndarray,
+                           probe_key: np.ndarray, how: str = "inner",
+                           build_valid: Optional[np.ndarray] = None,
+                           probe_valid: Optional[np.ndarray] = None
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+        """`join_indices` under the engine NULL contract: rows flagged
+        invalid never match. Inner/semi drop NULL-key probe rows, left
+        emits them unmatched (build_idx == -1), anti keeps them;
+        NULL-key build rows never appear in the output. Output order is
+        the standard contract (probe rows in original order).
+
+        Default implementation: compact invalid rows out, run the
+        backend's all-valid fast path, remap indices back to the
+        caller's row space. Engines for which host-global compaction is
+        wrong (the distributed runtime) override this."""
+        if build_valid is not None and bool(build_valid.all()):
+            build_valid = None
+        if probe_valid is not None and bool(probe_valid.all()):
+            probe_valid = None
+        bkeep = None
+        if build_valid is not None:
+            bkeep = np.flatnonzero(build_valid)
+            build_key = build_key[bkeep]
+        if probe_valid is None:
+            bidx, pidx = self.join_indices(build_key, probe_key, how=how)
+        else:
+            pkeep = np.flatnonzero(probe_valid)
+            bidx, pidx = self.join_indices(build_key, probe_key[pkeep],
+                                           how=how)
+            pidx = pkeep[pidx]
+            dead = np.flatnonzero(~probe_valid)
+            if how in ("left", "anti") and dead.size:
+                # unmatched NULL-key probe rows re-enter in probe order
+                bidx = np.concatenate([bidx,
+                                       np.full(dead.size, -1, np.int64)])
+                pidx = np.concatenate([pidx, dead])
+                order = np.argsort(pidx, kind="stable")
+                bidx, pidx = bidx[order], pidx[order]
+        if bkeep is not None and len(bidx) and bkeep.size:
+            # (an all-invalid build leaves bidx all -1 — nothing to remap)
+            neg = bidx < 0
+            if neg.any():
+                bidx = np.where(neg, np.int64(-1),
+                                bkeep[np.where(neg, 0, bidx)])
+            else:
+                bidx = bkeep[bidx]
+        return bidx, pidx
+
 
 class NumpyJoinEngine(JoinEngine):
     """Host path: sorted reference below `radix_min` build rows, the

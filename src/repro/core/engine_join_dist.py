@@ -61,6 +61,9 @@ from repro.core.engine_join import (
 ROW_WIRE_BYTES = 12
 #: wire bytes per broadcast key: (key_lo, key_hi) uint32
 KEY_WIRE_BYTES = 8
+#: extra wire bytes per row when a validity plane travels alongside the
+#: key halves (nullable join keys only; all-valid sides ship without it)
+VALID_WIRE_BYTES = 4
 
 
 def shard_bounds(n: int, nshards: int) -> np.ndarray:
@@ -78,14 +81,19 @@ def shard_cursor(cursor, nshards: int) -> List:
             for s in range(nshards)]
 
 
-def _pack(keys: np.ndarray, rowids: Optional[np.ndarray] = None
-          ) -> np.ndarray:
-    """int64 keys (+ row ids) -> uint32 [n, 2|3] wire blocks."""
+def _pack(keys: np.ndarray, rowids: Optional[np.ndarray] = None,
+          valid: Optional[np.ndarray] = None) -> np.ndarray:
+    """int64 keys (+ row ids, + validity plane) -> uint32 [n, 2..4]
+    wire blocks. The validity plane travels last and only when the side
+    actually has NULL keys — all-valid sides keep the original block
+    layout (and wire byte counts) untouched."""
     from repro.core.hashing import key_halves
     lo, hi = key_halves(keys)
     cols = [lo, hi]
     if rowids is not None:
         cols.append(rowids.astype(np.uint32))
+    if valid is not None:
+        cols.append(valid.astype(np.uint32))
     return np.stack(cols, axis=1)
 
 
@@ -96,6 +104,16 @@ def _unpack_keys(block: np.ndarray) -> np.ndarray:
 
 def _unpack_rowids(block: np.ndarray) -> np.ndarray:
     return block[:, 2].astype(np.int64)
+
+
+def _drop_invalid(block: np.ndarray, has_valid: bool) -> np.ndarray:
+    """Receiver-side NULL filter: rows whose validity plane is 0 never
+    match, so they leave the partition before the local join. Dropping
+    preserves the block's (global, stable) row order, which is what
+    makes the result bit-identical to the compact-then-join oracle."""
+    if not has_valid:
+        return block
+    return block[block[:, -1] != 0]
 
 
 # --------------------------------------------------------------------------
@@ -209,62 +227,95 @@ class MeshExchange:
 
 
 def broadcast_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
-                           how: str, exchange, engine: JoinEngine
+                           how: str, exchange, engine: JoinEngine,
+                           build_valid: Optional[np.ndarray] = None,
+                           probe_valid: Optional[np.ndarray] = None
                            ) -> Tuple[np.ndarray, np.ndarray, int]:
     """All-gather the build keys; each shard joins its contiguous probe
     range against the full build side. Returns (build_idx, probe_idx,
-    wire_bytes)."""
+    wire_bytes).
+
+    A nullable build side ships its validity plane alongside the key
+    halves (gathered NULL build rows must not match anywhere); probe
+    validity never travels — probe rows stay on their home shard, so
+    each shard applies its own probe-validity slice locally."""
     p = exchange.nshards
     bb = shard_bounds(len(build_key), p)
-    full = _unpack_keys(exchange.all_gather(
-        [_pack(build_key[bb[s]:bb[s + 1]]) for s in range(p)]))
+    gathered = exchange.all_gather(
+        [_pack(build_key[bb[s]:bb[s + 1]],
+               valid=None if build_valid is None
+               else build_valid[bb[s]:bb[s + 1]])
+         for s in range(p)])
+    full = _unpack_keys(gathered)
+    full_valid = None if build_valid is None else gathered[:, -1] != 0
     pb = shard_bounds(len(probe_key), p)
     bidx, pidx = [], []
     for s in range(p):
-        gb, gp = engine.join_indices(full, probe_key[pb[s]:pb[s + 1]],
-                                     how=how)
+        gb, gp = engine.join_indices_valid(
+            full, probe_key[pb[s]:pb[s + 1]], how=how,
+            build_valid=full_valid,
+            probe_valid=None if probe_valid is None
+            else probe_valid[pb[s]:pb[s + 1]])
         bidx.append(gb)
         pidx.append(gp + pb[s])
-    wire = (p - 1) * len(build_key) * KEY_WIRE_BYTES
+    row_bytes = KEY_WIRE_BYTES + (VALID_WIRE_BYTES
+                                  if build_valid is not None else 0)
+    wire = (p - 1) * len(build_key) * row_bytes
     return np.concatenate(bidx), np.concatenate(pidx), wire
 
 
 def shuffle_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
-                         how: str, exchange
+                         how: str, exchange,
+                         build_valid: Optional[np.ndarray] = None,
+                         probe_valid: Optional[np.ndarray] = None
                          ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Hash-partition both sides to their owning shard with one
     all-to-all, sorted-join each partition locally, scatter back to
-    global probe order. Returns (build_idx, probe_idx, wire_bytes)."""
+    global probe order. Returns (build_idx, probe_idx, wire_bytes).
+
+    Nullable sides ship a validity plane alongside (key halves, row id);
+    the receiving shard drops invalid rows before its partition join
+    (`_drop_invalid`). NULL-key probe rows therefore keep their match
+    count at 0, which is exactly the NULL contract: inner/semi drop
+    them, left emits them unmatched, anti keeps them — all in global
+    probe order, bit-identical to the compact-then-join oracle."""
     p = exchange.nshards
     bits = int(np.log2(p))
     npr = len(probe_key)
     wire = 0
     sides = []
-    for keys in (build_key, probe_key):
+    for keys, kvalid in ((build_key, build_valid),
+                         (probe_key, probe_valid)):
         bounds = shard_bounds(len(keys), p)
         pid = _partition_ids(keys, bits)
+        row_bytes = ROW_WIRE_BYTES + (VALID_WIRE_BYTES
+                                      if kvalid is not None else 0)
         blocks = []
         for s in range(p):
             seg = slice(bounds[s], bounds[s + 1])
             rows = np.arange(bounds[s], bounds[s + 1], dtype=np.int64)
             order = np.argsort(pid[seg], kind="stable")
             cuts = np.searchsorted(pid[seg][order], np.arange(p + 1))
-            packed = _pack(keys[seg][order], rows[order])
+            packed = _pack(keys[seg][order], rows[order],
+                           valid=None if kvalid is None
+                           else kvalid[seg][order])
             blocks.append([packed[cuts[t]:cuts[t + 1]] for t in range(p)])
             moved = len(rows) - int(cuts[s + 1] - cuts[s])
-            wire += moved * ROW_WIRE_BYTES
+            wire += moved * row_bytes
         sides.append(exchange.all_to_all(blocks))
     recv_b, recv_p = sides
 
     counts = np.zeros(npr, np.int64)
     parts = []
     for t in range(p):
-        brows = _unpack_rowids(recv_b[t])
-        prows = _unpack_rowids(recv_p[t])
+        bblock = _drop_invalid(recv_b[t], build_valid is not None)
+        pblock = _drop_invalid(recv_p[t], probe_valid is not None)
+        brows = _unpack_rowids(bblock)
+        prows = _unpack_rowids(pblock)
         if brows.size == 0 or prows.size == 0:
             continue
-        part = join_partition(_unpack_keys(recv_b[t]), brows,
-                              _unpack_keys(recv_p[t]), prows)
+        part = join_partition(_unpack_keys(bblock), brows,
+                              _unpack_keys(pblock), prows)
         counts[prows] = part[-1]
         parts.append(part)
     bidx, pidx = assemble_partitioned_join(npr, counts, parts, how)
@@ -353,23 +404,48 @@ class DistributedJoinEngine(JoinEngine):
         return eng
 
     def join_indices(self, build_key, probe_key, how="inner"):
+        return self.join_indices_valid(build_key, probe_key, how=how)
+
+    def join_indices_valid(self, build_key, probe_key, how="inner",
+                           build_valid=None, probe_valid=None):
+        """NULL-aware distributed join. Unlike the host engines (which
+        compact invalid rows out up front — a host-global gather this
+        runtime must not depend on), nullable sides keep their rows
+        sharded in place and ship a validity plane alongside the key
+        halves through the exchange; invalid rows are dropped shard-
+        locally on the receiving side. All-valid joins are bit-and-byte
+        identical to the pre-validity wire format."""
+        if build_valid is not None and bool(build_valid.all()):
+            build_valid = None
+        if probe_valid is not None and bool(probe_valid.all()):
+            probe_valid = None
         nb, npr = len(build_key), len(probe_key)
         p = self.nshards
         if p == 1 or nb == 0 or npr == 0 or max(nb, npr) >= 1 << 32:
             self.stats.joins.append(
                 DistJoinStat(how, "local", nb, npr, 0, 0))
-            return self.local.join_indices(build_key, probe_key, how=how)
+            return self.local.join_indices_valid(
+                build_key, probe_key, how=how,
+                build_valid=build_valid, probe_valid=probe_valid)
         # modeled wire cost; the crossover the bench measures (§9)
-        est_bcast = (p - 1) * nb * KEY_WIRE_BYTES
-        est_shuf = (nb + npr) * ROW_WIRE_BYTES * (p - 1) // p
+        bkey_bytes = KEY_WIRE_BYTES + (VALID_WIRE_BYTES
+                                       if build_valid is not None else 0)
+        row_b = ROW_WIRE_BYTES + (VALID_WIRE_BYTES
+                                  if build_valid is not None else 0)
+        row_p = ROW_WIRE_BYTES + (VALID_WIRE_BYTES
+                                  if probe_valid is not None else 0)
+        est_bcast = (p - 1) * nb * bkey_bytes
+        est_shuf = (nb * row_b + npr * row_p) * (p - 1) // p
         if est_bcast <= est_shuf:
             bidx, pidx, wire = broadcast_join_indices(
-                build_key, probe_key, how, self.exchange, self.local)
+                build_key, probe_key, how, self.exchange, self.local,
+                build_valid=build_valid, probe_valid=probe_valid)
             self.stats.joins.append(
                 DistJoinStat(how, "broadcast", nb, npr, 0, wire))
         else:
             bidx, pidx, wire = shuffle_join_indices(
-                build_key, probe_key, how, self.exchange)
+                build_key, probe_key, how, self.exchange,
+                build_valid=build_valid, probe_valid=probe_valid)
             self.stats.joins.append(
                 DistJoinStat(how, "shuffle", nb, npr, wire, 0))
         return bidx, pidx

@@ -14,7 +14,8 @@ JAX-compatible).
 
 from repro.relational.table import Table, Column
 from repro.relational.expr import (
-    col, lit, isin, between, like, Expr,
+    col, lit, isin, between, like, Expr, ExprValue, is_null, is_not_null,
+    coalesce,
 )
 from repro.relational import ops
 from repro.relational.plan import (
@@ -24,6 +25,7 @@ from repro.relational.executor import Executor, ExecStats
 
 __all__ = [
     "Table", "Column", "col", "lit", "isin", "between", "like", "Expr",
+    "ExprValue", "is_null", "is_not_null", "coalesce",
     "ops", "Scan", "Join", "GroupBy", "Project", "Sort", "Limit",
     "SubqueryScan", "PlanNode", "Executor", "ExecStats",
 ]

@@ -181,7 +181,7 @@ class Executor:
         # projection pushdown: filter first (may need dropped columns),
         # then keep only plan-referenced columns
         if leaf.filter is not None:
-            table = table.compact(np.asarray(leaf.filter(table), bool))
+            table = table.compact(leaf.filter(table).mask(len(table)))
         keep = set(table.names)
         if needed is not None:
             keep &= needed | set(leaf.columns or ())
@@ -252,18 +252,20 @@ class Executor:
             stats.joins.append(JoinStat(node.how, len(build), len(probe),
                                         pr_pre, len(out)))
             if node.extra is not None:
+                # join ON residuals follow WHERE semantics: NULL = drop
                 view = out.columns_view(sorted(node.extra.columns()))
-                keep = np.asarray(node.extra(view), bool)
-                out = out.take(np.flatnonzero(keep))
+                out = out.take(np.flatnonzero(
+                    node.extra(view).mask(len(out))))
             return out
 
         if isinstance(node, Filter):
             t = self._exec_node(node.child, slots, stats)
             if isinstance(t, JoinCursor):
+                # NULL predicates are false (SQL WHERE): ExprValue.mask
                 view = t.columns_view(sorted(node.predicate.columns()))
-                keep = np.asarray(node.predicate(view), bool)
+                keep = node.predicate(view).mask(len(t))
                 return t.take(np.flatnonzero(keep))
-            return t.compact(np.asarray(node.predicate(t), bool))
+            return t.compact(node.predicate(t).mask(len(t)))
 
         if isinstance(node, Project):
             t = self._exec_node(node.child, slots, stats)
@@ -279,10 +281,7 @@ class Executor:
                 elif hasattr(e, "result_column"):  # DictMap keeps vocab
                     cols[name] = e.result_column(t)
                 else:
-                    v = np.asarray(e(t))
-                    if v.ndim == 0:
-                        v = np.full(len(t), v)
-                    cols[name] = Column(v)
+                    cols[name] = e(t).column(nrows=len(t))
             return Table(cols, t.name)
 
         if isinstance(node, Bind):
@@ -291,9 +290,15 @@ class Executor:
             sub_t, sub_stats = sub.execute(node.subplan)
             stats.subqueries.append(sub_stats)
             assert len(sub_t) == 1, "Bind subplan must yield one row"
-            v = sub_t.array(node.sub_col)[0]
+            c = sub_t[node.sub_col]
+            v = c.data[0]
+            # a NULL scalar subquery result (e.g. AVG over zero rows)
+            # broadcasts as an all-NULL constant column
+            valid = (None if c.valid is None or bool(c.valid[0])
+                     else np.zeros(len(t), bool))
             return t.with_column(node.name,
-                                 Column(np.full(len(t), v)))
+                                 Column(np.full(len(t), v), c.dictionary,
+                                        valid))
 
         if isinstance(node, GroupBy):
             t = self._exec_node(node.child, slots, stats)
@@ -305,7 +310,7 @@ class Executor:
                 t = self._materialize(t, stats, needed)
             out = ops.group_aggregate(t, node.keys, node.aggs)
             if node.having is not None:
-                out = out.compact(np.asarray(node.having(out), bool))
+                out = out.compact(node.having(out).mask(len(out)))
             return out
 
         if isinstance(node, Sort):
@@ -346,7 +351,7 @@ class Executor:
         stats.joins.append(JoinStat(node.how, len(build), len(probe),
                                     pr_pre, len(out)))
         if node.extra is not None:
-            out = out.compact(np.asarray(node.extra(out), bool))
+            out = out.compact(node.extra(out).mask(len(out)))
         return out
 
 

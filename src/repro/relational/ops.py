@@ -127,7 +127,13 @@ def join_indices_nullsafe(build_key: np.ndarray, probe_key: np.ndarray,
     build rows are excluded from the build, NULL-key probe rows match
     nothing (inner/semi drop them, left emits them unmatched, anti
     keeps them). Output order contract unchanged. All-valid inputs take
-    the engine fast path untouched."""
+    the engine fast path untouched.
+
+    Dispatches to `engine.join_indices_valid` so each engine can own its
+    NULL handling: the host/device engines compact invalid rows out and
+    remap (`JoinEngine.join_indices_valid`), the distributed engine
+    ships validity planes through its exchanges instead — compaction is
+    a host-global operation it must not depend on."""
     if engine is None:
         from repro.core.engine_join import get_join_engine
         engine = get_join_engine("numpy")
@@ -135,34 +141,9 @@ def join_indices_nullsafe(build_key: np.ndarray, probe_key: np.ndarray,
         build_valid = None
     if probe_valid is not None and bool(probe_valid.all()):
         probe_valid = None
-    bkeep = None
-    if build_valid is not None:
-        bkeep = np.flatnonzero(build_valid)
-        build_key = build_key[bkeep]
-    if probe_valid is None:
-        bidx, pidx = engine.join_indices(build_key, probe_key, how=how)
-    else:
-        pkeep = np.flatnonzero(probe_valid)
-        bidx, pidx = engine.join_indices(build_key, probe_key[pkeep],
-                                         how=how)
-        pidx = pkeep[pidx]
-        dead = np.flatnonzero(~probe_valid)
-        if how in ("left", "anti") and dead.size:
-            # unmatched NULL-key probe rows re-enter in probe order
-            bidx = np.concatenate([bidx,
-                                   np.full(dead.size, -1, np.int64)])
-            pidx = np.concatenate([pidx, dead])
-            order = np.argsort(pidx, kind="stable")
-            bidx, pidx = bidx[order], pidx[order]
-    if bkeep is not None and len(bidx) and bkeep.size:
-        # (an all-invalid build leaves bidx all -1 — nothing to remap)
-        neg = bidx < 0
-        if neg.any():
-            bidx = np.where(neg, np.int64(-1),
-                            bkeep[np.where(neg, 0, bidx)])
-        else:
-            bidx = bkeep[bidx]
-    return bidx, pidx
+    return engine.join_indices_valid(build_key, probe_key, how=how,
+                                     build_valid=build_valid,
+                                     probe_valid=probe_valid)
 
 
 def hash_join(build: Table, probe: Table,
@@ -248,6 +229,48 @@ def _value_codes(v: np.ndarray, n_fallback: int
     return codes.astype(np.int64, copy=False), np.int64(n_fallback + 1)
 
 
+def _grouping_codes(table: Table, keys: Sequence[str]) -> np.ndarray:
+    """int64 grouping key with SQL GROUP BY NULL semantics: per key
+    column, NULL compares equal to NULL and distinct from every value,
+    so NULL rows form their own group(s) instead of grouping by their
+    representative bytes. NULL-free key columns take `composite_key`
+    unchanged (the pre-validity fast path, bit-exact for TPC-H).
+
+    When any key column carries NULLs, every column is *rank-coded*
+    (order-preserving dense codes; NULL = rank |uniq|, i.e. NULLs sort
+    last) and the per-column codes combine exactly as `composite_key`
+    combines raw values — ranks are < nrows < 2^31, so two columns
+    always pack losslessly."""
+    cols = [table[k] for k in keys]
+    nullable = [c.valid is not None and not bool(c.valid.all())
+                for c in cols]
+    if not any(nullable):
+        return composite_key(table, keys)
+    arrays = []
+    for c, has_null in zip(cols, nullable):
+        v = c.data.astype(np.int64, copy=False)
+        if not has_null:
+            uniq, inv = np.unique(v, return_inverse=True)
+            arrays.append(inv.astype(np.int64, copy=False))
+        else:
+            uniq = np.unique(v[c.valid])
+            code = np.searchsorted(uniq, v).astype(np.int64)
+            arrays.append(np.where(c.valid, code, np.int64(len(uniq))))
+    key = arrays[0]
+    if len(arrays) == 1:
+        return key
+    if len(arrays) == 2:
+        return (key << np.int64(32)) | arrays[1]
+    for a in arrays[1:]:
+        key = key * np.int64(-7046029254386353131) + a  # 64-bit mix
+    return key
+
+
+def _opt_valid(valid: np.ndarray) -> Optional[np.ndarray]:
+    """None when every group produced a value (the mask-free contract)."""
+    return None if bool(valid.all()) else valid
+
+
 def group_aggregate(table: Table, keys: Sequence[str],
                     aggs: Sequence[Tuple[str, str, str]]) -> Table:
     """GROUP BY keys with aggs = [(out_name, agg, in_col)].
@@ -255,9 +278,15 @@ def group_aggregate(table: Table, keys: Sequence[str],
     agg in {sum, min, max, count, countv, mean, nunique}; in_col ignored
     for count; countv counts valid (non-NULL) values of in_col; nunique
     counts distinct values of in_col per group.
+
+    SQL NULL semantics throughout (DESIGN.md §10): NULL keys form their
+    own group(s) (`_grouping_codes`); sum/min/max/mean skip NULL inputs
+    and yield NULL (a validity-masked output, never a sentinel) for
+    all-NULL groups; nunique/countv ignore NULLs; count counts rows.
+    NULL-free inputs take the original code paths bit-exactly.
     """
     if keys:
-        key = composite_key(table, keys)
+        key = _grouping_codes(table, keys)
         inverse, ngroups = _group_codes(key)
         # representative row per group for key columns
         rep = np.zeros(ngroups, np.int64)
@@ -269,6 +298,8 @@ def group_aggregate(table: Table, keys: Sequence[str],
 
     cols = {}
     for k in keys:
+        # a NULL group's representative row is NULL in that key column,
+        # so the gathered validity mask marks the output key NULL too
         cols[k] = table[k].gather(rep)
     counts = np.bincount(inverse, minlength=ngroups)
     for out_name, agg, in_col in aggs:
@@ -284,10 +315,22 @@ def group_aggregate(table: Table, keys: Sequence[str],
                     inverse, weights=c.valid.astype(np.float64),
                     minlength=ngroups).astype(np.int64))
             continue
+        c = table[in_col]
+        cv = c.valid if (c.valid is not None
+                         and not bool(c.valid.all())) else None
         if agg == "nunique":
+            # COUNT(DISTINCT x) ignores NULLs: restrict both the value
+            # codes and the (group, value) pairs to valid rows —
+            # otherwise NULL representative bytes count as (and collide
+            # with) real values, and a NULL-widened min/max corrupts the
+            # range-compaction span
             v = table.array(in_col).astype(np.int64)
-            vcodes, span = _value_codes(v, len(table))
-            pair = inverse.astype(np.int64) * span + vcodes
+            inv = inverse
+            if cv is not None:
+                sel = np.flatnonzero(cv)
+                v, inv = v[sel], inverse[sel]
+            vcodes, span = _value_codes(v, len(v))
+            pair = inv.astype(np.int64) * span + vcodes
             upair = np.unique(pair)
             grp = (upair // span).astype(np.int64)
             cols[out_name] = Column(
@@ -295,14 +338,27 @@ def group_aggregate(table: Table, keys: Sequence[str],
             continue
         v = table.array(in_col)
         if agg in ("sum", "mean"):
-            s = np.bincount(inverse, weights=v.astype(np.float64),
-                            minlength=ngroups)
-            if agg == "mean":
-                s = s / np.maximum(counts, 1)
-            if agg == "sum" and v.dtype.kind in "iu":
-                cols[out_name] = Column(s.astype(np.int64))
+            if cv is None:
+                s = np.bincount(inverse, weights=v.astype(np.float64),
+                                minlength=ngroups)
+                if agg == "mean":
+                    s = s / np.maximum(counts, 1)
+                valid = None
             else:
-                cols[out_name] = Column(s)
+                # NULL inputs contribute nothing; groups with no valid
+                # input yield NULL (SQL SUM/AVG over all-NULL = NULL)
+                w = np.where(cv, v, 0).astype(np.float64)
+                s = np.bincount(inverse, weights=w, minlength=ngroups)
+                vcnt = np.bincount(inverse,
+                                   weights=cv.astype(np.float64),
+                                   minlength=ngroups).astype(np.int64)
+                if agg == "mean":
+                    s = s / np.maximum(vcnt, 1)
+                valid = _opt_valid(vcnt > 0)
+            if agg == "sum" and v.dtype.kind in "iu":
+                cols[out_name] = Column(s.astype(np.int64), valid=valid)
+            else:
+                cols[out_name] = Column(s, valid=valid)
         elif agg in ("min", "max"):
             if v.dtype.kind in "iu":
                 info = np.iinfo(v.dtype)
@@ -311,9 +367,18 @@ def group_aggregate(table: Table, keys: Sequence[str],
                 fill = np.inf if agg == "min" else -np.inf
             out = np.full(ngroups, fill, dtype=v.dtype)
             ufunc = np.minimum if agg == "min" else np.maximum
-            ufunc.at(out, inverse, v)
-            c = table[in_col]
-            cols[out_name] = Column(out, c.dictionary)
+            if cv is None:
+                ufunc.at(out, inverse, v)
+                valid = None
+            else:
+                sel = np.flatnonzero(cv)
+                ufunc.at(out, inverse[sel], v[sel])
+                # all-NULL groups keep the sentinel fill as their
+                # representative bytes but are marked NULL — the
+                # sentinel must never leak as a real result
+                valid = _opt_valid(np.bincount(
+                    inverse[sel], minlength=ngroups) > 0)
+            cols[out_name] = Column(out, c.dictionary, valid)
         else:
             raise ValueError(agg)
     return Table(cols, table.name)
@@ -328,11 +393,24 @@ def sort_indices(table: Table, by: Sequence[Tuple[str, bool]]
                  ) -> np.ndarray:
     """Stable row order for `by` = [(col, ascending)] (major-to-minor).
     Only reads the sort-key columns — the executor's lazy path feeds a
-    thin key view and reorders its cursor with the result."""
+    thin key view and reorders its cursor with the result.
+
+    NULL sort keys order after every value (NULLS LAST, ascending and
+    descending alike): a nullable column contributes its validity as an
+    extra, more-significant sub-key, with NULL slots' representative
+    bytes flattened to a constant so ties among NULLs resolve by the
+    stable original order, not by garbage."""
     keys = []
     for name, asc in reversed(by):  # lexsort: last key is primary
-        v = table.array(name)
-        keys.append(v if asc else _descending_view(v))
+        c = table[name]
+        v = c.data
+        if c.valid is not None and not bool(c.valid.all()):
+            fill = v[c.valid].min() if bool(c.valid.any()) else v.dtype.type(0)
+            v = np.where(c.valid, v, fill)
+            keys.append(v if asc else _descending_view(v))
+            keys.append(~c.valid)    # more significant: NULLs last
+        else:
+            keys.append(v if asc else _descending_view(v))
     idx = np.lexsort(tuple(keys)) if keys else np.arange(len(table))
     return idx.astype(np.int64)
 

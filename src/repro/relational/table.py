@@ -55,14 +55,20 @@ class Column:
         return r
 
     def exact_value_range(self) -> tuple:
-        """(min, max) of *this buffer's* values (cached separately from
-        the inherited lineage bounds)."""
+        """(min, max) of *this buffer's valid* values (cached separately
+        from the inherited lineage bounds). NULL slots hold unspecified
+        representative bytes and must not widen the bounds — the packed
+        composite-key decision (`ops._packable`) and the range-hoisting
+        in `composite_key` depend only on values that can actually
+        participate in matching. All-NULL (and empty) columns report
+        (0, -1)."""
         r = self.__dict__.get("_vrange_exact")
         if r is None:
-            if len(self.data) == 0:
+            data = self.data if self.valid is None else self.data[self.valid]
+            if len(data) == 0:
                 r = (0, -1)
             else:
-                r = (int(self.data.min()), int(self.data.max()))
+                r = (int(data.min()), int(data.max()))
             object.__setattr__(self, "_vrange_exact", r)
         return r
 
@@ -108,17 +114,27 @@ class Table:
     # -- constructors ------------------------------------------------------
     @staticmethod
     def from_arrays(arrays: Mapping[str, np.ndarray], name: str = "",
-                    dictionaries: Optional[Mapping[str, np.ndarray]] = None
+                    dictionaries: Optional[Mapping[str, np.ndarray]] = None,
+                    validity: Optional[Mapping[str, np.ndarray]] = None
                     ) -> "Table":
+        """`validity[k]` (optional, bool per row; absent = all valid)
+        marks column k's NULL rows; the values under NULL slots are kept
+        as representative bytes, per the engine NULL contract."""
         dictionaries = dictionaries or {}
+        validity = validity or {}
         cols = {}
         for k, v in arrays.items():
             v = np.asarray(v)
+            valid = validity.get(k)
+            if valid is not None:
+                valid = np.asarray(valid, bool)
+                if bool(valid.all()):
+                    valid = None
             if v.dtype.kind in ("U", "S", "O"):
                 vocab, codes = np.unique(v, return_inverse=True)
-                cols[k] = Column(codes.astype(np.int32), vocab)
+                cols[k] = Column(codes.astype(np.int32), vocab, valid)
             else:
-                cols[k] = Column(v, dictionaries.get(k))
+                cols[k] = Column(v, dictionaries.get(k), valid)
         return Table(cols, name)
 
     # -- basic accessors ---------------------------------------------------

@@ -310,3 +310,39 @@ def test_elastic_reshard_restore(tmp_path):
     assert out["w"].sharding.spec == P("data", "model")
     print("elastic reshard OK")
     """)
+
+
+def test_mesh_exchange_ships_validity_planes():
+    """Nullable join sides over the *device* exchange: the validity
+    plane travels as a 4th uint32 plane through lax.all_to_all (and a
+    3rd through all_gather) and both strategies reproduce the host
+    compact-then-join oracle bit for bit (DESIGN §10)."""
+    _run("""
+    from repro.core.engine_join import NumpyJoinEngine
+    from repro.core.engine_join_dist import (MeshExchange,
+        broadcast_join_indices, shuffle_join_indices)
+    dev = MeshExchange()
+    assert dev.device_backed and dev.nshards == 8, dev.nshards
+    host = NumpyJoinEngine()
+    rng = np.random.default_rng(11)
+    for nb, npr in ((4096, 20000), (29, 5000)):
+        bk = rng.integers(0, nb // 2 + 1, nb).astype(np.int64)
+        pk = rng.integers(0, nb // 2 + 9, npr).astype(np.int64)
+        bv = rng.random(nb) > 0.25
+        pv = rng.random(npr) > 0.25
+        for how in ("inner", "left", "semi", "anti"):
+            eb, ep = host.join_indices_valid(bk, pk, how=how,
+                                             build_valid=bv,
+                                             probe_valid=pv)
+            for fn in (lambda: shuffle_join_indices(
+                           bk, pk, how, dev, build_valid=bv,
+                           probe_valid=pv),
+                       lambda: broadcast_join_indices(
+                           bk, pk, how, dev, host, build_valid=bv,
+                           probe_valid=pv)):
+                gb, gp, wire = fn()
+                assert wire > 0
+                np.testing.assert_array_equal(gb, eb, err_msg=how)
+                np.testing.assert_array_equal(gp, ep, err_msg=how)
+    print("mesh exchange validity planes OK")
+    """)

@@ -1,0 +1,690 @@
+"""End-to-end SQL NULL semantics (DESIGN.md §10).
+
+* three-valued expression logic: Kleene &/|/~, NULL-propagating
+  comparisons/arithmetic, IsNull / Coalesce / CaseWhen / IsIn / Like;
+* validity-aware grouping (NULL keys form their own group) and
+  NULL-skipping aggregates (sum/min/max/mean/nunique; sentinel fills
+  must never leak for all-NULL groups);
+* `Column.value_range` ignores NULL representative bytes;
+* NULLs-last ordering in `ops.sort_indices`;
+* full plans (Filter / GroupBy / joins / outer-join NULL slots through
+  GroupBy) oracle-compared against a row-at-a-time python reference
+  with SQL NULL semantics, across the eager executor, the
+  late-materialized runtime on numpy / jax / pallas-interpret, and
+  `engine="distributed"`;
+* the distributed exchange's validity planes (wire format + bytes).
+
+A deterministic numpy-seeded sweep always runs; a hypothesis strategy
+generating tables with per-column validity masks deepens the same
+oracles when hypothesis is installed (same guard idiom as
+tests/test_engine_join.py).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # property tests skip, rest run
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **kw):
+        return lambda f: pytest.mark.skip("hypothesis missing")(f)
+
+    def settings(*a, **kw):
+        return lambda f: f
+
+    class st:
+        def __getattr__(self, name):
+            raise AttributeError(name)
+
+        @staticmethod
+        def lists(*a, **kw):
+            return None
+
+        @staticmethod
+        def integers(*a, **kw):
+            return None
+
+        @staticmethod
+        def sampled_from(*a, **kw):
+            return None
+
+        @staticmethod
+        def tuples(*a, **kw):
+            return None
+
+        @staticmethod
+        def booleans():
+            return None
+
+from repro.relational import (  # noqa: E402
+    Column, Executor, Table, coalesce, col, is_null, isin, lit, ops,
+)
+from repro.relational.expr import ExprValue, case, like  # noqa: E402
+from repro.relational.plan import (  # noqa: E402
+    Filter, GroupBy, Join, Project, Scan, Sort,
+)
+
+HOWS = ("inner", "left", "semi", "anti")
+
+# every engine configuration that must agree on SQL semantics; the
+# eager executor is the hand-auditable oracle, the rest are the
+# production paths (late-materialized backends + distributed shards)
+ENGINES = [
+    ("eager", dict(late_materialize=False)),
+    ("late-numpy", dict(join_backend="numpy")),
+    ("late-jax", dict(join_backend="jax")),
+    ("late-pallas", dict(join_backend="pallas")),
+    ("dist-2", dict(engine="distributed", dist_shards=2,
+                    dist_device=False)),
+    ("dist-8", dict(engine="distributed", dist_shards=8,
+                    dist_device=False)),
+]
+
+
+def run_all_engines(catalog, plan_fn):
+    """Execute `plan_fn()` (fresh plan per engine: leaf ids are global)
+    under every engine config; returns {name: Table}."""
+    return {name: Executor(catalog, **kw).execute(plan_fn())[0]
+            for name, kw in ENGINES}
+
+
+# --------------------------------------------------------------------------
+# row-at-a-time reference with SQL NULL semantics
+# --------------------------------------------------------------------------
+
+
+def to_rows(table):
+    """Table -> list of dicts with python values, None = NULL."""
+    out = []
+    decoded = {n: table[n].decode() for n in table.names}
+    valids = {n: table[n].valid for n in table.names}
+    for i in range(len(table)):
+        out.append({n: (None if valids[n] is not None and not valids[n][i]
+                        else decoded[n][i].item()
+                        if hasattr(decoded[n][i], "item")
+                        else decoded[n][i])
+                    for n in table.names})
+    return out
+
+
+def assert_same_rows(got, expected, names, err=""):
+    """Order-insensitive multiset comparison on python values."""
+    def canon(rows):
+        return sorted([tuple(r[n] for n in names) for r in rows],
+                      key=lambda t: tuple((x is None, x if x is not None
+                                           else 0) for x in t))
+    g, e = canon(got), canon(expected)
+    assert len(g) == len(e), (err, len(g), len(e))
+    for a, b in zip(g, e):
+        for x, y in zip(a, b):
+            if isinstance(x, float) and isinstance(y, float):
+                assert x == pytest.approx(y), (err, a, b)
+            else:
+                assert x == y, (err, a, b)
+
+
+def ref_join(left, right, left_on, right_on, how, right_cols=()):
+    """Row-at-a-time SQL join; NULL keys never match."""
+    rcols = list(right_cols) or sorted({c for rr in right for c in rr})
+    out = []
+    for lr in left:
+        lk = tuple(lr[c] for c in left_on)
+        matches = []
+        if None not in lk:
+            matches = [rr for rr in right
+                       if tuple(rr[c] for c in right_on) == lk]
+        if how == "inner":
+            out += [{**lr, **rr} for rr in matches]
+        elif how == "left":
+            if matches:
+                out += [{**lr, **rr} for rr in matches]
+            else:
+                out.append({**lr, **{c: None for c in rcols}})
+        elif how == "semi":
+            if matches:
+                out.append(dict(lr))
+        elif how == "anti":
+            if not matches:
+                out.append(dict(lr))
+    return out
+
+
+def ref_group(rows, keys, aggs):
+    """SQL GROUP BY: NULL keys group together; aggregates skip NULLs;
+    SUM/MIN/MAX/AVG of an all-NULL group are NULL; COUNT(*) counts
+    rows; COUNT(DISTINCT) ignores NULLs."""
+    groups = {}
+    for r in rows:
+        groups.setdefault(tuple(r[k] for k in keys), []).append(r)
+    out = []
+    for gk, grows in groups.items():
+        o = dict(zip(keys, gk))
+        for out_name, agg, in_col in aggs:
+            if agg == "count":
+                o[out_name] = len(grows)
+                continue
+            vals = [r[in_col] for r in grows if r[in_col] is not None]
+            if agg == "countv":
+                o[out_name] = len(vals)
+            elif agg == "nunique":
+                o[out_name] = len(set(vals))
+            elif agg == "sum":
+                o[out_name] = sum(vals) if vals else None
+            elif agg == "min":
+                o[out_name] = min(vals) if vals else None
+            elif agg == "max":
+                o[out_name] = max(vals) if vals else None
+            elif agg == "mean":
+                o[out_name] = sum(vals) / len(vals) if vals else None
+            else:
+                raise ValueError(agg)
+        out.append(o)
+    return out
+
+
+# --------------------------------------------------------------------------
+# expression three-valued logic
+# --------------------------------------------------------------------------
+
+
+def _nt(values, valid):
+    return Table.from_arrays({"x": np.asarray(values)}, "t",
+                             validity={"x": valid})
+
+
+def test_comparison_propagates_null():
+    t = _nt([1, 5, 9], [True, False, True])
+    ev = (col("x") > 2)(t)
+    np.testing.assert_array_equal(ev.valid, [True, False, True])
+    np.testing.assert_array_equal(ev.mask(), [False, False, True])
+
+
+def test_arithmetic_propagates_null_and_ignores_garbage_errors():
+    t = Table.from_arrays(
+        {"a": np.array([1.0, 2.0]), "b": np.array([0.0, 4.0])}, "t",
+        validity={"a": [False, True]})
+    ev = (col("a") / col("b"))(t)       # NULL slot divides by zero
+    np.testing.assert_array_equal(ev.valid, [False, True])
+    assert ev.value[1] == 0.5
+
+
+def test_kleene_truth_table():
+    # rows: (a, b) over {TRUE, FALSE, NULL} x {TRUE, FALSE, NULL}
+    av = [1, 1, 1, 0, 0, 0, 1, 1, 1]
+    aval = [1, 1, 1, 1, 1, 1, 0, 0, 0]
+    bv = [1, 0, 1, 1, 0, 1, 1, 0, 1]
+    bval = [1, 1, 0, 1, 1, 0, 1, 1, 0]
+    t = Table.from_arrays(
+        {"a": np.array(av, bool), "b": np.array(bv, bool)}, "t",
+        validity={"a": np.array(aval, bool), "b": np.array(bval, bool)})
+    a, b = col("a"), col("b")
+    ev = (a & b)(t)
+    #        T&T  T&F  T&N  F&T  F&F  F&N  N&T  N&F  N&N
+    exp_v = [1,   0,   0,   0,   0,   0,   0,   0,   0]
+    exp_k = [1,   1,   0,   1,   1,   1,   0,   1,   0]
+    np.testing.assert_array_equal(ev.mask(), np.array(exp_v, bool))
+    got_valid = np.ones(9, bool) if ev.valid is None else ev.valid
+    np.testing.assert_array_equal(got_valid, np.array(exp_k, bool))
+    ev = (a | b)(t)
+    exp_v = [1,   1,   1,   1,   0,   0,   1,   0,   0]
+    exp_k = [1,   1,   1,   1,   1,   0,   1,   0,   0]
+    np.testing.assert_array_equal(ev.mask(), np.array(exp_v, bool))
+    got_valid = np.ones(9, bool) if ev.valid is None else ev.valid
+    np.testing.assert_array_equal(got_valid, np.array(exp_k, bool))
+    ev = (~a)(t)
+    np.testing.assert_array_equal(ev.mask(),
+                                  [0, 0, 0, 1, 1, 1, 0, 0, 0])
+
+
+def test_is_null_coalesce_case():
+    t = _nt([7, 8, 9], [False, True, False])
+    np.testing.assert_array_equal(is_null(col("x"))(t).mask(),
+                                  [True, False, True])
+    np.testing.assert_array_equal(col("x").is_not_null()(t).mask(),
+                                  [False, True, False])
+    ev = coalesce(col("x"), lit(-1))(t)
+    assert ev.valid is None
+    np.testing.assert_array_equal(ev.value, [-1, 8, -1])
+    # CASE WHEN: NULL condition takes the ELSE branch, TRUE takes THEN
+    ev = case(col("x") > 7, 1.0, 2.0)(t)
+    assert ev.valid is None
+    np.testing.assert_array_equal(ev.value, [2.0, 1.0, 2.0])
+
+
+def test_isin_with_null_probe_and_null_list():
+    t = _nt([1, 2, 3], [True, False, True])
+    ev = isin(col("x"), [1])(t)
+    np.testing.assert_array_equal(ev.mask(), [True, False, False])
+    np.testing.assert_array_equal(ev.valid, [True, False, True])
+    # x IN (3, NULL): match -> TRUE, no match -> NULL (never FALSE)
+    ev = isin(col("x"), [3, None])(t)
+    np.testing.assert_array_equal(ev.mask(), [False, False, True])
+    np.testing.assert_array_equal(ev.valid, [False, False, True])
+
+
+def test_like_propagates_null():
+    t = Table.from_arrays({"s": np.array(["abc", "abd", "xyz"])}, "t",
+                          validity={"s": [True, False, True]})
+    ev = like(col("s"), "ab%")(t)
+    np.testing.assert_array_equal(ev.mask(), [True, False, False])
+    np.testing.assert_array_equal(ev.valid, [True, False, True])
+
+
+def test_null_literal_broadcasts():
+    t = _nt([1, 2], [True, True])
+    ev = (col("x") + lit(None))(t)
+    assert not ev.mask().any()
+
+
+def test_exprvalue_array_conversion_guard():
+    """A validity-ignorant read of a nullable result must fail loudly."""
+    t = _nt([1, 2], [True, False])
+    ev = (col("x") > 0)(t)
+    with pytest.raises(ValueError, match="nullable"):
+        np.asarray(ev)
+    # fully-valid results keep the old implicit conversion
+    np.testing.assert_array_equal(
+        np.asarray((col("x") > 1)(_nt([1, 2], [True, True]))),
+        [False, True])
+    assert isinstance(ev, ExprValue)
+
+
+# --------------------------------------------------------------------------
+# grouping / aggregates / value_range / sort
+# --------------------------------------------------------------------------
+
+
+def test_group_by_nullable_key_nulls_form_own_group():
+    t = Table.from_arrays(
+        {"k": np.array([4, 4, 9, 9, 1], np.int64),
+         "v": np.array([1.0, 2.0, 3.0, 4.0, 5.0])}, "t",
+        validity={"k": [True, False, True, False, True]})
+    g = ops.group_aggregate(t, ["k"], [("s", "sum", "v"),
+                                       ("c", "count", "")])
+    got = to_rows(g)
+    exp = ref_group(to_rows(t), ["k"], [("s", "sum", "v"),
+                                        ("c", "count", "")])
+    assert_same_rows(got, exp, ["k", "s", "c"])
+    # exactly one NULL group even though the representative bytes differ
+    assert sum(1 for r in got if r["k"] is None) == 1
+
+
+def test_group_by_multicol_nullable_keys():
+    rng = np.random.default_rng(3)
+    n = 200
+    t = Table.from_arrays(
+        {"a": rng.integers(0, 4, n).astype(np.int64),
+         "b": rng.integers(0, 3, n).astype(np.int64),
+         "v": rng.normal(size=n)}, "t",
+        validity={"a": rng.random(n) > 0.3, "b": rng.random(n) > 0.3})
+    aggs = [("s", "sum", "v"), ("c", "count", ""), ("m", "mean", "v"),
+            ("nu", "nunique", "b")]
+    got = to_rows(ops.group_aggregate(t, ["a", "b"], aggs))
+    exp = ref_group(to_rows(t), ["a", "b"], aggs)
+    assert_same_rows(got, exp, ["a", "b", "s", "c", "m", "nu"])
+
+
+def test_nunique_ignores_nulls():
+    """COUNT(DISTINCT) must not count NULL as a value — including on the
+    range-compacted codes path (NULL representative bytes used to both
+    count as a value and widen the compaction span)."""
+    t = Table.from_arrays(
+        {"k": np.zeros(4, np.int64),
+         "v": np.array([7, 7, 10**6, 3], np.int64)}, "t",
+        validity={"v": [True, True, False, True]})
+    g = ops.group_aggregate(t, ["k"], [("nu", "nunique", "v")])
+    assert g.array("nu").tolist() == [2]
+    # all-NULL group: COUNT(DISTINCT) = 0 (a valid zero, not NULL)
+    t2 = Table.from_arrays({"k": np.zeros(2, np.int64),
+                            "v": np.array([5, 6], np.int64)}, "t",
+                           validity={"v": [False, False]})
+    g2 = ops.group_aggregate(t2, ["k"], [("nu", "nunique", "v")])
+    assert g2.array("nu").tolist() == [0]
+    assert g2["nu"].valid is None
+
+
+def test_min_max_all_null_group_is_null_not_sentinel():
+    t = Table.from_arrays(
+        {"k": np.array([0, 0, 1, 1], np.int64),
+         "v": np.array([5, 3, 9, 11], np.int64)}, "t",
+        validity={"v": [True, True, False, False]})
+    g = ops.group_aggregate(t, ["k"], [("mn", "min", "v"),
+                                       ("mx", "max", "v"),
+                                       ("s", "sum", "v"),
+                                       ("m", "mean", "v")])
+    rows = {r["k"]: r for r in to_rows(g)}
+    assert rows[0]["mn"] == 3 and rows[0]["mx"] == 5
+    # group 1 has no valid values: every aggregate is NULL — the
+    # int-info/±inf sentinel fill must not leak as a real result
+    assert rows[1]["mn"] is None and rows[1]["mx"] is None
+    assert rows[1]["s"] is None and rows[1]["m"] is None
+
+
+def test_value_range_ignores_invalid_rows():
+    c = Column(np.array([5, 2**40, 7], np.int64),
+               valid=np.array([True, False, True]))
+    assert c.value_range() == (5, 7)
+    assert c.exact_value_range() == (5, 7)
+    # all-NULL behaves like empty
+    c2 = Column(np.array([2**40], np.int64), valid=np.array([False]))
+    assert c2.value_range() == (0, -1)
+
+
+def test_composite_key_packs_despite_null_garbage():
+    """Range hoisting must not let NULL representative bytes flip the
+    packed-vs-mixed encoding decision (the satellite regression)."""
+    t = Table.from_arrays(
+        {"x": np.array([1, 2**40, 3], np.int64),
+         "y": np.array([4, 5, 6], np.int64)}, "t",
+        validity={"x": [True, False, True]})
+    assert ops.stable_key_encoding(t, ["x", "y"])
+    k = ops.composite_key(t, ["x", "y"])
+    # valid rows use the packed encoding
+    assert k[0] == (1 << 32) | 4 and k[2] == (3 << 32) | 6
+
+
+def test_sort_nulls_last():
+    t = Table.from_arrays(
+        {"a": np.array([3, 1, 2, 9], np.int64),
+         "r": np.arange(4, dtype=np.int64)}, "t",
+        validity={"a": [True, False, True, False]})
+    out = ops.sort_table(t, [("a", True)])
+    assert out.array("r").tolist() == [2, 0, 1, 3]   # NULLs last, stable
+    out = ops.sort_table(t, [("a", False)])
+    assert out.array("r").tolist() == [0, 2, 1, 3]   # NULLs still last
+
+
+# --------------------------------------------------------------------------
+# full plans across every engine vs the row-at-a-time reference
+# --------------------------------------------------------------------------
+
+
+def _nullable_catalog(seed, nfact=60, ndim=12, null_frac=0.3):
+    rng = np.random.default_rng(seed)
+    fact = Table.from_arrays(
+        {"f_key": rng.integers(0, ndim, nfact).astype(np.int64),
+         "f_cat": rng.integers(0, 4, nfact).astype(np.int64),
+         "f_val": np.round(rng.normal(size=nfact), 3)}, "fact",
+        validity={"f_key": rng.random(nfact) > null_frac,
+                  "f_cat": rng.random(nfact) > null_frac,
+                  "f_val": rng.random(nfact) > null_frac})
+    dim = Table.from_arrays(
+        {"d_key": rng.permutation(ndim + 4)[:ndim].astype(np.int64),
+         "d_grp": rng.integers(0, 3, ndim).astype(np.int64),
+         "d_w": np.round(rng.normal(size=ndim), 3)}, "dim",
+        validity={"d_key": rng.random(ndim) > null_frac / 2,
+                  "d_w": rng.random(ndim) > null_frac})
+    return {"fact": fact, "dim": dim}
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_filter_on_nullable_column_all_engines(seed):
+    cat = _nullable_catalog(seed)
+    ref = [r for r in to_rows(cat["fact"])
+           if r["f_val"] is not None and r["f_val"] > 0.0]
+
+    def plan():
+        return Project(Filter(Scan("fact"), col("f_val") > 0.0),
+                       {"f_key": col("f_key"), "f_val": col("f_val")})
+
+    for name, got in run_all_engines(cat, plan).items():
+        assert_same_rows(to_rows(got), ref, ["f_key", "f_val"], err=name)
+
+
+@pytest.mark.parametrize("how", HOWS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_join_null_keys_all_engines(seed, how):
+    cat = _nullable_catalog(seed)
+    ref = ref_join(to_rows(cat["fact"]), to_rows(cat["dim"]),
+                   ["f_key"], ["d_key"], how)
+    names = (["f_key", "f_val"] if how in ("semi", "anti")
+             else ["f_key", "f_val", "d_w"])
+
+    def plan():
+        j = Join(Scan("fact"), Scan("dim"), ["f_key"], ["d_key"],
+                 how=how)
+        return Project(j, {n: col(n) for n in names})
+
+    for name, got in run_all_engines(cat, plan).items():
+        assert_same_rows(to_rows(got), ref, names, err=(name, how))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_group_by_nullable_key_all_engines(seed):
+    cat = _nullable_catalog(seed)
+    aggs = [("s", "sum", "f_val"), ("c", "count", ""),
+            ("mn", "min", "f_val"), ("nu", "nunique", "f_key")]
+    ref = ref_group(to_rows(cat["fact"]), ["f_cat"], aggs)
+
+    def plan():
+        return GroupBy(Scan("fact"), ["f_cat"], aggs)
+
+    for name, got in run_all_engines(cat, plan).items():
+        assert_same_rows(to_rows(got), ref,
+                         ["f_cat", "s", "c", "mn", "nu"], err=name)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_outer_join_null_slots_through_group_by(seed):
+    """The manufactured NULLs (-1 cursor slots) must behave exactly like
+    base-table NULLs once they reach GroupBy — grouping by a build-side
+    column of a left join exercises validity synthesis on every gathered
+    column, not just keys."""
+    cat = _nullable_catalog(seed)
+    aggs = [("s", "sum", "f_val"), ("c", "count", ""),
+            ("w", "max", "d_w")]
+    ref = ref_group(ref_join(to_rows(cat["fact"]), to_rows(cat["dim"]),
+                             ["f_key"], ["d_key"], "left"),
+                    ["d_grp"], aggs)
+
+    def plan():
+        j = Join(Scan("fact"), Scan("dim"), ["f_key"], ["d_key"],
+                 how="left")
+        return GroupBy(j, ["d_grp"], aggs)
+
+    for name, got in run_all_engines(cat, plan).items():
+        assert_same_rows(to_rows(got), ref, ["d_grp", "s", "c", "w"],
+                         err=name)
+
+
+def test_filter_after_outer_join_null_is_false():
+    """WHERE on a nullable build-side column drops the NULL slots."""
+    cat = _nullable_catalog(5)
+    joined = ref_join(to_rows(cat["fact"]), to_rows(cat["dim"]),
+                      ["f_key"], ["d_key"], "left")
+    ref = [r for r in joined if r["d_w"] is not None and r["d_w"] <= 0.5]
+
+    def plan():
+        j = Join(Scan("fact"), Scan("dim"), ["f_key"], ["d_key"],
+                 how="left")
+        return Project(Filter(j, col("d_w") <= 0.5),
+                       {"f_key": col("f_key"), "d_w": col("d_w")})
+
+    for name, got in run_all_engines(cat, plan).items():
+        assert_same_rows(to_rows(got), ref, ["f_key", "d_w"], err=name)
+
+
+def test_sort_nullable_key_all_engines():
+    cat = _nullable_catalog(7)
+
+    def plan():
+        j = Join(Scan("fact"), Scan("dim"), ["f_key"], ["d_key"],
+                 how="left")
+        return Sort(Project(j, {"d_w": col("d_w"),
+                                "f_val": col("f_val")}),
+                    [("d_w", True)])
+
+    outs = run_all_engines(cat, plan)
+    ref_rows = to_rows(outs["eager"])
+    # NULLs last, and every engine emits the identical order
+    nulls = [i for i, r in enumerate(ref_rows) if r["d_w"] is None]
+    assert nulls == list(range(len(ref_rows) - len(nulls),
+                               len(ref_rows)))
+    for name, got in outs.items():
+        assert to_rows(got) == ref_rows, name
+
+
+# --------------------------------------------------------------------------
+# distributed exchange: validity planes on the wire
+# --------------------------------------------------------------------------
+
+
+def test_distributed_wire_carries_validity_planes():
+    from repro.core.engine_join_dist import (
+        KEY_WIRE_BYTES, VALID_WIRE_BYTES, get_distributed_engine,
+    )
+    rng = np.random.default_rng(0)
+    bk = rng.integers(0, 50, 200).astype(np.int64)
+    pk = rng.integers(0, 50, 4000).astype(np.int64)
+    bv = rng.random(200) > 0.2
+    eng = get_distributed_engine(4, device=False)
+    eng.join_indices_valid(bk, pk, how="inner", build_valid=bv)
+    (j,) = eng.stats.joins
+    assert j.strategy == "broadcast"
+    assert j.broadcast_bytes == 3 * 200 * (KEY_WIRE_BYTES
+                                           + VALID_WIRE_BYTES)
+    # all-valid joins keep the original wire format byte-for-byte
+    eng2 = get_distributed_engine(4, device=False)
+    eng2.join_indices_valid(bk, pk, how="inner")
+    assert eng2.stats.joins[0].broadcast_bytes == 3 * 200 * KEY_WIRE_BYTES
+
+
+@pytest.mark.parametrize("how", HOWS)
+@pytest.mark.parametrize("force", ["broadcast", "shuffle"])
+def test_distributed_nullsafe_strategies_match_oracle(how, force):
+    """Both exchange strategies reproduce the host compact-then-join
+    oracle bit for bit under nullable keys on both sides."""
+    from repro.core.engine_join import get_join_engine
+    from repro.core.engine_join_dist import (
+        SimulatedExchange, broadcast_join_indices, shuffle_join_indices,
+    )
+    rng = np.random.default_rng(42)
+    for trial in range(10):
+        nb, npr = int(rng.integers(0, 60)), int(rng.integers(0, 80))
+        bk = rng.integers(0, 12, nb).astype(np.int64)
+        pk = rng.integers(0, 12, npr).astype(np.int64)
+        bv = rng.random(nb) > 0.3
+        pv = rng.random(npr) > 0.3
+        host = get_join_engine("numpy")
+        eb, ep = host.join_indices_valid(bk, pk, how=how,
+                                         build_valid=bv, probe_valid=pv)
+        if nb == 0 or npr == 0:
+            continue
+        ex = SimulatedExchange(4)
+        if force == "broadcast":
+            gb, gp, _ = broadcast_join_indices(bk, pk, how, ex, host,
+                                               build_valid=bv,
+                                               probe_valid=pv)
+        else:
+            gb, gp, _ = shuffle_join_indices(bk, pk, how, ex,
+                                             build_valid=bv,
+                                             probe_valid=pv)
+        np.testing.assert_array_equal(gb, eb, err_msg=(how, force, trial))
+        np.testing.assert_array_equal(gp, ep, err_msg=(how, force, trial))
+
+
+# --------------------------------------------------------------------------
+# hypothesis: nullable tables vs the reference (deepens the seeds above)
+# --------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    nullable_column = st.lists(
+        st.tuples(st.integers(0, 6), st.booleans()),
+        min_size=1, max_size=40)
+
+
+@settings(max_examples=40, deadline=None)
+@given(nullable_column if HAVE_HYPOTHESIS else None,
+       st.sampled_from(HOWS))
+def test_hypothesis_join_null_keys_vs_reference(pairs, how):
+    ks = np.array([p[0] for p in pairs], np.int64)
+    vs = np.array([p[1] for p in pairs], bool)
+    half = len(ks) // 2
+    build = Table.from_arrays(
+        {"bk": ks[:half], "bv": np.arange(half, dtype=np.int64)}, "b",
+        validity={"bk": vs[:half]})
+    probe = Table.from_arrays(
+        {"pk": ks[half:], "pv": np.arange(len(ks) - half,
+                                          dtype=np.int64)}, "p",
+        validity={"pk": vs[half:]})
+    got = to_rows(ops.hash_join(build, probe, ["bk"], ["pk"], how=how))
+    exp = ref_join(to_rows(probe), to_rows(build), ["pk"], ["bk"], how,
+                   right_cols=["bk", "bv"])
+    names = (["pk", "pv"] if how in ("semi", "anti")
+             else ["pk", "pv", "bv"])
+    assert_same_rows(got, exp, names, err=how)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.booleans(),
+                          st.integers(-50, 50), st.booleans()),
+                min_size=1, max_size=50)
+       if HAVE_HYPOTHESIS else None)
+def test_hypothesis_group_aggregate_vs_reference(rows):
+    t = Table.from_arrays(
+        {"k": np.array([r[0] for r in rows], np.int64),
+         "v": np.array([r[2] for r in rows], np.float64)}, "t",
+        validity={"k": np.array([r[1] for r in rows], bool),
+                  "v": np.array([r[3] for r in rows], bool)})
+    aggs = [("s", "sum", "v"), ("mn", "min", "v"), ("mx", "max", "v"),
+            ("c", "count", ""), ("cv", "countv", "v"),
+            ("m", "mean", "v"), ("nu", "nunique", "v")]
+    got = to_rows(ops.group_aggregate(t, ["k"], aggs))
+    exp = ref_group(to_rows(t), ["k"], aggs)
+    assert_same_rows(got, exp,
+                     ["k", "s", "mn", "mx", "c", "cv", "m", "nu"])
+
+
+# --------------------------------------------------------------------------
+# transfer strategies stay conservative under NULL keys (DESIGN §10)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["no-pred-trans", "bloom-join",
+                                      "yannakakis", "pred-trans",
+                                      "pred-trans-opt"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_strategies_agree_on_nullable_plans(seed, strategy):
+    """Transfer filters read NULL representative bytes (conservative by
+    design: false positives only on allowed directions); every strategy
+    must still produce the same answer as no-pred-trans on plans with
+    nullable join keys, including a left join whose preserved side
+    carries NULLs."""
+    from repro.core.transfer import make_strategy
+    cat = _nullable_catalog(seed, nfact=80, ndim=16)
+    aggs = [("s", "sum", "f_val"), ("c", "count", "")]
+
+    def plan(how):
+        j = Join(Scan("fact"), Scan("dim"), ["f_key"], ["d_key"],
+                 how=how)
+        return GroupBy(j, ["d_grp"], aggs)
+
+    for how in ("inner", "left", "semi", "anti"):
+        if how in ("semi", "anti"):
+            p = lambda: GroupBy(Join(Scan("fact"), Scan("dim"),
+                                     ["f_key"], ["d_key"], how=how),
+                                ["f_cat"], aggs)
+            names = ["f_cat", "s", "c"]
+        else:
+            p = lambda: plan(how)
+            names = ["d_grp", "s", "c"]
+        ref, _ = Executor(cat).execute(p())
+        got, _ = Executor(cat, strategy=make_strategy(strategy)
+                          ).execute(p())
+        assert_same_rows(to_rows(got), to_rows(ref), names,
+                         err=(strategy, how, seed))
+
+
+def test_coalesce_rejects_string_columns():
+    """Dict codes are vocabulary-local: coalescing two string columns
+    must fail loudly, not return mixed-vocabulary garbage."""
+    t = Table.from_arrays(
+        {"a": np.array(["x", "y", "z"]), "b": np.array(["q", "r", "s"]),
+         "n": np.arange(3, dtype=np.int64)}, "t",
+        validity={"a": [True, False, True]})
+    with pytest.raises(TypeError, match="vocabulary-local"):
+        coalesce(col("a"), col("b"))(t)
+    # numeric coalesce stays supported
+    assert coalesce(col("n"), lit(0))(t).valid is None
