@@ -6,7 +6,7 @@ from typing import Dict, Optional
 _CATALOGS: Dict[float, dict] = {}
 
 STRATEGIES = ["no-pred-trans", "bloom-join", "yannakakis", "pred-trans",
-              "pred-trans-opt"]
+              "pred-trans-opt", "pred-trans-adaptive"]
 
 
 def catalog(sf: float):

@@ -36,7 +36,8 @@ def edge_cost(live_keys: int, probe_rows: int, shards: int = 256,
     }
 
 
-def distributed_join_main(sf: float, nshards: int = 8):
+def distributed_join_main(sf: float, nshards: int = 8,
+                          strategy: str = "pred-trans-adaptive"):
     """Wire-byte accounting for the distributed join runtime
     (`repro.core.engine_join_dist`) over all 20 TPC-H queries with
     predicate transfer on: per query, the bytes the chosen strategies
@@ -45,10 +46,17 @@ def distributed_join_main(sf: float, nshards: int = 8):
     repartitioned). Bytes are exchange-backend-independent (the
     simulated and `shard_map` exchanges ship the same packed blocks),
     so this bench runs anywhere and the numbers match the device run.
-    """
+
+    The transfer phase runs the adaptive scheduler by default: its
+    per-edge decisions are engine-independent, and in the sharded §6
+    deployment every *built* filter is OR-all-reduced across shards —
+    so a skipped edge also skips its `(p-1)·filter` broadcast bytes.
+    `transfer_broadcast_bytes` accounts the filters actually shipped,
+    `transfer_bytes_saved` what the skipped edges would have cost."""
     import time
 
     from benchmarks.common import catalog
+    from repro.core import bloom
     from repro.core.transfer import make_strategy
     from repro.relational import Executor
     from repro.tpch import QUERIES, build_query
@@ -63,16 +71,35 @@ def distributed_join_main(sf: float, nshards: int = 8):
             out += dist_joins(sub)
         return out
 
+    def saved_bytes(edges):
+        """Filter bytes the skipped edges would have broadcast (sized
+        by live build rows, like a real build), counted once per edge.
+        An edge that built in *any* pass counts as shipped, never as
+        saved: a min-max-cut edge broadcast its filter (the cut lands
+        on the receiving side), and a later-pass skip of an unchanged,
+        already-broadcast filter would have been a free reuse."""
+        built = {d.edge for d in edges if d.filter_bytes > 0}
+        per_edge = {}
+        for d in edges:
+            if d.skipped and d.edge not in built:
+                b = bloom.blocks_for(max(d.build_rows, 1)) \
+                    * bloom.LANES * 4
+                per_edge[d.edge] = max(per_edge.get(d.edge, 0), b)
+        return sum(per_edge.values())
+
     rows = []
     print("query,joins,broadcasts,shuffles,broadcast_KiB,shuffle_KiB,"
-          "seconds")
+          "xfer_KiB,xfer_saved_KiB,seconds")
     for qn in sorted(QUERIES):
-        ex = Executor(cat, make_strategy("pred-trans"),
+        ex = Executor(cat, make_strategy(strategy),
                       engine="distributed", dist_shards=nshards)
         t0 = time.perf_counter()
         _, stats = ex.execute(build_query(qn, sf=sf))
         dt = time.perf_counter() - t0
         joins = dist_joins(stats)
+        edges = stats.transfer_edges()
+        xfer_bytes = (nshards - 1) * sum(d.filter_bytes for d in edges)
+        xfer_saved = (nshards - 1) * saved_bytes(edges)
         row = {"query": f"Q{qn}",
                "joins": len(joins),
                "broadcasts": sum(j.strategy == "broadcast"
@@ -80,16 +107,26 @@ def distributed_join_main(sf: float, nshards: int = 8):
                "shuffles": sum(j.strategy == "shuffle" for j in joins),
                "broadcast_bytes": sum(j.broadcast_bytes for j in joins),
                "shuffle_bytes": sum(j.shuffle_bytes for j in joins),
+               "transfer_edges_applied": sum(not d.skipped
+                                             for d in edges),
+               "transfer_edges_skipped": sum(d.skipped for d in edges),
+               "transfer_broadcast_bytes": xfer_bytes,
+               "transfer_bytes_saved": xfer_saved,
                "seconds": dt}
         rows.append(row)
         print(f"Q{qn},{row['joins']},{row['broadcasts']},"
               f"{row['shuffles']},{row['broadcast_bytes']/2**10:.1f},"
-              f"{row['shuffle_bytes']/2**10:.1f},{dt:.3f}")
+              f"{row['shuffle_bytes']/2**10:.1f},"
+              f"{xfer_bytes/2**10:.1f},{xfer_saved/2**10:.1f},{dt:.3f}")
     tot_b = sum(r["broadcast_bytes"] for r in rows)
     tot_s = sum(r["shuffle_bytes"] for r in rows)
+    tot_x = sum(r["transfer_broadcast_bytes"] for r in rows)
+    tot_xs = sum(r["transfer_bytes_saved"] for r in rows)
     print(f"total broadcast {tot_b/2**20:.2f} MiB, "
-          f"shuffle {tot_s/2**20:.2f} MiB over {nshards} shards")
-    return {"nshards": nshards, "per_query": rows}
+          f"shuffle {tot_s/2**20:.2f} MiB, transfer filters "
+          f"{tot_x/2**20:.2f} MiB (+{tot_xs/2**20:.2f} MiB skipped) "
+          f"over {nshards} shards")
+    return {"nshards": nshards, "strategy": strategy, "per_query": rows}
 
 
 def main():

@@ -80,6 +80,121 @@ def _engine_rows(n: int):
     return rows
 
 
+def calibrate(n: int = 262_144, reps: int = 3):
+    """Cost coefficients for the adaptive transfer scheduler
+    (`repro.core.transfer.TransferCosts`), measured per bloom backend
+    through the same engine entry points the transfer phase uses:
+
+      probe — hash + Bloom-probe one key column against a filter;
+      build — hash + build a filter from a key column;
+      join  — sorted equi-join cost per input row (build + probe rows),
+              the per-row proxy for the downstream work a removed row
+              saves.
+
+    The join coefficient is *two-regime* (`TransferCosts.join_rate`):
+    per-probe-row cost of a selective sorted join at a cache-resident
+    build size (`join_small`) and at a memory-bound one (`join_large`)
+    — the same scale split the radix crossover below exhibits. The
+    recorded output lives in BENCH_tpch.json ("transfer_cost_
+    calibration"); `DEFAULT_COSTS` in repro.core.transfer carries the
+    last recorded values (end-to-end validated by the TPC-H sweep).
+    Off-TPU the pallas rows run in interpret mode, which is exactly
+    what the off-TPU scheduler should gate on."""
+    import jax
+
+    from repro.core.engine_bloom import get_engine
+    from repro.core.engine_join import sorted_join_indices
+
+    rng = np.random.default_rng(0)
+    on_tpu = jax.default_backend() == "tpu"
+    out = {}
+    for backend in ("numpy", "jax", "pallas"):
+        nb = n if backend != "pallas" or on_tpu else min(n, PALLAS_N)
+        keys = rng.integers(0, 10**9, nb).astype(np.int64)
+        eng = get_engine(backend)
+
+        def ready(x):
+            return jax.block_until_ready(x) if backend != "numpy" else x
+
+        filt = eng.build_filter(eng.keys(keys))
+
+        def probe_fresh():
+            # fresh EngineKeys per rep: the coefficient must include
+            # the per-column hash a vertex pays before its first probe
+            return ready(eng.probe_filter(filt, eng.keys(keys)))
+
+        def build_fresh():
+            return ready(eng.build_filter(eng.keys(keys)).words)
+
+        tiny = rng.integers(0, 10**9, 32).astype(np.int64)
+
+        def probe_tiny():
+            # per-edge fixed dispatch cost: at 32 rows the probe time
+            # is all overhead (TransferCosts.fixed)
+            return ready(eng.probe_filter(filt, eng.keys(tiny)))
+
+        dt_p, _ = _time(probe_fresh, reps=reps)
+        dt_b, _ = _time(build_fresh, reps=reps)
+        dt_f, _ = _time(probe_tiny, reps=reps)
+        out[backend] = {"probe": dt_p / nb * 1e9,
+                        "build": dt_b / nb * 1e9,
+                        "fixed": dt_f * 1e9,
+                        "n": nb}
+
+    def join_rate(nb, npr, match=0.25):
+        # selective join (match like a post-filter dimension): the
+        # per-probe-row cost a transfer-removed row would have paid
+        dom = int(nb / match)
+        bk = rng.choice(dom, nb, replace=False).astype(np.int64)
+        pk = rng.integers(0, dom, npr).astype(np.int64)
+        dt, _ = _time(lambda: sorted_join_indices(bk, pk), reps=reps)
+        return dt / npr * 1e9
+
+    join_small = join_rate(min(1 << 14, n), min(1 << 16, n * 4))
+    join_large = join_rate(min(1 << 17, n), min(1 << 19, n * 4))
+    for backend in out:
+        out[backend]["join_small"] = join_small
+        out[backend]["join_large"] = join_large
+    return out
+
+
+def join_crossover(sizes=(1 << 13, 1 << 14, 1 << 15, 1 << 16, 1 << 17,
+                          1 << 18), probe_factor: int = 4,
+                   reps: int = 3):
+    """Sorted vs radix-partitioned join per build size: the smallest
+    power-of-two build where the radix path wins is the autotune seed
+    for `NumpyJoinEngine.radix_min` (ROADMAP "Radix join tuning").
+    Returns {"rows": [(build_n, sorted_ns_row, radix_ns_row)],
+    "crossover": n_or_None} — per-row costs, interleaved so the ratio
+    is drift-immune."""
+    from repro.core.engine_join import radix_join_indices, \
+        sorted_join_indices
+    rng = np.random.default_rng(0)
+    rows = []
+    crossover = None
+    for nb in sizes:
+        bk = rng.integers(0, nb, nb).astype(np.int64)
+        pk = rng.integers(0, nb, nb * probe_factor).astype(np.int64)
+        ts, tr = [], []
+        sorted_join_indices(bk, pk)          # warm
+        radix_join_indices(bk, pk)
+        for _ in range(reps):                # interleaved pairs
+            t0 = time.perf_counter()
+            sorted_join_indices(bk, pk)
+            t1 = time.perf_counter()
+            radix_join_indices(bk, pk)
+            t2 = time.perf_counter()
+            ts.append(t1 - t0)
+            tr.append(t2 - t1)
+        per = nb * (1 + probe_factor)
+        s, r = sorted(ts)[reps // 2] / per * 1e9, \
+            sorted(tr)[reps // 2] / per * 1e9
+        rows.append((nb, s, r))
+        if crossover is None and r < s:
+            crossover = nb
+    return {"rows": rows, "crossover": crossover}
+
+
 def run(n: int = 1_000_000):
     from repro.core import bloom
     rng = np.random.default_rng(0)
@@ -126,7 +241,20 @@ def main(n: int = 1_000_000):
     d = dict(rows)
     print(f"\nbeta (bloom probe / semijoin probe): "
           f"{d['bloom_probe_hashed'] / d['semijoin_sorted_numpy']:.2f}")
-    return rows
+
+    cal = calibrate()
+    print("\ncalibration (adaptive scheduler, ns/row):")
+    print("backend,probe,build,join_small,join_large")
+    for backend, c in cal.items():
+        print(f"{backend},{c['probe']:.1f},{c['build']:.1f},"
+              f"{c['join_small']:.1f},{c['join_large']:.1f}")
+    xo = join_crossover()
+    print("\njoin crossover (build_n,sorted_ns_row,radix_ns_row):")
+    for nb, s, r in xo["rows"]:
+        print(f"{nb},{s:.1f},{r:.1f}")
+    print(f"crossover: {xo['crossover']}  (NumpyJoinEngine.radix_min "
+          f"seed)")
+    return {"rows": rows, "calibration": cal, "join_crossover": xo}
 
 
 if __name__ == "__main__":

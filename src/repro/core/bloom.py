@@ -237,6 +237,103 @@ def probe_np(words: np.ndarray, lo: np.ndarray, hi: np.ndarray,
     return out
 
 
+# -- min-max (zone) filters --------------------------------------------------
+#
+# Near-free complement to the Bloom filters (DESIGN.md §11): a transfer
+# edge's build side publishes the [lo, hi] range of its *live, valid*
+# keys alongside the Bloom words. The probing side can then
+#
+#   * short-circuit the whole edge when the ranges are provably
+#     disjoint (every probe key misses — no hash, no probe);
+#   * skip the range test when its own conservative range is contained
+#     in the build range (the min-max filter provably passes every row);
+#   * otherwise apply the O(1)-per-row comparison *before* the Bloom
+#     probe, so out-of-range rows never reach the hash rounds.
+#
+# Ranges are only meaningful for order-preserving key encodings
+# (single non-dictionary columns and the packed two-column path —
+# `ops.stable_key_encoding`); the hash-combine fallback scrambles
+# order, so the scheduler disables min-max there.
+
+
+@dataclasses.dataclass(frozen=True)
+class MinMaxFilter:
+    """Closed key range [lo, hi] of a filter's inserted keys. An empty
+    build side is encoded as (0, -1) (matches `Column.value_range`) and
+    is disjoint from everything."""
+
+    lo: int
+    hi: int
+
+    @property
+    def empty(self) -> bool:
+        return self.hi < self.lo
+
+    def disjoint(self, lo: int, hi: int) -> bool:
+        """No key in [lo, hi] can be in this filter."""
+        return self.empty or hi < self.lo or self.hi < lo
+
+    def contains(self, lo: int, hi: int) -> bool:
+        """Every key in [lo, hi] passes this filter (non-filtering)."""
+        return (not self.empty) and self.lo <= lo and hi <= self.hi
+
+    def probe_np(self, keys: np.ndarray) -> np.ndarray:
+        if self.empty:
+            return np.zeros(len(keys), bool)
+        return (keys >= self.lo) & (keys <= self.hi)
+
+
+def key_range(keys: np.ndarray) -> Tuple[int, int]:
+    """(min, max) of a key vector; empty -> (0, -1)."""
+    if len(keys) == 0:
+        return (0, -1)
+    return int(keys.min()), int(keys.max())
+
+
+# -- KMV distinct-count estimator --------------------------------------------
+#
+# The adaptive transfer scheduler (repro.core.transfer) estimates a
+# build side's live distinct-key count from the hash state the Bloom
+# build needs anyway (`EngineKeys.hga` — uniform uint32), so the
+# estimate costs one partition pass over already-computed hashes and
+# never an extra scan of the table. K-minimum-values: with the k-th
+# smallest of n uniform hashes at position t in [0, 2^32), the distinct
+# count is ≈ (k-1) · 2^32 / t (Bar-Yossef et al.; ±1/sqrt(k) relative
+# error — k=256 gives ~6%, plenty for a skip/apply decision).
+
+KMV_K = 256
+
+
+def kmv_distinct(h: np.ndarray, k: int = KMV_K) -> int:
+    """Distinct-count estimate from uint32 hash values (exact below
+    ~4k rows). Duplicate keys put duplicate hashes among the minima, so
+    the partition width grows (O(n) per round, bounded at 16k values
+    examined) until it holds k *distinct* values; if heavy multiplicity
+    exhausts the budget first, the estimate comes from however many
+    distinct minima were found (same threshold semantics, wider error
+    bars — fine for a skip/apply decision, where a low-cardinality
+    build side reads sel ≈ 1 regardless). Never a full O(n log n) sort
+    of the column."""
+    n = len(h)
+    if n == 0:
+        return 0
+    if n <= 4 * k:
+        return len(np.unique(h))
+    kk = k
+    while True:
+        kk = min(kk, n)
+        uniq = np.unique(np.partition(h, kk - 1)[: kk] if kk < n
+                         else h)
+        if len(uniq) >= k or kk >= min(n, 16 * k):
+            break
+        kk *= 4
+    kd = min(len(uniq), k)
+    t = int(uniq[kd - 1])
+    if kd < 2 or t == 0:
+        return kd
+    return max(kd, int((kd - 1) * (2.0 ** 32) / t))
+
+
 # -- hash-once key cache -----------------------------------------------------
 #
 # Predicate transfer touches the same (vertex, key column) many times: a

@@ -226,7 +226,8 @@ def pack_filters(filters: Sequence[np.ndarray], k: int) -> PackedFilters:
 
 
 def probe_packed_np(packed: PackedFilters, keys: Sequence[EngineKeys],
-                    alive: Optional[np.ndarray], n_rows: int
+                    alive: Optional[np.ndarray], n_rows: int,
+                    live_after: Optional[list] = None
                     ) -> Tuple[Optional[np.ndarray], int]:
     """Apply every packed filter, in order, to the `alive` row-index set
     (`alive=None` means every row — the common first-pass case, probed
@@ -235,14 +236,18 @@ def probe_packed_np(packed: PackedFilters, keys: Sequence[EngineKeys],
     Returns (surviving indices or None if all survived, rows actually
     probed). Survivors-only early exit at two levels: rows are dropped
     after the first missing hash round, and later filters see only
-    earlier survivors."""
+    earlier survivors. When `live_after` is given, the live count after
+    each filter is appended to it (the adaptive scheduler's
+    estimated-vs-actual selectivity feedback)."""
     flat = packed.words.reshape(-1)
     rows_probed = 0
     _u5, _u31, _upos = np.uint32(5), np.uint32(31), np.uint32(
         BLOCK_BITS - 1)
     for f in range(len(packed.offsets)):
         if alive is not None and alive.size == 0:
-            break
+            if live_after is not None:
+                live_after.append(0)
+            continue
         m = n_rows if alive is None else int(alive.size)
         rows_probed += m
         l2 = packed.log2nb[f]
@@ -279,6 +284,9 @@ def probe_packed_np(packed: PackedFilters, keys: Sequence[EngineKeys],
                     if sel.size == 0:
                         break
         alive = cur
+        if live_after is not None:
+            live_after.append(n_rows if alive is None
+                              else int(alive.size))
     return alive, rows_probed
 
 
@@ -332,6 +340,18 @@ def _build_gather(lo, hi, idx, count, nblocks, k):
     return bloom.build(lo[idx], hi[idx], mask, nblocks, k=k)
 
 
+@functools.partial(jax.jit, static_argnames=("nblocks", "k"))
+def _build_count_valid(lo, hi, valid, count, nblocks, k):
+    mask = (jnp.arange(lo.shape[0]) < count) & valid
+    return bloom.build(lo, hi, mask, nblocks, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("nblocks", "k"))
+def _build_gather_valid(lo, hi, idx, valid, count, nblocks, k):
+    mask = (jnp.arange(idx.shape[0]) < count) & valid[idx]
+    return bloom.build(lo[idx], hi[idx], mask, nblocks, k=k)
+
+
 @jax.jit
 def _gather2(lo, hi, idx):
     return lo[idx], hi[idx]
@@ -372,7 +392,17 @@ def _compact(ok, idx, bucket: int):
 class VertexScan:
     """One vertex's transfer step. `probe` applies the (LIP-ordered)
     incoming filters; `build` emits an outgoing filter from the same
-    survivor set — the probe→build pair is one logical scan."""
+    survivor set — the probe→build pair is one logical scan.
+
+    `probe_range` / `gather_live` are the adaptive scheduler's hooks
+    (DESIGN.md §11): a min-max pre-filter over the raw keys, and the
+    live-row key values an emitted filter's own range is computed from.
+    Both are host-side control-plane ops — the raw composite key is
+    host-resident for every backend (`Vertex.key`)."""
+
+    #: live count after each filter of the last `probe` call (the
+    #: adaptive scheduler's estimated-vs-actual selectivity feedback)
+    live_after: Sequence[int] = ()
 
     def probe(self, incoming: Sequence[Tuple[np.ndarray, EngineKeys]]
               ) -> int:
@@ -386,7 +416,32 @@ class VertexScan:
     def live(self) -> int:
         raise NotImplementedError
 
-    def build(self, ek: EngineKeys, nblocks: int):
+    def build(self, ek: EngineKeys, nblocks: int,
+              valid: Optional[np.ndarray] = None):
+        """Emit filter words from the live set; rows where `valid` is
+        False are additionally excluded from the *build only* (the
+        NULL-tight contract: NULL keys never match, so they never need
+        filter bits — the vertex's own mask is untouched)."""
+        raise NotImplementedError
+
+    def probe_range(self, raw: np.ndarray, lo: int, hi: int) -> int:
+        """Shrink the live set to rows with lo <= raw <= hi. Returns
+        the number of rows tested (the live count going in)."""
+        raise NotImplementedError
+
+    def gather_live(self, raw: np.ndarray) -> np.ndarray:
+        """Values of `raw` (a full-column host array) at the live rows."""
+        raise NotImplementedError
+
+    def live_hashes(self, ek: EngineKeys) -> np.ndarray:
+        """uint32 block hashes of the live rows (the KMV distinct
+        estimator's input — shares `EngineKeys`' hash cache with the
+        build that follows)."""
+        raise NotImplementedError
+
+    def clear(self) -> None:
+        """Empty the live set without testing a row (a disjoint min-max
+        range proved no row can survive)."""
         raise NotImplementedError
 
 
@@ -409,16 +464,54 @@ class _NumpyScan(VertexScan):
 
     def probe(self, incoming):
         if not incoming:
+            self.live_after = []
             return 0
         if self._alive is None and not self._is_full():
             self._alive = np.flatnonzero(self._mask0)
         packed = pack_filters([w for w, _ in incoming], self._k)
+        counts: list = []
         self._alive, rows = probe_packed_np(
             packed, [ek for _, ek in incoming], self._alive,
-            len(self._mask0))
+            len(self._mask0), live_after=counts)
+        self.live_after = counts
         self._probed = True
         self._mask_out = None
         return rows
+
+    def probe_range(self, raw, lo, hi):
+        if self._alive is None and not self._is_full():
+            self._alive = np.flatnonzero(self._mask0)
+        if self._alive is None:
+            rows = len(self._mask0)
+            keep = (raw >= lo) & (raw <= hi)
+            if not keep.all():
+                self._alive = np.flatnonzero(keep)
+        else:
+            rows = int(self._alive.size)
+            vals = raw[self._alive]
+            keep = (vals >= lo) & (vals <= hi)
+            if not keep.all():
+                self._alive = self._alive[keep]
+        self._probed = True
+        self._mask_out = None
+        return rows
+
+    def gather_live(self, raw):
+        if self._alive is not None:
+            return raw[self._alive]
+        if self._is_full():
+            return raw
+        return raw[self._mask0]
+
+    def live_hashes(self, ek):
+        if self._alive is None and not self._is_full():
+            self._alive = np.flatnonzero(self._mask0)
+        return ek.hga(self._alive)[0]
+
+    def clear(self):
+        self._alive = np.empty(0, np.int64)
+        self._probed = True
+        self._mask_out = None
 
     @property
     def mask(self):
@@ -436,12 +529,20 @@ class _NumpyScan(VertexScan):
             return int(self._alive.size)
         if self._is_full():
             return len(self._mask0)
-        return int(self._mask0.sum())
+        return int(np.count_nonzero(self._mask0))
 
-    def build(self, ek, nblocks):
+    def build(self, ek, nblocks, valid=None):
         if self._alive is None and not self._is_full():
             self._alive = np.flatnonzero(self._mask0)
-        return build_alive_np(ek, self._alive, nblocks, self._k)
+        alive = self._alive
+        if valid is not None:
+            # NULL-tight: invalid-key rows leave the *build* set only
+            if alive is None:
+                if not valid.all():
+                    alive = np.flatnonzero(valid)
+            else:
+                alive = alive[valid[alive]]
+        return build_alive_np(ek, alive, nblocks, self._k)
 
 
 class _DeviceScan(VertexScan):
@@ -480,11 +581,15 @@ class _DeviceScan(VertexScan):
 
     def probe(self, incoming):
         if not incoming:
+            self.live_after = []
             return 0
         rows = 0
+        counts: list = []
+        self.live_after = counts
         for words, ek in incoming:
             if self._count == 0:
-                break
+                counts.append(0)
+                continue
             rows += self._count
             ok = self._e.probe_idx(words, ek, self._idx, self._count,
                                    self._n)
@@ -507,7 +612,46 @@ class _DeviceScan(VertexScan):
             if count != self._count:
                 self._count = count
                 self._mask_out = None
+            counts.append(self._count)
         return rows
+
+    def probe_range(self, raw, lo, hi):
+        """Host-side range pre-filter (control plane): the survivor-id
+        array is synced, tested against the raw keys, and re-bucketed —
+        the same host-compaction idiom the off-TPU probe path uses. An
+        on-device range op only pays off fused into the probe kernel
+        (ROADMAP: TPU validation)."""
+        if self._count == 0:
+            return 0
+        idx = self._host_idx()
+        vals = raw if idx is None else raw[idx]
+        rows = self._count
+        keep = (vals >= lo) & (vals <= hi)
+        if not keep.all():
+            live = (np.flatnonzero(keep) if idx is None
+                    else idx[keep]).astype(np.int32)
+            self._count = int(live.size)
+            self._bucket = self._e.bucket(self._count)
+            self._idx = _pad(live, self._bucket)
+            if not self._e.host_compact:
+                self._idx = jnp.asarray(self._idx)
+            self._mask_out = None
+        return rows
+
+    def gather_live(self, raw):
+        idx = self._host_idx()
+        return raw if idx is None else raw[idx]
+
+    def live_hashes(self, ek):
+        return ek.hga(self._host_idx())[0]
+
+    def clear(self):
+        self._count = 0
+        self._bucket = self._e.bucket(0)
+        self._idx = _pad(np.empty(0, np.int32), self._bucket)
+        if not self._e.host_compact:
+            self._idx = jnp.asarray(self._idx)
+        self._mask_out = None
 
     def _host_idx(self) -> Optional[np.ndarray]:
         """Live original row ids on host (None = every row)."""
@@ -531,12 +675,21 @@ class _DeviceScan(VertexScan):
     def live(self):
         return self._count
 
-    def build(self, ek, nblocks):
+    def build(self, ek, nblocks, valid=None):
         if self._e.host_build:
-            return jnp.asarray(build_alive_np(ek, self._host_idx(),
-                                              nblocks, self._e.k))
+            idx = self._host_idx()
+            if valid is not None:
+                # NULL-tight: intersect the live ids with the validity
+                # mask on host (same control-plane idiom as compaction)
+                if idx is None:
+                    if not valid.all():
+                        idx = np.flatnonzero(valid).astype(np.int64)
+                else:
+                    idx = idx[valid[idx]]
+            return jnp.asarray(build_alive_np(ek, idx, nblocks,
+                                              self._e.k))
         return self._e.build_idx(ek, self._idx, self._count, self._n,
-                                 nblocks)
+                                 nblocks, valid=valid)
 
 
 # --------------------------------------------------------------------------
@@ -573,7 +726,7 @@ class BloomEngine:
         raise NotImplementedError
 
     def build_idx(self, ek: "EngineKeys", idx, count: int, n: int,
-                  nblocks: int):
+                  nblocks: int, valid: Optional[np.ndarray] = None):
         raise NotImplementedError
 
     # -- strategy-facing ----------------------------------------------
@@ -589,13 +742,26 @@ class BloomEngine:
     def build_filter(self, ek: EngineKeys,
                      mask: Optional[np.ndarray] = None,
                      bits_per_key: int = DEFAULT_BITS_PER_KEY,
-                     nblocks: Optional[int] = None) -> BloomFilter:
-        n_live = len(ek) if mask is None else int(np.asarray(mask).sum())
+                     nblocks: Optional[int] = None,
+                     valid: Optional[np.ndarray] = None) -> BloomFilter:
+        """`valid=False` rows are excluded from the build (and the
+        sizing) — the NULL-tight hook: NULL join keys never match, so
+        they never earn filter bits."""
+        if valid is not None:
+            valid = np.asarray(valid, bool)
+            if valid.all():
+                valid = None
+        if mask is None:
+            n_live = len(ek) if valid is None else int(valid.sum())
+        else:
+            mask = np.asarray(mask, bool)
+            n_live = int(mask.sum()) if valid is None \
+                else int((mask & valid).sum())
+        ins = np.ones(len(ek), bool) if mask is None else mask
         if nblocks is None:
             nblocks = blocks_for(max(n_live, 1), bits_per_key)
-        scan = self.begin(np.ones(len(ek), bool) if mask is None
-                          else np.asarray(mask, bool))
-        return BloomFilter(scan.build(ek, nblocks), self.k)
+        scan = self.begin(ins)
+        return BloomFilter(scan.build(ek, nblocks, valid=valid), self.k)
 
     def probe_filter(self, filt: BloomFilter, ek: EngineKeys,
                      live: Optional[np.ndarray] = None) -> np.ndarray:
@@ -672,8 +838,16 @@ class JaxEngine(BloomEngine):
             return _probe_hashed_count(words, h, g1, g2, count, self.k)
         return _probe_hashed_gather(words, h, g1, g2, idx, count, self.k)
 
-    def build_idx(self, ek, idx, count, n, nblocks):
+    def build_idx(self, ek, idx, count, n, nblocks, valid=None):
         lo, hi = ek.dev(self.bucket(n))
+        if valid is not None:
+            v = jnp.asarray(_pad(np.asarray(valid, bool),
+                                 self.bucket(n), False))
+            if idx is None:
+                return _build_count_valid(lo, hi, v, count, nblocks,
+                                          self.k)
+            return _build_gather_valid(lo, hi, idx, v, count, nblocks,
+                                       self.k)
         if idx is None:
             return _build_count(lo, hi, count, nblocks, self.k)
         return _build_gather(lo, hi, idx, count, nblocks, self.k)
@@ -713,13 +887,19 @@ class PallasEngine(BloomEngine):
             lo, hi = _gather2(lo, hi, idx)
         return _mask_count(self.probe_op(words, lo, hi), count)
 
-    def build_idx(self, ek, idx, count, n, nblocks):
+    def build_idx(self, ek, idx, count, n, nblocks, valid=None):
         lo, hi = ek.dev(self.bucket(n))
+        vdev = None if valid is None else jnp.asarray(
+            _pad(np.asarray(valid, bool), self.bucket(n), False))
         if idx is not None:
             lo, hi = _gather2(lo, hi, idx)
             mask = _iota_mask(idx.shape[0], count)
+            if vdev is not None:
+                mask = mask & vdev[idx]
         else:
             mask = _iota_mask(lo.shape[0], count)
+            if vdev is not None:
+                mask = mask & vdev
         return self.build_op(lo, hi, mask, nblocks)
 
     def probe_op(self, words, lo, hi):

@@ -268,13 +268,24 @@ class JoinEngine:
         return bidx, pidx
 
 
+#: sorted-vs-radix crossover, seeded from the recorded
+#: `benchmarks/kernel_bench.join_crossover` sweep (the same measurement
+#: run that calibrates the adaptive transfer scheduler's coefficients;
+#: recorded in BENCH_tpch.json "join_crossover"). On the reference box
+#: the radix path only beats the sorted reference from 2^18 build rows
+#: (median sorted/radix ratio 1.3 there, <=1.0 below) — the earlier
+#: 64k default was tuned on a different machine (ROADMAP "Radix join
+#: tuning"). Re-run `kernel_bench` and update on new hardware.
+RADIX_MIN = 1 << 18
+
+
 class NumpyJoinEngine(JoinEngine):
     """Host path: sorted reference below `radix_min` build rows, the
     radix-partitioned variant above."""
 
     backend = "numpy"
 
-    def __init__(self, radix_min: int = 1 << 16):
+    def __init__(self, radix_min: int = RADIX_MIN):
         self.radix_min = radix_min
 
     def join_indices(self, build_key, probe_key, how="inner"):

@@ -6,7 +6,8 @@ executor -> graph <- transfer.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Sequence, Tuple
+import math
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,10 +34,23 @@ class Vertex:
     # query" across both phases
     raw_keys: Dict[Tuple[str, ...], "np.ndarray"] = dataclasses.field(
         default_factory=dict)
+    # AND-of-validity per key-column tuple (None = every row valid),
+    # cached like raw_keys: the NULL-tight build path and the min-max
+    # range computation both exclude invalid-key rows
+    key_valids: Dict[Tuple[str, ...], Optional["np.ndarray"]] = \
+        dataclasses.field(default_factory=dict)
+    # number of join nodes this leaf's rows flow through before the
+    # first join that can kill them (one whose other side was locally
+    # filtered) — annotated from the plan by the executor
+    # (`annotate_join_depth`); the adaptive scheduler's benefit model
+    # multiplies by it (a removed row saves every join it would have
+    # paid). 1 when unknown.
+    join_depth: int = 1
 
     @property
     def live(self) -> int:
-        return int(self.mask.sum())
+        # count_nonzero is ~7x cheaper than bool .sum() (SIMD popcount)
+        return int(np.count_nonzero(self.mask))
 
     def key(self, cols: Sequence[str]) -> "np.ndarray":
         """Composite join key over `table` for `cols`, computed once per
@@ -50,6 +64,17 @@ class Vertex:
             k = ops.composite_key(self.table, cols)
             self.raw_keys[cols] = k
         return k
+
+    def key_valid(self, cols: Sequence[str]) -> Optional["np.ndarray"]:
+        """Rows whose key columns are all non-NULL (None = every row).
+        NULL slots hold representative bytes that never equi-match, so
+        filter *builds* may exclude them for free (NULL-tight
+        transfer)."""
+        cols = tuple(cols)
+        if cols not in self.key_valids:
+            from repro.relational import ops
+            self.key_valids[cols] = ops.key_validity(self.table, cols)
+        return self.key_valids[cols]
 
     @property
     def informative(self) -> bool:
@@ -85,6 +110,45 @@ class Edge:
 
 
 @dataclasses.dataclass
+class EdgeDecision:
+    """One per-edge per-pass scheduling decision (adaptive scheduler,
+    DESIGN.md §11; the plain strategies record their `pruned` skips
+    here too so skipped transfers never vanish from the accounting).
+
+    `action` is one of:
+      applied        — filter built (or reused) and probed;
+      skipped        — cost gate: modeled cost exceeded modeled benefit;
+      pruned         — source is a complete, untouched base relation
+                       (transfer-path pruning / sel_est == 0);
+      minmax-cut     — build/probe ranges provably disjoint, the whole
+                       probe side was cut without a Bloom probe;
+      skipped-forced — mode="force_skip" sweep (tests).
+
+    A non-applied edge reports `rows_probed == 0`. `est_sel` is the
+    modeled removed-row fraction; `act_sel` the measured one (NaN when
+    the edge never probed, or for `applied` edges whose probe was
+    batched away by an earlier empty survivor set). Actual selectivity
+    is *conditional* — measured on the rows still alive when this
+    edge's filter ran in LIP order."""
+
+    edge: str                     # "src->dst[cols]"
+    pass_idx: int
+    action: str
+    build_rows: int = 0
+    probe_rows: int = 0
+    rows_probed: int = 0
+    est_sel: float = 0.0
+    act_sel: float = math.nan
+    cost_ns: float = 0.0
+    benefit_ns: float = 0.0
+    filter_bytes: int = 0         # bytes built (0 when skipped/reused)
+
+    @property
+    def skipped(self) -> bool:
+        return self.action != "applied"
+
+
+@dataclasses.dataclass
 class TransferStats:
     strategy: str = ""
     backend: str = ""             # bloom engine backend (numpy/jax/pallas)
@@ -94,14 +158,48 @@ class TransferStats:
     # rows_probed counts rows actually tested against a filter (the live
     # set at the moment each filter is applied), NOT the survivors
     rows_probed: int = 0
+    # rows tested against a min-max range filter (cheap comparisons,
+    # counted separately so rows_probed keeps meaning "Bloom-probed")
+    rows_range_tested: int = 0
     rows_semijoin_build: int = 0
     rows_semijoin_probe: int = 0
     per_vertex: Dict[str, Tuple[int, int]] = dataclasses.field(
         default_factory=dict)  # alias -> (rows_before, rows_after)
+    # per-edge per-pass scheduling decisions (adaptive scheduler; the
+    # plain strategies record their prune skips here too)
+    edges: List[EdgeDecision] = dataclasses.field(default_factory=list)
+    passes_run: int = 0
 
-    def record_vertices(self, vertices: Dict[int, Vertex], before: Dict[int, int]):
+    def record_vertices(self, vertices: Dict[int, Vertex],
+                        before: Dict[int, int],
+                        after: Optional[Dict[int, int]] = None):
+        """`after` lets a strategy that already tracks live counts
+        (the adaptive scheduler's cache) skip re-summing every mask."""
         for lid, v in vertices.items():
-            self.per_vertex[v.alias] = (before[lid], v.live)
+            n = after.get(lid) if after is not None else None
+            self.per_vertex[v.alias] = (before[lid],
+                                        v.live if n is None else n)
+
+    def decision_counts(self) -> Dict[str, int]:
+        return decision_counts(self.edges)
+
+    @property
+    def edges_applied(self) -> int:
+        return sum(not d.skipped for d in self.edges)
+
+    @property
+    def edges_skipped(self) -> int:
+        return sum(d.skipped for d in self.edges)
+
+
+def decision_counts(edges: Sequence[EdgeDecision]) -> Dict[str, int]:
+    """Per-action tally over any `EdgeDecision` list (one stats object
+    or a query's merged outer+subquery edges) — the single counting
+    site the benches share."""
+    out: Dict[str, int] = {}
+    for d in edges:
+        out[d.action] = out.get(d.action, 0) + 1
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -23,20 +23,23 @@ TPU kernels, all with identical filter semantics.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import bloom
+from repro.core.bloom import MinMaxFilter
 from repro.core.engine_bloom import BloomEngine, EngineKeys, get_engine
 from repro.core.graph import (  # noqa: F401  (re-exported)
-    Edge, NoPredTrans, Strategy, TransferStats, Vertex,
+    Edge, EdgeDecision, NoPredTrans, Strategy, TransferStats, Vertex,
 )
 from repro.relational import ops
 
 # strategies that take a `backend=` engine switch (numpy | jax | pallas)
-BACKEND_AWARE = {"bloom-join", "pred-trans", "pred-trans-opt"}
+BACKEND_AWARE = {"bloom-join", "pred-trans", "pred-trans-opt",
+                 "pred-trans-adaptive"}
 
 
 class BloomJoin(Strategy):
@@ -60,7 +63,11 @@ class BloomJoin(Strategy):
 
     def per_join_filter(self, build, probe, build_keys, probe_keys, stats):
         bk = self.engine.keys(ops.composite_key(build, build_keys))
-        filt = self.engine.build_filter(bk, bits_per_key=self.bits_per_key)
+        # NULL-tight: NULL build keys never match, so they stay out of
+        # the filter (and its sizing)
+        filt = self.engine.build_filter(
+            bk, bits_per_key=self.bits_per_key,
+            valid=ops.key_validity(build, build_keys))
         pk = self.engine.keys(ops.composite_key(probe, probe_keys))
         hit = self.engine.probe_filter(filt, pk)
         stats.filters_built += 1
@@ -69,11 +76,18 @@ class BloomJoin(Strategy):
         return hit
 
 
-def _transfer_order(vertices: Dict[int, Vertex]) -> List[int]:
+def _edge_label(src: Vertex, dst: Vertex, cols: Sequence[str]) -> str:
+    return f"{src.alias}->{dst.alias}[{','.join(cols)}]"
+
+
+def _transfer_order(vertices: Dict[int, Vertex],
+                    live: Optional[Dict[int, int]] = None) -> List[int]:
     """Small -> large total order (paper §3.2 heuristic). Ties broken by
     leaf id; the orientation is therefore acyclic by construction."""
-    return [lid for lid, _ in sorted(
-        vertices.items(), key=lambda kv: (kv[1].live, kv[0]))]
+    if live is None:
+        live = {lid: v.live for lid, v in vertices.items()}
+    return [lid for lid in sorted(vertices,
+                                  key=lambda lid: (live[lid], lid))]
 
 
 class PredTrans(Strategy):
@@ -107,9 +121,13 @@ class PredTrans(Strategy):
     def prefilter(self, vertices, edges):
         stats = TransferStats(strategy=self.name,
                               backend=self.engine.backend)
-        before = {lid: v.live for lid, v in vertices.items()}
+        # initial live counts, shared with the adaptive scheduler's
+        # live cache (mask.sum() is O(rows) — never re-sum a mask
+        # nothing touched)
+        self._live0 = before = {lid: v.live
+                                for lid, v in vertices.items()}
         t0 = time.perf_counter()
-        order = _transfer_order(vertices)
+        order = _transfer_order(vertices, before)
         rank = {lid: i for i, lid in enumerate(order)}
         self._hk_cache: Dict[Tuple[int, Tuple[str, ...]],
                              EngineKeys] = {}
@@ -123,14 +141,19 @@ class PredTrans(Strategy):
             if e.v in adj and e.v != e.u:
                 adj[e.v].append((ei, e))
 
+        self._run_passes(order, rank, vertices, adj, stats)
+
+        stats.seconds = time.perf_counter() - t0
+        stats.record_vertices(vertices, before,
+                              after=getattr(self, "_lives", None))
+        return stats
+
+    def _run_passes(self, order, rank, vertices, adj, stats):
         for p in range(self.passes):
             forward = (p % 2 == 0)
             seq = order if forward else order[::-1]
-            self._one_pass(seq, rank, forward, vertices, adj, stats)
-
-        stats.seconds = time.perf_counter() - t0
-        stats.record_vertices(vertices, before)
-        return stats
+            self._one_pass(seq, rank, forward, vertices, adj, stats, p)
+            stats.passes_run += 1
 
     def _hashed(self, v: Vertex, cols: Sequence[str]) -> EngineKeys:
         """Hash a vertex's key column once and reuse across all edges and
@@ -144,7 +167,8 @@ class PredTrans(Strategy):
             self._hk_cache[key] = hk
         return hk
 
-    def _one_pass(self, seq, rank, forward, vertices, adj, stats):
+    def _one_pass(self, seq, rank, forward, vertices, adj, stats,
+                  pass_idx):
         """Process vertices in `seq` order; a filter flows along edge
         (a,b) iff rank order matches the pass direction and the edge
         allows that direction."""
@@ -176,27 +200,532 @@ class PredTrans(Strategy):
                 v.mask = scan.mask
             # 2. build transformed outgoing filters from the same
             #    survivor set — probe→build is one scan, never a rescan
-            if self.prune and not v.informative:
-                continue                # transfer-path pruning (§3.2)
             out_edges = [(ei, e) for ei, e in adj[lid]
                          if flows(lid, e.other(lid), e)]
             if not out_edges:
                 continue
             live = scan.live
+            if self.prune and not v.informative:
+                # transfer-path pruning (§3.2) — skipped edges still
+                # report a decision (0 probed rows), never vanish.
+                # Destination counts come from the pre-transfer cache:
+                # stats bookkeeping must not re-popcount masks inside
+                # the timed loop.
+                for ei, e in out_edges:
+                    dv = vertices[e.other(lid)]
+                    stats.edges.append(EdgeDecision(
+                        _edge_label(v, dv, e.endpoint_cols(lid)),
+                        pass_idx, "pruned", build_rows=live,
+                        probe_rows=self._live0.get(dv.leaf_id, 0)))
+                continue
             nblocks = bloom.blocks_for(max(live, 1), self.bits_per_key)
             sel = live / max(v.base_rows if v.base_rows > 0
                              else len(v.table), 1)
             built: Dict[int, np.ndarray] = {}   # same cols => same filter
             for ei, e in out_edges:
-                hk = self._hashed(v, e.endpoint_cols(lid))
+                cols = e.endpoint_cols(lid)
+                hk = self._hashed(v, cols)
                 words = built.get(id(hk))
                 if words is None:
-                    words = scan.build(hk, nblocks)
+                    # NULL-tight: invalid-key rows never match, so they
+                    # never earn filter bits (the vertex mask — and the
+                    # filter sizing by live rows — stay untouched)
+                    words = scan.build(hk, nblocks,
+                                       valid=v.key_valid(cols))
                     built[id(hk)] = words
                 filt = bloom.BloomFilter(words, self.k)
                 pending[ei] = (filt, sel)
                 stats.filters_built += 1
                 stats.filter_bytes += filt.nbytes()
+
+
+# --------------------------------------------------------------------------
+# adaptive cost-gated scheduling (DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferCosts:
+    """Per-row cost coefficients (ns) for the adaptive scheduler's
+    skip/apply decision (DESIGN.md §11).
+
+    The *cost* side is linear: hash+probe per probe-side row and
+    hash+build per build-side row, measured per backend by
+    `benchmarks/kernel_bench.calibrate` (recorded in BENCH_tpch.json
+    under "transfer_cost_calibration").
+
+    The *benefit* side is two-regime: the per-row join work a removed
+    row saves depends on scale. Below `large_n` rows a join's build
+    side is cache-resident and its probe+assembly costs about as much
+    as the Bloom probe itself (`join_small`); above it, sorts and
+    searches go memory-bound and each surviving row is several times
+    more expensive (`join_large`). The boundary is the same
+    measurement family as the sorted-vs-radix crossover
+    (`kernel_bench.join_crossover` / `engine_join.RADIX_MIN`).
+    Absolute accuracy is not required — only the cost/benefit *ratio*
+    gates an edge, and the `--check` bench gate (paired
+    adaptive/pred-trans ratios, per query) enforces the end-to-end
+    consequences."""
+
+    probe: float        # Bloom probe (incl. hash) per probe-side row
+    build: float        # filter build (incl. hash) per build-side row
+    join_small: float   # downstream join ns/row, cache-resident case
+    join_large: float   # downstream join ns/row, memory-bound case
+    # fixed per-applied-edge cost (ns): hash/probe/build dispatch and
+    # estimation overhead is size-independent at the bottom (a 25-row
+    # probe costs the same as a 1000-row one — kernel_bench measures
+    # it as the probe time at tiny n). Edges whose whole benefit is
+    # below this are pure overhead no matter how selective.
+    fixed: float = 300_000.0
+    # the large regime needs the vertex itself past this row count …
+    # (same measurement family as the sorted-vs-radix crossover,
+    # engine_join.RADIX_MIN — the join goes memory-bound about one
+    # power of two before radix partitioning starts paying)
+    large_n: int = 1 << 17
+    # … and its joins to actually be expensive: either some partner
+    # brings enough rows to pay repeated searches into the
+    # DRAM-resident structure, or the vertex's own join key is
+    # unsorted (its build-side argsort is O(n log n) random access;
+    # a presorted key — TPC-H's o_orderkey — sorts as one run)
+    partner_min: int = 1 << 12
+    # transfer reductions propagate: a vertex shrunk here emits
+    # smaller, more selective filters to its downstream neighbors in
+    # the same pass. gamma discounts that transitive benefit per hop.
+    gamma: float = 0.5
+
+
+#: operating point seeded from `kernel_bench.calibrate` and tuned
+#: end-to-end against the BENCH_tpch.json acceptance sweep (DESIGN.md
+#: §11 — the microbench measures worst-case shapes, e.g. 100%-match
+#: joins and cold hash state, so the in-query coefficients below sit
+#: under the raw `transfer_cost_calibration` numbers; the *ratios*
+#: are what gate an edge). The pallas backend runs in interpret mode
+#: off-TPU, so its per-row coefficients are larger and the scheduler
+#: skips more aggressively there.
+DEFAULT_COSTS: Dict[str, TransferCosts] = {
+    "numpy": TransferCosts(probe=45.0, build=45.0,
+                           join_small=40.0, join_large=110.0),
+    "jax": TransferCosts(probe=30.0, build=60.0,
+                         join_small=40.0, join_large=110.0,
+                         fixed=500_000.0),
+    "pallas": TransferCosts(probe=160.0, build=340.0,
+                            join_small=40.0, join_large=110.0,
+                            fixed=500_000.0),
+}
+
+
+@dataclasses.dataclass
+class _Emitted:
+    """One emitted (or cached) filter in flight along an edge."""
+
+    words: np.ndarray
+    mm: Optional[MinMaxFilter]
+    sel_est: float
+    decision: EdgeDecision
+
+
+class AdaptivePredTrans(PredTrans):
+    """Cost-gated predicate transfer (`pred-trans-adaptive`).
+
+    Plain PredTrans pays for every edge in every pass; on queries where
+    a transfer's build+probe cost exceeds the work its removed rows
+    would have caused downstream, pre-filtering is a net loss (9 of 20
+    TPC-H queries in BENCH_tpch.json before this scheduler). Per edge
+    and per pass this strategy:
+
+    * models the transfer cost ``c_build·|build live| +
+      c_probe·|probe live|`` against the benefit ``sel_est · |probe
+      live| · c_downstream`` and skips the edge when it cannot pay —
+      `sel_est` is the estimated removed-row fraction, derived from the
+      build side's live distinct-key count (KMV over the hash state the
+      build needs anyway, `bloom.kmv_distinct`) over the edge's key
+      domain (the smaller endpoint's base cardinality);
+    * publishes a min-max range filter next to each Bloom filter
+      (`bloom.MinMaxFilter`, built from the same live-key scan):
+      provably disjoint ranges short-circuit the edge without a single
+      probe (and an emptied vertex's empty range cascades for free),
+      a contained probe range skips the range test, anything else
+      applies the O(1)-per-row comparison *before* the Bloom probe;
+    * early-exits the pass loop when a pass's total removed-row count
+      falls below `early_exit_frac` of the live rows entering it, and
+      caches filter builds across passes so a vertex whose survivor
+      set did not change never rebuilds (or re-ranges) its filter;
+    * records every decision as an `EdgeDecision` (estimated vs actual
+      selectivity, modeled cost/benefit, 0 probed rows for skips) in
+      `TransferStats.edges` — `benchmarks/run.py` persists them.
+
+    Skipping any subset of edges only *grows* survivor sets; the join
+    phase recomputes exact matches, so query results are bit-identical
+    to the always-apply oracle (tests/test_transfer_adaptive.py sweeps
+    `mode="force_skip" | "force_apply" | "auto"` across all engines).
+    The distributed runtime reuses the same decisions — the transfer
+    phase runs once on the host graph regardless of join engine — so a
+    skipped edge also skips its filter broadcast
+    (benchmarks/distributed_transfer.py accounts the saved bytes)."""
+
+    name = "pred-trans-adaptive"
+
+    MODES = ("auto", "force_apply", "force_skip")
+
+    def __init__(self, bits_per_key: int = bloom.DEFAULT_BITS_PER_KEY,
+                 k: int = bloom.DEFAULT_K, passes: int = 2,
+                 lip_order: bool = True, backend: str = "numpy",
+                 interpret: Optional[bool] = None, mode: str = "auto",
+                 costs: Optional[TransferCosts] = None,
+                 minmax: bool = True,
+                 early_exit_frac: float = 0.001):
+        super().__init__(bits_per_key=bits_per_key, k=k, passes=passes,
+                         prune=False, lip_order=lip_order,
+                         backend=backend, interpret=interpret)
+        if mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}, "
+                             f"got {mode!r}")
+        self.mode = mode
+        self.costs = costs or DEFAULT_COSTS[self.engine.backend]
+        # min-max only makes sense when edges actually run (force_apply
+        # must reproduce the always-apply oracle's survivor sets)
+        self.minmax = minmax and mode == "auto"
+        self.early_exit_frac = early_exit_frac
+
+    # -- pass loop with early exit ------------------------------------
+    def _run_passes(self, order, rank, vertices, adj, stats):
+        # key-domain bounds per (vertex, endpoint cols): the smallest
+        # base cardinality among the non-derived endpoints of every
+        # edge sharing those columns. A dimension PK bounds the FK
+        # domain of *every* relation joining on it — e.g. a derived
+        # subquery carrying all 20k partkeys estimates sel 0 against
+        # lineitem because `part` (base 20k) bounds l_partkey's
+        # domain. Derived sources are excluded: their keys are a
+        # filtered subset of some larger domain, so their row count
+        # bounds nothing.
+        self._dom: Dict[Tuple, int] = {}
+        for lid, pairs in adj.items():
+            v = vertices[lid]
+            for ei, e in pairs:
+                o = vertices.get(e.other(lid))
+                if o is None:
+                    continue
+                key = (lid, tuple(e.endpoint_cols(lid)))
+                cur = self._dom.get(key)
+                if cur is None:
+                    cur = v.base_rows if (not v.derived
+                                          and v.base_rows > 0) \
+                        else len(v.table)
+                if not o.derived and o.base_rows > 0:
+                    cur = min(cur, o.base_rows)
+                self._dom[key] = cur
+        # per-prefilter caches: filters/ranges by (leaf, cols) with the
+        # live count they were built at; distinct estimates by
+        # (leaf, cols, live); conservative probe-side ranges by
+        # (leaf, cols)
+        self._fcache: Dict[Tuple, Tuple[np.ndarray,
+                                        Optional[MinMaxFilter],
+                                        int, int]] = {}
+        self._dcache: Dict[Tuple, int] = {}
+        self._rcache: Dict[Tuple, Optional[Tuple[int, int]]] = {}
+        self._rcache2: Dict[int, float] = {}    # per-vertex join rate
+        # live-count cache: mask.sum() is O(rows) and the scheduler
+        # reads counts per edge — seeded from the prefilter's initial
+        # counts, refreshed from the scan only when a vertex's mask
+        # actually changed
+        self._lives: Dict[int, int] = dict(self._live0)
+        before = sum(self._lives.values())
+        for p in range(self.passes):
+            forward = (p % 2 == 0)
+            seq = order if forward else order[::-1]
+            self._one_pass(seq, rank, forward, vertices, adj, stats, p)
+            stats.passes_run += 1
+            after = sum(self._lives[lid] for lid in vertices)
+            removed, entering = before - after, before
+            before = after
+            if self.mode == "force_apply":
+                continue            # the always-apply oracle runs all
+            if removed < max(1, int(self.early_exit_frac * entering)):
+                break               # pass early-exit (DESIGN §11)
+
+    # -- helpers -------------------------------------------------------
+    def _rangeable(self, v: Vertex, cols: Tuple[str, ...]) -> bool:
+        """Ranges are only meaningful for order-preserving composite
+        encodings: single non-dictionary columns, or the packed
+        two-column path. The hash-combine fallback scrambles order."""
+        if any(v.table[c].dictionary is not None for c in cols):
+            return False
+        if len(cols) == 1:
+            return True
+        if len(cols) == 2:
+            return ops.stable_key_encoding(v.table, cols)
+        return False
+
+    def _cons_range(self, v: Vertex, cols: Tuple[str, ...]
+                    ) -> Optional[Tuple[int, int]]:
+        """Conservative (possibly inherited, never rescanned) bounds on
+        the vertex's key values — the probe side of the disjoint /
+        contained tests. Wider-than-live bounds only make the checks
+        more conservative, never wrong."""
+        key = (v.leaf_id, cols)
+        if key not in self._rcache:
+            if not self._rangeable(v, cols):
+                self._rcache[key] = None
+            elif len(cols) == 1:
+                self._rcache[key] = v.table[cols[0]].value_range()
+            else:
+                (alo, ahi) = v.table[cols[0]].value_range()
+                (blo, bhi) = v.table[cols[1]].value_range()
+                self._rcache[key] = ((alo << 32) | blo,
+                                     (ahi << 32) | bhi)
+        return self._rcache[key]
+
+    def _sel_est(self, v: Vertex, scan, cols: Tuple[str, ...],
+                 dv: Vertex, dcols: Tuple[str, ...]) -> float:
+        """Estimated fraction of `dv`'s live rows an edge filter from
+        `v` would remove: 1 - d_live / domain, where d_live is the KMV
+        distinct estimate over the build side's live key hashes (reused
+        by the build itself) and domain is the edge's key-domain bound
+        (`self._dom`) — the smallest non-derived base cardinality among
+        the endpoints of every edge sharing the destination's key
+        columns (a derived build side's keys are a filtered subset of
+        some larger domain, so its own row count bounds nothing)."""
+        live = scan.live
+        if live == 0:
+            return 1.0
+        ck = (v.leaf_id, cols, live)
+        d = self._dcache.get(ck)
+        if d is None:
+            hk = self._hashed(v, cols)
+            d = bloom.kmv_distinct(scan.live_hashes(hk))
+            self._dcache[ck] = d
+        dom = self._dom.get((dv.leaf_id, dcols),
+                            dv.base_rows if dv.base_rows > 0
+                            else len(dv.table))
+        if not v.derived and v.base_rows > 0:
+            dom = min(dom, v.base_rows)
+        return 1.0 - min(1.0, d / max(dom, 1))
+
+    def _live_range(self, v: Vertex, scan, cols: Tuple[str, ...]
+                    ) -> Optional[MinMaxFilter]:
+        """Exact [lo, hi] of the live, valid keys — the emitted edge's
+        min-max filter, computed from the same survivor scan the Bloom
+        build reads."""
+        if not self._rangeable(v, cols):
+            return None
+        vals = scan.gather_live(v.key(cols))
+        valid = v.key_valid(cols)
+        if valid is not None:
+            vals = vals[scan.gather_live(valid)]
+        return MinMaxFilter(*bloom.key_range(vals))
+
+    # -- the scheduled pass --------------------------------------------
+    def _join_rate(self, lid: int, vertices, adj) -> float:
+        """Modeled ns saved downstream per removed row of vertex `lid`
+        (DESIGN §11): the per-join rate — memory-bound `join_large`
+        when the vertex is big and its joins are actually expensive
+        (some partner past the cache-resident build size, or its own
+        join key unsorted so the build-side argsort pays full price),
+        else cache-resident `join_small` — times the number of joins a
+        surviving row flows through (`Vertex.join_depth`)."""
+        rate = self._rcache2.get(lid)
+        if rate is not None:
+            return rate
+        costs = self.costs
+        v = vertices[lid]
+        live0 = self._live0[lid]
+        base = costs.join_small
+        if live0 >= costs.large_n:
+            maxp = max((self._live0[e.other(lid)]
+                        for ei, e in adj[lid]
+                        if e.other(lid) in self._live0), default=0)
+            if maxp >= costs.partner_min:
+                base = costs.join_large
+            else:
+                for ei, e in adj[lid]:
+                    k = v.key(e.endpoint_cols(lid))
+                    if len(k) and not bool(np.all(k[1:] >= k[:-1])):
+                        base = costs.join_large
+                        break
+        rate = base * v.join_depth
+        self._rcache2[lid] = rate
+        return rate
+
+    def _reach(self, seq, vertices, adj, flows) -> Dict[int, float]:
+        """Damped downstream row-mass per vertex for this pass:
+        R(x) = live(x)·join_rate(x) + gamma·Σ R(y) over the vertices
+        x's filters flow to. The benefit of removing a fraction of x's
+        rows is that fraction of R(x): the rows' own downstream join
+        work plus the (per-hop discounted) shrinkage of the filters x
+        emits later in the pass. A downstream edge only contributes if
+        it is itself gate-1 feasible (probing y must cost less than
+        y's reach) — a chain that dead-ends in an edge the scheduler
+        will skip propagates nothing. One O(V+E) walk in reverse pass
+        order (downstream vertices are later in `seq`, so their R is
+        already final when x is visited)."""
+        costs = self.costs
+        lives = self._lives
+        R: Dict[int, float] = {}
+        for lid in reversed(seq):
+            r = lives[lid] * self._join_rate(lid, vertices, adj)
+            for ei, e in adj[lid]:
+                dst = e.other(lid)
+                if flows(lid, dst, e) \
+                        and costs.probe * lives[dst] < R[dst]:
+                    r += costs.gamma * R[dst]
+            R[lid] = r
+        return R
+
+    def _one_pass(self, seq, rank, forward, vertices, adj, stats,
+                  pass_idx):
+        pending: Dict[int, _Emitted] = {}
+        costs = self.costs
+
+        def flows(src: int, dst: int, e: Edge) -> bool:
+            ok_dir = (rank[src] < rank[dst]) == forward and src != dst
+            return ok_dir and e.allows(src, dst)
+
+        lives = self._lives
+
+        def live_of(dv: Vertex) -> int:
+            n = lives.get(dv.leaf_id)
+            if n is None:
+                lives[dv.leaf_id] = n = dv.live
+            return n
+
+        reach = self._reach(seq, vertices, adj, flows) \
+            if self.mode == "auto" else {}
+        # expected surviving fraction per destination this pass: edges
+        # into one vertex share a fused probe, so a later filter only
+        # probes — and only removes — what the earlier ones left.
+        # Costs and benefits both shrink by the accumulated factor.
+        surv: Dict[int, float] = {}
+
+        for lid in seq:
+            v = vertices[lid]
+            scan = self.engine.begin(v.mask)
+
+            # 1. incoming filters: min-max first (disjoint ranges cut
+            #    the edge — and possibly the vertex — without a probe),
+            #    then one fused Bloom probe in LIP order
+            incoming = [(pending[ei], ei, e) for ei, e in adj[lid]
+                        if flows(e.other(lid), lid, e) and ei in pending]
+            if self.lip_order:      # most selective (est.) first
+                incoming.sort(key=lambda t: -t[0].sel_est)
+            cut = False
+            for pf, ei, e in incoming:
+                cols = tuple(e.endpoint_cols(lid))
+                if pf.mm is None or not self.minmax:
+                    continue
+                cons = self._cons_range(v, cols)
+                if cons is None:
+                    continue
+                if pf.mm.disjoint(*cons):
+                    # no live key can pass: the edge removes everything
+                    # without one hash — incl. the empty-build cascade
+                    # (an emptied vertex emits an empty range)
+                    scan.clear()
+                    pf.decision.action = "minmax-cut"
+                    pf.decision.act_sel = 1.0
+                    cut = True
+                    break
+                if not pf.mm.contains(*cons):
+                    # the O(1)-per-row test pays only when the overlap
+                    # suggests it removes rows: under uniform keys the
+                    # expected removal is 1 - overlap/width
+                    lo = max(cons[0], pf.mm.lo)
+                    hi = min(cons[1], pf.mm.hi)
+                    width = max(cons[1] - cons[0] + 1, 1)
+                    if (hi - lo + 1) / width < 0.98:
+                        stats.rows_range_tested += scan.probe_range(
+                            v.key(cols), pf.mm.lo, pf.mm.hi)
+            if cut:
+                v.mask = scan.mask
+            elif incoming:
+                enter = scan.live
+                stats.rows_probed += scan.probe(
+                    [(pf.words, self._hashed(v, e.endpoint_cols(lid)))
+                     for pf, ei, e in incoming])
+                for (pf, ei, e), after in zip(incoming,
+                                              scan.live_after):
+                    pf.decision.rows_probed += enter
+                    if enter > 0:
+                        pf.decision.act_sel = 1.0 - after / enter
+                    enter = after
+                v.mask = scan.mask
+
+            if cut or incoming:
+                lives[lid] = scan.live
+
+            # 2. outgoing filters, cost-gated per edge
+            out_edges = [(ei, e) for ei, e in adj[lid]
+                         if flows(lid, e.other(lid), e)]
+            if not out_edges:
+                continue
+            live = lives[lid]
+            for ei, e in out_edges:
+                dv = vertices[e.other(lid)]
+                cols = tuple(e.endpoint_cols(lid))
+                dec = EdgeDecision(_edge_label(v, dv, cols), pass_idx,
+                                   "applied", build_rows=live,
+                                   probe_rows=live_of(dv))
+                stats.edges.append(dec)
+                if self.mode == "force_skip":
+                    dec.action = "skipped-forced"
+                    continue
+                cached = self._fcache.get((lid, cols))
+                if cached is not None and cached[2] != live:
+                    cached = None           # survivor set changed
+                c_build = 0.0 if cached is not None \
+                    else costs.build * live
+                dlive = dec.probe_rows
+                if self.mode == "auto":
+                    # Vertex.informative with the already-known live
+                    # count (the property would re-popcount the mask)
+                    informative = (v.derived or v.base_rows < 0
+                                   or len(v.table) < v.base_rows
+                                   or live < len(v.table))
+                    if not informative and live > 0:
+                        # complete untouched base relation: its filter
+                        # cannot reject FK-valid rows (paper §3.2)
+                        dec.action = "pruned"
+                        dec.cost_ns = c_build + costs.probe * dlive
+                        continue
+                    frac = surv.get(dv.leaf_id, 1.0)
+                    dec.cost_ns = cost = \
+                        costs.fixed + c_build + \
+                        costs.probe * dlive * frac
+                    # gate 1: even removing every remaining probe row
+                    # (sel = 1) can't pay — kills big-build and
+                    # small-reach edges before any estimation work
+                    cap = frac * reach[dv.leaf_id]
+                    if cost >= cap:
+                        dec.action = "skipped"
+                        dec.est_sel = float("nan")
+                        dec.benefit_ns = cap
+                        continue
+                    dec.est_sel = sel = self._sel_est(
+                        v, scan, cols, dv,
+                        tuple(e.endpoint_cols(e.other(lid))))
+                    dec.benefit_ns = benefit = sel * cap
+                    if benefit <= cost:
+                        dec.action = "skipped"
+                        continue
+                    surv[dv.leaf_id] = frac * (1.0 - sel)
+                else:
+                    dec.cost_ns = c_build + costs.probe * dlive
+                if cached is not None:
+                    words, mm, _, nbytes = cached
+                else:
+                    hk = self._hashed(v, cols)
+                    nblocks = bloom.blocks_for(max(live, 1),
+                                               self.bits_per_key)
+                    words = scan.build(hk, nblocks,
+                                       valid=v.key_valid(cols))
+                    mm = self._live_range(v, scan, cols) \
+                        if self.minmax else None
+                    nbytes = bloom.BloomFilter(words, self.k).nbytes()
+                    stats.filters_built += 1
+                    stats.filter_bytes += nbytes
+                    dec.filter_bytes = nbytes
+                    self._fcache[(lid, cols)] = (words, mm, live,
+                                                 nbytes)
+                pending[ei] = _Emitted(words, mm, dec.est_sel, dec)
 
 
 class Yannakakis(Strategy):
@@ -246,7 +775,11 @@ class Yannakakis(Strategy):
                 return
             vd, vs = vertices[dst], vertices[src]
             dkeys = vd.key(e.endpoint_cols(dst))
-            skeys = vs.key(e.endpoint_cols(src))[vs.mask]
+            # NULL-tight: a NULL build key's representative bytes must
+            # not keep spurious dst rows alive
+            svalid = vs.key_valid(e.endpoint_cols(src))
+            smask = vs.mask if svalid is None else vs.mask & svalid
+            skeys = vs.key(e.endpoint_cols(src))[smask]
             hit = ops.semi_join_mask(dkeys, skeys)
             vd.mask &= hit
             stats.rows_semijoin_build += len(skeys)
@@ -281,6 +814,7 @@ STRATEGIES = {
     "yannakakis": Yannakakis,
     "pred-trans": PredTrans,          # paper-faithful (no pruning)
     "pred-trans-opt": _pred_trans_opt,  # + transfer-path pruning
+    "pred-trans-adaptive": AdaptivePredTrans,  # + cost-gated scheduling
 }
 
 

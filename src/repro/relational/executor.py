@@ -74,6 +74,18 @@ class ExecStats:
     def join_input_rows(self) -> int:
         return sum(j.ht_rows + j.pr_rows for j in self.joins)
 
+    def transfer_edges(self) -> List[object]:
+        """Every per-edge transfer scheduling decision of this query —
+        this executor's plus every (nested) subquery's (`EdgeDecision`
+        records; the adaptive scheduler fills them, the plain
+        strategies record their prune skips). The benches persist these
+        so skip/apply decision quality is measurable per query."""
+        out = list(self.transfer.edges) if self.transfer is not None \
+            else []
+        for sub in self.subqueries:
+            out += sub.transfer_edges()
+        return out
+
 
 class Executor:
     def __init__(self, catalog: Mapping[str, Table],
@@ -137,6 +149,7 @@ class Executor:
         # -- phase 1: transfer -----------------------------------------
         t0 = time.perf_counter()
         edges = extract_join_graph(plan, vertices)
+        annotate_join_depth(plan, vertices)
         stats.transfer = self.strategy.prefilter(vertices, edges)
         # compact each vertex once; the transfer phase's composite keys
         # are compacted alongside and seed the join runtime's key cache
@@ -358,6 +371,53 @@ class Executor:
 # --------------------------------------------------------------------------
 # join-graph extraction
 # --------------------------------------------------------------------------
+
+
+def annotate_join_depth(plan: PlanNode, vertices: Dict[int, Vertex]
+                        ) -> None:
+    """Set `Vertex.join_depth`: how many Join nodes a leaf's surviving
+    rows pay before the first join that can *kill* them — one whose
+    other side's subtree contains an informative (locally filtered or
+    derived) leaf. Rows joined only against complete base relations
+    are FK-preserved and keep paying the next join; that multiplies
+    what removing one of them up front is worth (the adaptive
+    scheduler's benefit model, DESIGN §11). A GroupBy ends the flow —
+    rows above it are new."""
+    depth = {lid: 0 for lid in vertices}
+    alive = {lid: True for lid in vertices}
+
+    def walk(node: PlanNode):
+        """-> (leaf ids below, subtree contains an informative leaf)"""
+        if isinstance(node, LeafNode):
+            v = vertices.get(node.leaf_id)
+            if v is None:
+                return set(), False
+            return {node.leaf_id}, v.informative
+        if isinstance(node, Join):
+            lset, linf = walk(node.left)
+            rset, rinf = walk(node.right)
+            for side, other_inf in ((lset, rinf), (rset, linf)):
+                for lid in side:
+                    if alive[lid]:
+                        depth[lid] += 1
+                        if other_inf:
+                            alive[lid] = False
+            return lset | rset, linf or rinf
+        if isinstance(node, GroupBy):
+            leaves, _ = walk(node.child)
+            for lid in leaves:
+                alive[lid] = False
+            return leaves, True         # aggregate output: new rows
+        out, inf = set(), False
+        for c in node.children():
+            s, i = walk(c)
+            out |= s
+            inf = inf or i
+        return out, inf
+
+    walk(plan)
+    for lid, v in vertices.items():
+        v.join_depth = max(1, depth[lid])
 
 
 def extract_join_graph(plan: PlanNode, vertices: Dict[int, Vertex]

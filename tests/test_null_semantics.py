@@ -644,7 +644,8 @@ def test_hypothesis_group_aggregate_vs_reference(rows):
 
 @pytest.mark.parametrize("strategy", ["no-pred-trans", "bloom-join",
                                       "yannakakis", "pred-trans",
-                                      "pred-trans-opt"])
+                                      "pred-trans-opt",
+                                      "pred-trans-adaptive"])
 @pytest.mark.parametrize("seed", [0, 3])
 def test_strategies_agree_on_nullable_plans(seed, strategy):
     """Transfer filters read NULL representative bytes (conservative by

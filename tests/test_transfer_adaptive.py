@@ -1,0 +1,534 @@
+"""Adaptive cost-gated transfer scheduling (DESIGN.md §11).
+
+Correctness contract: skipping any subset of transfer edges may only
+*grow* survivor sets — the join phase recomputes exact matches — so
+query results must be bit-identical to the always-apply pred-trans
+oracle under every scheduling decision. The sweeps below force both
+extremes (`mode="force_skip"` / `"force_apply"`) plus the cost model
+(`"auto"`) over all 20 TPC-H queries across the eager,
+late-materialized and distributed engines.
+
+Units: min-max disjoint short-circuit + containment + range probe,
+KMV distinct estimation, cross-pass filter-build caching, pass
+early-exit, skipped-edge stat accounting (0 probed rows, flagged —
+never silently vanishing), NULL-tight builds, and the calibration
+helpers (`kernel_bench.calibrate` / `join_crossover`).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import bloom
+from repro.core.bloom import MinMaxFilter
+from repro.core.transfer import (
+    DEFAULT_COSTS, AdaptivePredTrans, PredTrans, TransferCosts,
+    make_strategy,
+)
+from repro.relational import Executor, Table, col
+from repro.relational.plan import GroupBy, Join, Scan
+from repro.tpch import QUERIES, build_query
+
+MODES = ("auto", "force_skip", "force_apply")
+
+
+def _assert_equal(a, b, ctx):
+    assert a.names == b.names, ctx
+    assert len(a) == len(b), (ctx, len(a), len(b))
+    for n in a.names:
+        x, y = a[n].decode(), b[n].decode()
+        if x.dtype.kind == "f":
+            np.testing.assert_allclose(x, y, rtol=1e-9, err_msg=str(ctx))
+        else:
+            np.testing.assert_array_equal(x, y, err_msg=str(ctx))
+
+
+# --------------------------------------------------------------------------
+# forced-skip / forced-apply / auto sweeps vs the always-apply oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qn", sorted(QUERIES))
+def test_adaptive_modes_bit_exact_late(tpch_small, qn):
+    ref, _ = Executor(tpch_small, make_strategy("pred-trans")).execute(
+        build_query(qn, sf=0.01))
+    for mode in MODES:
+        res, _ = Executor(
+            tpch_small,
+            make_strategy("pred-trans-adaptive", mode=mode)).execute(
+            build_query(qn, sf=0.01))
+        _assert_equal(ref, res, (qn, mode))
+
+
+@pytest.mark.parametrize("qn", sorted(QUERIES))
+def test_adaptive_modes_bit_exact_eager_and_distributed(tpch_small, qn):
+    ref, _ = Executor(tpch_small, make_strategy("pred-trans")).execute(
+        build_query(qn, sf=0.01))
+    for mode in MODES:
+        strat = make_strategy("pred-trans-adaptive", mode=mode)
+        eager, _ = Executor(tpch_small, strat,
+                            late_materialize=False).execute(
+            build_query(qn, sf=0.01))
+        _assert_equal(ref, eager, (qn, mode, "eager"))
+        dist, _ = Executor(tpch_small, strat, engine="distributed",
+                           dist_shards=2).execute(
+            build_query(qn, sf=0.01))
+        _assert_equal(ref, dist, (qn, mode, "distributed"))
+
+
+def test_force_apply_matches_oracle_survivor_sets(tpch_small):
+    """force_apply disables every gate (cost, min-max, early exit), so
+    even the per-vertex survivor *counts* must match plain pred-trans —
+    not just the query result."""
+    for qn in (5, 9, 21):
+        _, ref = Executor(tpch_small,
+                          make_strategy("pred-trans")).execute(
+            build_query(qn, sf=0.01))
+        _, got = Executor(
+            tpch_small, make_strategy("pred-trans-adaptive",
+                                      mode="force_apply")).execute(
+            build_query(qn, sf=0.01))
+        assert got.transfer.per_vertex == ref.transfer.per_vertex, qn
+
+
+def test_auto_survivors_superset_of_oracle(tpch_small):
+    """Cost-gated skips may only grow survivor sets, never shrink them
+    below what min-max + the applied Bloom filters allow; and never
+    below the always-apply oracle minus what min-max legitimately cuts.
+    The conservative invariant that is always true: auto >= oracle is
+    NOT guaranteed per-vertex (min-max can remove Bloom false
+    positives), but force_skip leaves every vertex untouched."""
+    for qn in (5, 7, 8):
+        _, skip = Executor(
+            tpch_small, make_strategy("pred-trans-adaptive",
+                                      mode="force_skip")).execute(
+            build_query(qn, sf=0.01))
+        for alias, (before, after) in skip.transfer.per_vertex.items():
+            assert before == after, (qn, alias)
+
+
+# --------------------------------------------------------------------------
+# stat accounting: skipped edges never vanish
+# --------------------------------------------------------------------------
+
+
+def test_forced_skip_reports_zero_probed_and_flags(tpch_small):
+    _, stats = Executor(
+        tpch_small, make_strategy("pred-trans-adaptive",
+                                  mode="force_skip")).execute(
+        build_query(5, sf=0.01))
+    t = stats.transfer
+    assert t.rows_probed == 0
+    assert t.filters_built == 0
+    assert t.edges, "skipped edges must still be recorded"
+    assert all(d.action == "skipped-forced" for d in t.edges)
+    assert all(d.rows_probed == 0 for d in t.edges)
+    assert t.edges_skipped == len(t.edges)
+    assert t.edges_applied == 0
+
+
+def test_auto_decisions_recorded_with_selectivity(tpch_small):
+    # joins priced high enough that Q5's productive edges apply even
+    # at the tiny sf 0.01 scale (at real scale the defaults do this)
+    _, stats = Executor(
+        tpch_small, make_strategy(
+            "pred-trans-adaptive",
+            costs=TransferCosts(probe=45.0, build=45.0,
+                                join_small=500.0,
+                                join_large=500.0))).execute(
+        build_query(5, sf=0.01))
+    t = stats.transfer
+    applied = [d for d in t.edges if d.action == "applied"]
+    assert applied, "Q5 must keep some transfers"
+    # applied edges that actually probed record both estimate + actual
+    probed = [d for d in applied if d.rows_probed > 0]
+    assert probed
+    for d in probed:
+        assert 0.0 <= d.est_sel <= 1.0
+        assert not math.isnan(d.act_sel)
+        assert -1e-9 <= d.act_sel <= 1.0
+    # skipped edges: flagged, zero rows, cost/benefit recorded
+    for d in t.edges:
+        if d.action in ("skipped", "pruned", "skipped-forced"):
+            assert d.rows_probed == 0, d
+            assert d.filter_bytes == 0, d
+    assert t.passes_run >= 1
+
+
+def test_pruned_edges_recorded_by_pred_trans_opt(tpch_small):
+    """The plain strategies record their prune skips too — transfer
+    accounting never silently drops an edge."""
+    _, stats = Executor(
+        tpch_small, make_strategy("pred-trans-opt")).execute(
+        build_query(8, sf=0.01))
+    t = stats.transfer
+    pruned = [d for d in t.edges if d.action == "pruned"]
+    assert pruned
+    assert all(d.rows_probed == 0 for d in pruned)
+
+
+# --------------------------------------------------------------------------
+# min-max filters
+# --------------------------------------------------------------------------
+
+
+def test_minmax_filter_predicates():
+    mm = MinMaxFilter(10, 20)
+    assert mm.disjoint(21, 30) and mm.disjoint(0, 9)
+    assert not mm.disjoint(20, 30) and not mm.disjoint(0, 10)
+    assert mm.contains(10, 20) and mm.contains(12, 18)
+    assert not mm.contains(9, 20) and not mm.contains(10, 21)
+    np.testing.assert_array_equal(
+        mm.probe_np(np.array([9, 10, 15, 20, 21])),
+        [False, True, True, True, False])
+    empty = MinMaxFilter(*bloom.key_range(np.empty(0, np.int64)))
+    assert empty.empty and empty.disjoint(0, 2**62)
+    assert not empty.contains(0, 0)
+    assert not empty.probe_np(np.array([1, 2])).any()
+
+
+def _range_catalog(b_lo, b_hi, nb=400, na=50):
+    rng = np.random.default_rng(0)
+    return {
+        "A": Table.from_arrays({
+            "a_id": np.arange(na, dtype=np.int64),
+            "a_v": rng.integers(0, 8, na).astype(np.int64)}, "A"),
+        "B": Table.from_arrays({
+            "b_a": rng.integers(b_lo, b_hi, nb).astype(np.int64),
+            "b_v": np.arange(nb, dtype=np.int64)}, "B"),
+    }
+
+
+def _range_plan(pa):
+    j = Join(Scan("B"), Scan("A", filter=col("a_v") >= pa),
+             ["b_a"], ["a_id"])
+    return GroupBy(j, [], [("cnt", "count", ""), ("s", "sum", "b_v")])
+
+
+def test_minmax_disjoint_short_circuits_edge():
+    """B's keys live entirely outside A's: the A->B edge must cut B to
+    zero rows without a single Bloom probe."""
+    cat = _range_catalog(1000, 2000)       # disjoint from a_id [0, 50)
+    ref, _ = Executor(cat, make_strategy("no-pred-trans")).execute(
+        _range_plan(3))
+    res, stats = Executor(
+        cat, make_strategy("pred-trans-adaptive",
+                           costs=TransferCosts(
+                               probe=1.0, build=1.0,
+                               join_small=10**6,
+                               join_large=10**6))).execute(
+        _range_plan(3))
+    _assert_equal(ref, res, "disjoint")
+    t = stats.transfer
+    assert any(d.action == "minmax-cut" for d in t.edges)
+    assert t.rows_probed == 0                  # no Bloom probe ran
+    assert t.per_vertex["B"][1] == 0           # B emptied
+
+
+def test_minmax_range_probe_cuts_before_bloom():
+    """Half of B's keys are provably out of A's range: the range test
+    removes them before the Bloom probe (rows_range_tested > 0 and the
+    Bloom probe sees fewer rows than B's live count)."""
+    cat = _range_catalog(0, 100)           # half in [0, 50), half out
+    ref, _ = Executor(cat, make_strategy("no-pred-trans")).execute(
+        _range_plan(3))
+    res, stats = Executor(
+        cat, make_strategy("pred-trans-adaptive",
+                           costs=TransferCosts(probe=1.0, build=1.0,
+                                               join_small=10**6,
+                                               join_large=10**6))).execute(
+        _range_plan(3))
+    _assert_equal(ref, res, "range-probe")
+    t = stats.transfer
+    assert t.rows_range_tested > 0
+    fwd = [d for d in t.edges
+           if d.edge.startswith("A->") and d.action == "applied"]
+    assert fwd
+    # the Bloom probe saw only the rows inside A's range (the backward
+    # B->A edge's build range contains A's, so it skips its range test
+    # by the containment proof — also part of the contract)
+    assert all(0 < d.rows_probed < d.probe_rows for d in fwd)
+
+
+def test_minmax_disabled_for_dictionary_keys():
+    """Dictionary codes are vocabulary-local; ranges over them are
+    meaningless and the scheduler must not build min-max filters."""
+    cat = {
+        "A": Table.from_arrays({
+            "a_k": np.array(["x", "y", "z"]),
+            "a_v": np.arange(3, dtype=np.int64)}, "A"),
+        "B": Table.from_arrays({
+            "b_k": np.array(["x", "x", "q", "z"]),
+            "b_v": np.arange(4, dtype=np.int64)}, "B"),
+    }
+    plan = GroupBy(Join(Scan("B"), Scan("A", filter=col("a_v") >= 1),
+                        ["b_k"], ["a_k"]), [],
+                   [("cnt", "count", "")])
+    ref, _ = Executor(cat, make_strategy("no-pred-trans")).execute(plan)
+    res, stats = Executor(
+        cat, make_strategy("pred-trans-adaptive",
+                           costs=TransferCosts(probe=1.0, build=1.0,
+                                               join_small=10**6,
+                                               join_large=10**6))).execute(
+        plan)
+    _assert_equal(ref, res, "dict-keys")
+    assert stats.transfer.rows_range_tested == 0
+    assert not any(d.action == "minmax-cut"
+                   for d in stats.transfer.edges)
+
+
+# --------------------------------------------------------------------------
+# cost model / scheduling behavior
+# --------------------------------------------------------------------------
+
+
+def test_cost_gate_skips_unprofitable_fact_to_dim():
+    """A large fact side emitting toward a small dim: build cost
+    dwarfs any possible benefit — gate 1 must skip the backward edge
+    without even estimating selectivity (est_sel stays NaN). The
+    forward dim->fact edge applies (dim is filtered), so the first
+    pass removes rows and the backward pass actually runs."""
+    rng = np.random.default_rng(1)
+    nb, na = 20_000, 50
+    cat = {
+        "A": Table.from_arrays({
+            "a_id": np.arange(na, dtype=np.int64),
+            "a_v": rng.integers(0, 8, na).astype(np.int64)}, "A"),
+        "B": Table.from_arrays({
+            "b_a": rng.integers(0, na, nb).astype(np.int64),
+            "b_v": rng.integers(0, 8, nb).astype(np.int64)}, "B"),
+    }
+    plan = GroupBy(Join(Scan("B"), Scan("A", filter=col("a_v") >= 4),
+                        ["b_a"], ["a_id"]), [],
+                   [("cnt", "count", "")])
+    # join coefficients high enough that the forward dim->fact edge
+    # applies at this toy scale; the backward fact->dim edge must
+    # still fail gate 1 on its build cost alone
+    _, stats = Executor(
+        cat, make_strategy("pred-trans-adaptive",
+                           costs=TransferCosts(
+                               probe=45.0, build=45.0,
+                               join_small=200.0,
+                               join_large=200.0))).execute(plan)
+    skips = [d for d in stats.transfer.edges
+             if d.edge.startswith("B->") and d.action == "skipped"]
+    assert skips
+    assert all(math.isnan(d.est_sel) for d in skips)
+
+
+def test_unfiltered_base_is_pruned():
+    """sel_est == 0 for a complete untouched base relation — recorded
+    as `pruned`, same semantics as pred-trans-opt's §3.2 pruning."""
+    rng = np.random.default_rng(2)
+    cat = {
+        "A": Table.from_arrays({
+            "a_id": np.arange(50, dtype=np.int64)}, "A"),
+        "B": Table.from_arrays({
+            "b_a": rng.integers(0, 50, 400).astype(np.int64),
+            "b_v": np.arange(400, dtype=np.int64)}, "B"),
+    }
+    plan = GroupBy(Join(Scan("B"), Scan("A"), ["b_a"], ["a_id"]), [],
+                   [("cnt", "count", "")])
+    _, stats = Executor(
+        cat, make_strategy("pred-trans-adaptive")).execute(plan)
+    assert {d.action for d in stats.transfer.edges} <= \
+        {"pruned", "skipped"}
+    assert any(d.action == "pruned" for d in stats.transfer.edges)
+
+
+def test_filter_cache_across_passes(tpch_small):
+    """A vertex whose survivor set did not change between the forward
+    and backward pass must not rebuild its filter: with every gate
+    forced open (huge join coefficient), filters_built stays below the
+    naive per-pass emission count and cached re-emissions record
+    filter_bytes == 0."""
+    costs = TransferCosts(probe=1.0, build=1.0, join_small=10**9,
+                          join_large=10**9)
+    _, stats = Executor(
+        tpch_small, make_strategy("pred-trans-adaptive",
+                                  costs=costs, minmax=False)).execute(
+        build_query(5, sf=0.01))
+    t = stats.transfer
+    applied = [d for d in t.edges if d.action == "applied"]
+    rebuilt = [d for d in applied if d.filter_bytes > 0]
+    assert t.filters_built == len(rebuilt)
+    assert len(rebuilt) < len(applied), \
+        "some emission must have been served from the cache"
+
+
+def test_pass_early_exit_when_nothing_removed():
+    """No local predicates anywhere: the first pass removes nothing, so
+    the loop must stop after it instead of running the backward pass."""
+    rng = np.random.default_rng(3)
+    cat = {
+        "A": Table.from_arrays({
+            "a_id": np.arange(50, dtype=np.int64)}, "A"),
+        "B": Table.from_arrays({
+            "b_a": rng.integers(0, 50, 400).astype(np.int64)}, "B"),
+    }
+    plan = GroupBy(Join(Scan("B"), Scan("A"), ["b_a"], ["a_id"]), [],
+                   [("cnt", "count", "")])
+    _, stats = Executor(
+        cat, make_strategy("pred-trans-adaptive")).execute(plan)
+    assert stats.transfer.passes_run == 1
+    # the always-apply oracle still runs both passes
+    _, stats = Executor(
+        cat, make_strategy("pred-trans-adaptive",
+                           mode="force_apply")).execute(plan)
+    assert stats.transfer.passes_run == 2
+
+
+def test_more_passes_never_worse_adaptive(tpch_small):
+    """Extra pass budget can only keep or shrink vertices (mirrors the
+    pred-trans invariant; early exit trims the budget, never the
+    result)."""
+    r2, s2 = Executor(tpch_small,
+                      AdaptivePredTrans(passes=2)).execute(
+        build_query(5, sf=0.01))
+    r4, s4 = Executor(tpch_small,
+                      AdaptivePredTrans(passes=4)).execute(
+        build_query(5, sf=0.01))
+    _assert_equal(r2, r4, "adaptive-passes")
+    for alias, (_, after2) in s2.transfer.per_vertex.items():
+        assert s4.transfer.per_vertex[alias][1] <= after2
+
+
+def test_mode_validation_and_registry():
+    with pytest.raises(ValueError, match="mode"):
+        AdaptivePredTrans(mode="sometimes")
+    s = make_strategy("pred-trans-adaptive", backend="jax")
+    assert s.name == "pred-trans-adaptive"
+    assert s.engine.backend == "jax"
+    assert s.costs == DEFAULT_COSTS["jax"]
+    assert isinstance(s, PredTrans)
+
+
+# --------------------------------------------------------------------------
+# KMV distinct estimation
+# --------------------------------------------------------------------------
+
+
+def test_kmv_distinct_exact_small():
+    h = np.arange(100, dtype=np.uint32) * 7919
+    assert bloom.kmv_distinct(h) == 100
+    assert bloom.kmv_distinct(np.empty(0, np.uint32)) == 0
+
+
+@pytest.mark.parametrize("d", [20_000, 100_000])
+def test_kmv_distinct_estimates_within_20pct(d):
+    rng = np.random.default_rng(d)
+    keys = rng.integers(0, d, 200_000).astype(np.int64)
+    from repro.core.engine_bloom import _hash_host
+    h = _hash_host(keys)[0]
+    true = len(np.unique(keys))
+    est = bloom.kmv_distinct(h)
+    assert 0.8 * true <= est <= 1.2 * true, (true, est)
+
+
+@pytest.mark.parametrize("d", [300, 1_000])
+def test_kmv_distinct_heavy_duplicates_order_of_magnitude(d):
+    """Multiplicity >> KMV_K exhausts the bounded widening budget: the
+    estimate comes from fewer distinct minima and only needs to be
+    order-of-magnitude (a low-cardinality build side reads sel ≈ 1
+    against any realistic domain either way) — and must never fall
+    back to a full sort of the column."""
+    rng = np.random.default_rng(9 + d)
+    keys = rng.integers(0, d, 500_000).astype(np.int64)
+    from repro.core.engine_bloom import _hash_host
+    est = bloom.kmv_distinct(_hash_host(keys)[0])
+    assert d / 10 <= est <= d * 10, (d, est)
+
+
+# --------------------------------------------------------------------------
+# NULL-tight transfer: invalid-key rows never reach filter builds
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_null_tight_build_excludes_invalid_keys(backend):
+    """A NULL build key's representative bytes must not set filter
+    bits: probing the representative value misses unless some valid
+    row shares it."""
+    from repro.core.engine_bloom import get_engine
+    eng = get_engine(backend)
+    keys = np.array([10, 20, 30, 40], np.int64)   # 30/40 are NULL slots
+    valid = np.array([True, True, False, False])
+    ek = eng.keys(keys)
+    filt = eng.build_filter(ek, valid=valid)
+    hits = np.asarray(eng.probe_filter(filt, eng.keys(keys)))
+    assert hits[0] and hits[1]
+    assert not hits[2] and not hits[3], backend
+    # and the loose build (no validity) keeps them — the old behavior
+    loose = eng.build_filter(ek)
+    assert np.asarray(eng.probe_filter(loose, eng.keys(keys))).all()
+
+
+def _nullable_star_catalog():
+    rng = np.random.default_rng(5)
+    nd, nf = 30, 300
+    dkey = np.arange(nd, dtype=np.int64)
+    dvalid = rng.random(nd) > 0.3
+    fkey = rng.integers(0, nd, nf).astype(np.int64)
+    fvalid = rng.random(nf) > 0.2
+    return {
+        "dim": Table.from_arrays(
+            {"d_key": dkey, "d_v": rng.integers(0, 8, nd).astype(
+                np.int64)}, "dim", validity={"d_key": dvalid}),
+        "fact": Table.from_arrays(
+            {"f_key": fkey, "f_val": rng.integers(0, 100, nf).astype(
+                np.int64)}, "fact", validity={"f_key": fvalid}),
+    }
+
+
+@pytest.mark.parametrize("strategy,kw", [
+    ("pred-trans", {}),
+    ("pred-trans-adaptive", {}),
+    ("pred-trans-adaptive", {"mode": "force_apply"}),
+    ("bloom-join", {}),
+    ("yannakakis", {}),
+])
+def test_null_tight_strategies_agree_on_nullable_keys(strategy, kw):
+    """End-to-end: NULL-tight builds must not change results on plans
+    whose join keys carry NULLs on both sides (regression against the
+    nullable-plan oracle, cf. test_null_semantics.py)."""
+    cat = _nullable_star_catalog()
+    plan = GroupBy(
+        Join(Scan("fact"), Scan("dim", filter=col("d_v") >= 2),
+             ["f_key"], ["d_key"]),
+        [], [("cnt", "count", ""), ("s", "sum", "f_val")])
+    ref, _ = Executor(cat, make_strategy("no-pred-trans")).execute(plan)
+    res, _ = Executor(cat, make_strategy(strategy, **kw)).execute(plan)
+    _assert_equal(ref, res, (strategy, kw))
+
+
+def test_null_tight_shrinks_filters():
+    """With most build keys NULL, the NULL-tight filter is sized by the
+    valid keys only — strictly smaller than the row count would imply."""
+    from repro.core.engine_bloom import get_engine
+    eng = get_engine("numpy")
+    n = 4096
+    keys = np.arange(n, dtype=np.int64)
+    valid = np.zeros(n, bool)
+    valid[:8] = True
+    tight = eng.build_filter(eng.keys(keys), valid=valid)
+    loose = eng.build_filter(eng.keys(keys))
+    assert tight.nbytes() < loose.nbytes()
+
+
+# --------------------------------------------------------------------------
+# calibration helpers
+# --------------------------------------------------------------------------
+
+
+def test_kernel_bench_calibrate_smoke():
+    from benchmarks.kernel_bench import calibrate, join_crossover
+    cal = calibrate(n=4096, reps=1)
+    for backend in ("numpy", "jax", "pallas"):
+        c = cal[backend]
+        assert c["probe"] > 0 and c["build"] > 0
+        assert c["join_small"] > 0 and c["join_large"] > 0
+    xo = join_crossover(sizes=(1 << 10, 1 << 11), reps=1)
+    assert len(xo["rows"]) == 2
+    assert xo["crossover"] is None or xo["crossover"] in (1 << 10,
+                                                          1 << 11)
+    assert set(DEFAULT_COSTS) == {"numpy", "jax", "pallas"}

@@ -11,7 +11,8 @@ from repro.core.transfer import make_strategy
 from repro.relational import Executor, Table, col
 from repro.relational.plan import GroupBy, Join, Scan
 
-STRATS = ["bloom-join", "yannakakis", "pred-trans", "pred-trans-opt"]
+STRATS = ["bloom-join", "yannakakis", "pred-trans", "pred-trans-opt",
+          "pred-trans-adaptive"]
 
 
 def _catalog(rng, na, nb, nc):
