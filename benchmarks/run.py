@@ -228,6 +228,25 @@ def run_check(sf: float, baseline_path: str, rel_tol: float = 0.10,
              float(np.exp(np.mean(np.log(base_ad_sp)))),
              rel_tol, higher_is_better=True)
 
+    # serving gate: cold and warm passes share one measurement window
+    # (paired), so the warm/cold throughput ratio is drift-immune. The
+    # 1.3x floor is the serving-layer acceptance contract at
+    # concurrency 4; the baseline ratio adds the usual 10% band on top.
+    from benchmarks import serving_bench
+    serving = serving_bench.main(sf, concurrency=(4,), reps=2, pairs=3)
+    srow = serving["concurrency"]["4"]
+    base_srow = baseline.get("serving", {}).get("concurrency",
+                                                {}).get("4", {})
+    gate("serving warm/cold throughput (hard 1.3x floor)",
+         srow["warm_over_cold"], 1.3, 0.0, higher_is_better=True)
+    gate("serving warm/cold throughput", srow["warm_over_cold"],
+         base_srow.get("warm_over_cold"), rel_tol,
+         higher_is_better=True)
+    if srow["slot_cache_hit_rate"] <= 0:
+        print("check: FAIL serving slot-cache hit rate is zero",
+              file=sys.stderr)
+        failures.append("serving slot-cache hits")
+
     split = q5_transfer_split(sf)
     base_split = baseline.get("q5_transfer_seconds", {})
     if "numpy" in split and "jax" in split:
@@ -270,7 +289,7 @@ def main() -> None:
     from benchmarks import (curation_bench, distributed_transfer,
                             figure2_tpch, figure3_breakdown,
                             figure4_robustness, kernel_bench,
-                            table1_q5_sizes)
+                            serving_bench, table1_q5_sizes)
 
     exhibits = {
         "figure2_tpch": lambda: figure2_tpch.main(args.sf),
@@ -283,6 +302,7 @@ def main() -> None:
         .distributed_join_main(args.sf),
         "curation_bench": lambda: curation_bench.main(
             max(int(args.sf * 1_000_000), 20_000)),
+        "serving": lambda: serving_bench.main(args.sf),
     }
     if args.only:
         names = args.only.split(",")
@@ -341,6 +361,8 @@ def main() -> None:
             doc["join_crossover"] = kb["join_crossover"]
         if "distributed_join" in results:
             doc["distributed_join"] = results["distributed_join"]
+        if "serving" in results:
+            doc["serving"] = results["serving"]
         tmp = args.json + ".tmp"
         with open(tmp, "w") as f:       # atomic: a crash mid-dump must
             json.dump(doc, f, indent=1, sort_keys=True)

@@ -1,0 +1,147 @@
+"""Cross-query transfer-artifact cache (DESIGN.md §12).
+
+A thread-safe, byte-bounded LRU shared by every executor a serving
+session runs. Three artifact kinds live here, distinguished by the
+first element of the key tuple:
+
+* ``("bloom", filter_sig)`` — Bloom filter words (+ optional min-max
+  range) built from a provenance-signed survivor state
+  (`repro.core.provenance.filter_sig`); reusable across queries,
+  aliases, strategies with equal filter params, and engine backends
+  (all backends build bit-identical words);
+* ``("minmax", sig)`` — standalone min-max ranges;
+* ``("slots", plan_fp, catalog_sig, strategy_sig)`` — a whole query's
+  post-transfer slot state (compacted leaf tables + composite join
+  keys), the scan+transfer phases' full output.
+
+Every entry records the set of `Table.version` numbers it was derived
+from; `invalidate_versions` (or `invalidate_all`) is the explicit
+invalidation hook for table replacement. Lookups never validate content
+— the keys are self-certifying (a signature can only be recomputed from
+the same inputs), which is what makes O(1) hits safe.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Iterable, Optional, Set, Tuple
+
+
+class ArtifactCache:
+    """Byte-bounded LRU over provenance-keyed transfer artifacts."""
+
+    def __init__(self, max_bytes: int = 256 << 20):
+        self.max_bytes = int(max_bytes)
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[tuple, Tuple[object, int, frozenset]]" \
+            = OrderedDict()
+        self._bytes = 0
+        self._by_version: Dict[int, Set[tuple]] = {}
+        self._hits: Dict[str, int] = {}
+        self._misses: Dict[str, int] = {}
+        self._puts: Dict[str, int] = {}
+        self._evictions = 0
+        self._invalidated = 0
+
+    # -- core ----------------------------------------------------------
+    def get(self, key: tuple):
+        kind = key[0]
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self._misses[kind] = self._misses.get(kind, 0) + 1
+                return None
+            self._entries.move_to_end(key)
+            self._hits[kind] = self._hits.get(kind, 0) + 1
+            return ent[0]
+
+    def put(self, key: tuple, value, nbytes: int,
+            versions: Iterable[int] = ()) -> None:
+        kind = key[0]
+        versions = frozenset(int(v) for v in versions)
+        nbytes = int(nbytes)
+        if nbytes > self.max_bytes:
+            return                       # would evict everything else
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._bytes -= old[1]
+                self._unindex(key, old[2])
+            self._entries[key] = (value, nbytes, versions)
+            self._bytes += nbytes
+            for v in versions:
+                self._by_version.setdefault(v, set()).add(key)
+            self._puts[kind] = self._puts.get(kind, 0) + 1
+            while self._bytes > self.max_bytes and self._entries:
+                k, (_, nb, vers) = self._entries.popitem(last=False)
+                self._bytes -= nb
+                self._unindex(k, vers)
+                self._evictions += 1
+
+    def _unindex(self, key: tuple, versions: frozenset) -> None:
+        for v in versions:
+            s = self._by_version.get(v)
+            if s is not None:
+                s.discard(key)
+                if not s:
+                    del self._by_version[v]
+
+    # -- invalidation --------------------------------------------------
+    def invalidate_versions(self, versions: Iterable[int]) -> int:
+        """Drop every artifact derived from any of these table versions
+        (call when a catalog table is replaced). Returns drop count."""
+        dropped = 0
+        with self._lock:
+            keys: Set[tuple] = set()
+            for v in versions:
+                keys |= self._by_version.get(int(v), set())
+            for k in keys:
+                ent = self._entries.pop(k, None)
+                if ent is not None:
+                    self._bytes -= ent[1]
+                    self._unindex(k, ent[2])
+                    dropped += 1
+            self._invalidated += dropped
+        return dropped
+
+    def invalidate_table(self, table) -> int:
+        return self.invalidate_versions([table.version])
+
+    def invalidate_all(self) -> int:
+        with self._lock:
+            n = len(self._entries)
+            self._entries.clear()
+            self._by_version.clear()
+            self._bytes = 0
+            self._invalidated += n
+        return n
+
+    # -- introspection -------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def hit_count(self, kind: Optional[str] = None) -> int:
+        with self._lock:
+            if kind is None:
+                return sum(self._hits.values())
+            return self._hits.get(kind, 0)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            kinds = sorted(set(self._hits) | set(self._misses)
+                           | set(self._puts))
+            per = {}
+            for k in kinds:
+                h = self._hits.get(k, 0)
+                m = self._misses.get(k, 0)
+                per[k] = {"hits": h, "misses": m,
+                          "puts": self._puts.get(k, 0),
+                          "hit_rate": h / max(h + m, 1)}
+            return {"entries": len(self._entries), "bytes": self._bytes,
+                    "max_bytes": self.max_bytes,
+                    "evictions": self._evictions,
+                    "invalidated": self._invalidated, "kinds": per}

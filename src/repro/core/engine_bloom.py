@@ -43,6 +43,7 @@ test_engine_bloom.py` asserts word-level equality against the
 from __future__ import annotations
 
 import dataclasses
+import threading
 import functools
 import sys
 from typing import Dict, Optional, Sequence, Tuple
@@ -914,23 +915,28 @@ class PallasEngine(BloomEngine):
 
 
 _ENGINES: Dict[Tuple, BloomEngine] = {}
+_ENGINES_LOCK = threading.Lock()
 
 
 def get_engine(backend: str = "numpy", k: int = DEFAULT_K,
                interpret: Optional[bool] = None) -> BloomEngine:
     """Engine instances are cached so jit/pallas caches and key-hash
-    device pads are shared across strategies and queries."""
+    device pads are shared across strategies and queries. Creation is
+    locked so concurrent sessions (repro.serve) agree on one instance
+    per key instead of silently forking the shared jit caches
+    (DESIGN.md §12 thread-safety contract)."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown bloom backend {backend!r}; "
                          f"choose from {BACKENDS}")
     key = (backend, k, interpret if backend == "pallas" else None)
-    eng = _ENGINES.get(key)
-    if eng is None:
-        if backend == "numpy":
-            eng = NumpyEngine(k)
-        elif backend == "jax":
-            eng = JaxEngine(k)
-        else:
-            eng = PallasEngine(k, interpret=interpret)
-        _ENGINES[key] = eng
+    with _ENGINES_LOCK:
+        eng = _ENGINES.get(key)
+        if eng is None:
+            if backend == "numpy":
+                eng = NumpyEngine(k)
+            elif backend == "jax":
+                eng = JaxEngine(k)
+            else:
+                eng = PallasEngine(k, interpret=interpret)
+            _ENGINES[key] = eng
     return eng

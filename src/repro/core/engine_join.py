@@ -41,6 +41,7 @@ identical across backends (tests/test_engine_join.py).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import itertools
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, \
     Tuple
@@ -379,25 +380,29 @@ class PallasJoinEngine(_HashMapJoinEngine):
 
 
 _ENGINES: Dict[Tuple, JoinEngine] = {}
+_ENGINES_LOCK = threading.Lock()
 
 
 def get_join_engine(backend: str = "numpy",
                     interpret: Optional[bool] = None) -> JoinEngine:
     """Engine instances are cached so jit/pallas caches are shared
-    across executors and queries (mirrors `engine_bloom.get_engine`)."""
+    across executors and queries (mirrors `engine_bloom.get_engine`).
+    Creation is locked for concurrent sessions (repro.serve) — one
+    instance per key, never a silently forked jit cache."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown join backend {backend!r}; "
                          f"choose from {BACKENDS}")
     key = (backend, interpret if backend == "pallas" else None)
-    eng = _ENGINES.get(key)
-    if eng is None:
-        if backend == "numpy":
-            eng = NumpyJoinEngine()
-        elif backend == "jax":
-            eng = JaxJoinEngine()
-        else:
-            eng = PallasJoinEngine(interpret=interpret)
-        _ENGINES[key] = eng
+    with _ENGINES_LOCK:
+        eng = _ENGINES.get(key)
+        if eng is None:
+            if backend == "numpy":
+                eng = NumpyJoinEngine()
+            elif backend == "jax":
+                eng = JaxJoinEngine()
+            else:
+                eng = PallasJoinEngine(interpret=interpret)
+            _ENGINES[key] = eng
     return eng
 
 

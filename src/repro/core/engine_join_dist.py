@@ -48,6 +48,7 @@ devices (tests/test_distributed.py, tests/test_engine_join_dist.py).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -452,6 +453,7 @@ class DistributedJoinEngine(JoinEngine):
 
 
 _BASE_ENGINES = {}
+_BASE_LOCK = threading.Lock()
 
 
 def get_distributed_engine(nshards: Optional[int] = None,
@@ -460,14 +462,16 @@ def get_distributed_engine(nshards: Optional[int] = None,
                            ) -> DistributedJoinEngine:
     """Forked engine over a cached base — the (jitted) exchange is
     shared across executors and queries (mirrors `get_join_engine`),
-    the stats sink is private to the caller."""
+    the stats sink is private to the caller. Base creation is locked
+    for concurrent sessions (repro.serve)."""
     key = (nshards, local_backend, device)
-    base = _BASE_ENGINES.get(key)
-    if base is None:
-        base = DistributedJoinEngine(nshards=nshards,
-                                     local_backend=local_backend,
-                                     device=device)
-        _BASE_ENGINES[key] = base
+    with _BASE_LOCK:
+        base = _BASE_ENGINES.get(key)
+        if base is None:
+            base = DistributedJoinEngine(nshards=nshards,
+                                         local_backend=local_backend,
+                                         device=device)
+            _BASE_ENGINES[key] = base
     return base.fork()
 
 

@@ -11,6 +11,8 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import provenance
+
 if TYPE_CHECKING:  # type-only: keeps this module import-cycle-free
     from repro.relational.table import Table
 
@@ -46,6 +48,51 @@ class Vertex:
     # multiplies by it (a removed row saves every join it would have
     # paid). 1 when unknown.
     join_depth: int = 1
+    # provenance state signature (repro.core.provenance): identifies
+    # (table version, local predicate, every transfer event applied to
+    # `mask` so far). None = unknown — never cached, never reused.
+    # Set by the executor at leaf resolution; every strategy that
+    # mutates `mask` must either chain the mutation event
+    # (`chain_event` / `apply_filters_sig`) or null the signature out.
+    state_sig: Optional[bytes] = None
+    # Table.version set this vertex's current state was derived from
+    # (its own scan plus every source whose filter touched its mask) —
+    # the artifact cache's invalidation index
+    dep_versions: frozenset = frozenset()
+
+    def canon_cols(self, cols: Sequence[str]) -> Tuple[str, ...]:
+        """Key columns with the scan alias stripped (n1_nationkey ->
+        nationkey): two aliases of one base table under one predicate
+        state hash to the same filter signature and share one build."""
+        if self.derived or self.alias == self.table.name:
+            return tuple(cols)
+        prefix = self.alias + "_"
+        return tuple(c[len(prefix):] if c.startswith(prefix) else c
+                     for c in cols)
+
+    def chain_event(self, event, deps: frozenset = frozenset()) -> None:
+        """Append one mask-mutation event to the provenance chain."""
+        self.state_sig = provenance.chain(self.state_sig, event)
+        if deps and self.state_sig is not None:
+            self.dep_versions = self.dep_versions | deps
+
+    def apply_filters_sig(self, items: Sequence[Tuple[Optional[bytes],
+                                                      Tuple[str, ...]]],
+                          deps: Sequence[frozenset]) -> None:
+        """Chain a fused multi-filter probe; `items` pairs each applied
+        filter's signature with the local (canonical) key columns it
+        probed — the same filter over two different key columns is two
+        different mask transformations. Apply order must not split
+        states (intersection commutes), so the pairs are sorted; one
+        unknown source poisons the chain."""
+        if self.state_sig is None:
+            return
+        if any(s is None for s, _ in items):
+            self.state_sig = None
+            return
+        self.chain_event(("bloom", tuple(sorted(items))),
+                         frozenset().union(*deps) if deps
+                         else frozenset())
 
     @property
     def live(self) -> int:
@@ -154,6 +201,12 @@ class TransferStats:
     backend: str = ""             # bloom engine backend (numpy/jax/pallas)
     seconds: float = 0.0
     filters_built: int = 0
+    # filter builds satisfied by the cross-query artifact cache (the
+    # signature matched an unchanged survivor state, DESIGN.md §12)
+    filters_reused: int = 0
+    # True when this whole stats record was replayed from a cached
+    # post-transfer slot entry (no scan/transfer work ran this query)
+    from_cache: bool = False
     filter_bytes: int = 0
     # rows_probed counts rows actually tested against a filter (the live
     # set at the moment each filter is applied), NOT the survivors
@@ -219,6 +272,16 @@ class Strategy:
                   ) -> TransferStats:
         return TransferStats(strategy=self.name)
 
+    def cache_signature(self) -> Optional[tuple]:
+        """Token tuple identifying every parameter that can change the
+        survivor masks `prefilter` produces (DESIGN.md §12). Strategies
+        with equal signatures produce bit-identical post-transfer slot
+        state on the same plan and catalog; the bloom-engine backend is
+        deliberately excluded (all backends build identical filters).
+        None = unknown semantics, never cached (the base-class default,
+        so third-party strategies are safe by construction)."""
+        return None
+
     def per_join_filter(self, build: Table, probe: Table,
                         build_keys: Sequence[str], probe_keys: Sequence[str],
                         stats: TransferStats) -> np.ndarray:
@@ -227,5 +290,10 @@ class Strategy:
 
 class NoPredTrans(Strategy):
     name = "no-pred-trans"
+
+    def cache_signature(self) -> Optional[tuple]:
+        # a no-op prefilter: slot state is the bare compacted scan,
+        # shared with every other prefilter-free strategy ("none")
+        return ("none",)
 
 

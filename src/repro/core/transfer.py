@@ -25,12 +25,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import bloom
+from repro.core import bloom, provenance
 from repro.core.bloom import MinMaxFilter
+
+if TYPE_CHECKING:   # type-only: the cache is duck-typed at runtime
+    from repro.core.artifact_cache import ArtifactCache
 from repro.core.engine_bloom import BloomEngine, EngineKeys, get_engine
 from repro.core.graph import (  # noqa: F401  (re-exported)
     Edge, EdgeDecision, NoPredTrans, Strategy, TransferStats, Vertex,
@@ -60,6 +63,12 @@ class BloomJoin(Strategy):
         # filters below will run on
         return TransferStats(strategy=self.name,
                              backend=self.engine.backend)
+
+    def cache_signature(self):
+        # prefilter is a no-op, so post-transfer slot state is the bare
+        # compacted scan — shared with NoPredTrans (the per-join
+        # filtering happens later, inside the join phase)
+        return ("none",)
 
     def per_join_filter(self, build, probe, build_keys, probe_keys, stats):
         bk = self.engine.keys(ops.composite_key(build, build_keys))
@@ -103,7 +112,8 @@ class PredTrans(Strategy):
                  k: int = bloom.DEFAULT_K, passes: int = 2,
                  prune: bool = False, lip_order: bool = True,
                  backend: str = "numpy",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 artifact_cache: Optional["ArtifactCache"] = None):
         self.bits_per_key = bits_per_key
         self.k = k
         self.passes = passes  # 2 = forward+backward (paper); more allowed
@@ -117,6 +127,30 @@ class PredTrans(Strategy):
         self.lip_order = lip_order
         self.engine: BloomEngine = get_engine(backend, k=k,
                                               interpret=interpret)
+        # cross-query transfer-artifact cache (DESIGN.md §12): filter
+        # builds whose provenance signature matches an entry are reused
+        # instead of rebuilt; None = per-query behavior, no sharing
+        self.artifact_cache = artifact_cache
+
+    def cache_signature(self):
+        return ("pred-trans", self.bits_per_key, self.k, self.passes,
+                self.prune, self.lip_order)
+
+    # -- cross-query filter reuse (DESIGN.md §12) ----------------------
+    def _cached_filter(self, fsig: Optional[bytes]):
+        """(words, minmax) from the shared cache, or None."""
+        if self.artifact_cache is None or fsig is None:
+            return None
+        return self.artifact_cache.get(("bloom", fsig))
+
+    def _store_filter(self, fsig: Optional[bytes], words, mm,
+                      v: Vertex) -> None:
+        if self.artifact_cache is None or fsig is None:
+            return
+        host = np.asarray(words)    # host-resident: shareable across
+        self.artifact_cache.put(    # engine backends (bit-identical)
+            ("bloom", fsig), (host, mm), nbytes=host.nbytes + 32,
+            versions=v.dep_versions)
 
     def prefilter(self, vertices, edges):
         stats = TransferStats(strategy=self.name,
@@ -172,8 +206,10 @@ class PredTrans(Strategy):
         """Process vertices in `seq` order; a filter flows along edge
         (a,b) iff rank order matches the pass direction and the edge
         allows that direction."""
-        # pending[edge_idx] = (filter, source selectivity estimate)
-        pending: Dict[int, Tuple[bloom.BloomFilter, float]] = {}
+        # pending[edge_idx] = (filter, source selectivity estimate,
+        #                      filter provenance sig, source versions)
+        pending: Dict[int, Tuple[bloom.BloomFilter, float,
+                                 Optional[bytes], frozenset]] = {}
 
         def flows(src: int, dst: int, e: Edge) -> bool:
             ok_dir = (rank[src] < rank[dst]) == forward and src != dst
@@ -193,11 +229,20 @@ class PredTrans(Strategy):
             if self.lip_order:          # most selective first (LIP-style)
                 incoming.sort(key=lambda t: t[0])
             if incoming:
+                before = scan.live
                 stats.rows_probed += scan.probe(
                     [(pending[ei][0].words,
                       self._hashed(v, e.endpoint_cols(lid)))
                      for _, ei, e in incoming])
                 v.mask = scan.mask
+                # a probe that removed nothing left the survivor row
+                # set — and so its provenance signature — unchanged
+                if scan.live != before:
+                    v.apply_filters_sig(
+                        [(pending[ei][2],
+                          v.canon_cols(e.endpoint_cols(lid)))
+                         for _, ei, e in incoming],
+                        [pending[ei][3] for _, ei, e in incoming])
             # 2. build transformed outgoing filters from the same
             #    survivor set — probe→build is one scan, never a rescan
             out_edges = [(ei, e) for ei, e in adj[lid]
@@ -221,20 +266,31 @@ class PredTrans(Strategy):
             nblocks = bloom.blocks_for(max(live, 1), self.bits_per_key)
             sel = live / max(v.base_rows if v.base_rows > 0
                              else len(v.table), 1)
-            built: Dict[int, np.ndarray] = {}   # same cols => same filter
+            built: Dict[int, tuple] = {}        # same cols => same filter
             for ei, e in out_edges:
                 cols = e.endpoint_cols(lid)
                 hk = self._hashed(v, cols)
-                words = built.get(id(hk))
-                if words is None:
-                    # NULL-tight: invalid-key rows never match, so they
-                    # never earn filter bits (the vertex mask — and the
-                    # filter sizing by live rows — stay untouched)
-                    words = scan.build(hk, nblocks,
-                                       valid=v.key_valid(cols))
-                    built[id(hk)] = words
+                hit = built.get(id(hk))
+                if hit is None:
+                    fsig = provenance.filter_sig(
+                        v.state_sig, v.canon_cols(cols), nblocks,
+                        self.k)
+                    ent = self._cached_filter(fsig)
+                    if ent is not None:
+                        words = ent[0]
+                        stats.filters_reused += 1
+                    else:
+                        # NULL-tight: invalid-key rows never match, so
+                        # they never earn filter bits (the vertex mask —
+                        # and the filter sizing by live rows — stay
+                        # untouched)
+                        words = scan.build(hk, nblocks,
+                                           valid=v.key_valid(cols))
+                        self._store_filter(fsig, words, None, v)
+                    built[id(hk)] = hit = (words, fsig)
+                words, fsig = hit
                 filt = bloom.BloomFilter(words, self.k)
-                pending[ei] = (filt, sel)
+                pending[ei] = (filt, sel, fsig, v.dep_versions)
                 stats.filters_built += 1
                 stats.filter_bytes += filt.nbytes()
 
@@ -322,6 +378,8 @@ class _Emitted:
     mm: Optional[MinMaxFilter]
     sel_est: float
     decision: EdgeDecision
+    sig: Optional[bytes] = None       # filter provenance signature
+    deps: frozenset = frozenset()     # source Table.version set
 
 
 class AdaptivePredTrans(PredTrans):
@@ -373,10 +431,12 @@ class AdaptivePredTrans(PredTrans):
                  interpret: Optional[bool] = None, mode: str = "auto",
                  costs: Optional[TransferCosts] = None,
                  minmax: bool = True,
-                 early_exit_frac: float = 0.001):
+                 early_exit_frac: float = 0.001,
+                 artifact_cache: Optional["ArtifactCache"] = None):
         super().__init__(bits_per_key=bits_per_key, k=k, passes=passes,
                          prune=False, lip_order=lip_order,
-                         backend=backend, interpret=interpret)
+                         backend=backend, interpret=interpret,
+                         artifact_cache=artifact_cache)
         if mode not in self.MODES:
             raise ValueError(f"mode must be one of {self.MODES}, "
                              f"got {mode!r}")
@@ -386,6 +446,15 @@ class AdaptivePredTrans(PredTrans):
         # must reproduce the always-apply oracle's survivor sets)
         self.minmax = minmax and mode == "auto"
         self.early_exit_frac = early_exit_frac
+
+    def cache_signature(self):
+        # the cost model gates which edges apply, so every coefficient
+        # shapes the survivor masks — the per-backend DEFAULT_COSTS
+        # differ, which is why `costs` is in and `backend` stays out
+        return (("pred-trans-adaptive", self.bits_per_key, self.k,
+                 self.passes, self.lip_order, self.mode, self.minmax,
+                 self.early_exit_frac)
+                + dataclasses.astuple(self.costs))
 
     # -- pass loop with early exit ------------------------------------
     def _run_passes(self, order, rank, vertices, adj, stats):
@@ -415,12 +484,13 @@ class AdaptivePredTrans(PredTrans):
                     cur = min(cur, o.base_rows)
                 self._dom[key] = cur
         # per-prefilter caches: filters/ranges by (leaf, cols) with the
-        # live count they were built at; distinct estimates by
-        # (leaf, cols, live); conservative probe-side ranges by
-        # (leaf, cols)
+        # live count AND provenance signature they were built at;
+        # distinct estimates by (leaf, cols, live); conservative
+        # probe-side ranges by (leaf, cols)
         self._fcache: Dict[Tuple, Tuple[np.ndarray,
                                         Optional[MinMaxFilter],
-                                        int, int]] = {}
+                                        int, Optional[bytes],
+                                        int]] = {}
         self._dcache: Dict[Tuple, int] = {}
         self._rcache: Dict[Tuple, Optional[Tuple[int, int]]] = {}
         self._rcache2: Dict[int, float] = {}    # per-vertex join rate
@@ -444,6 +514,25 @@ class AdaptivePredTrans(PredTrans):
                 break               # pass early-exit (DESIGN §11)
 
     # -- helpers -------------------------------------------------------
+    def _fcache_get(self, lid: int, cols: Tuple[str, ...], live: int,
+                    sig: Optional[bytes]):
+        """Per-query filter-cache lookup, validated by the provenance
+        signature of the vertex's *current* survivor state. The PR-5
+        key validated by live count alone and could collide across
+        predicate states that keep equal row counts over different
+        rows; the signature cannot. The live-count check survives only
+        as the fallback for signature-less vertices (constructed
+        outside the executor), where it is sound: masks shrink
+        monotonically within one prefilter, so an unchanged count means
+        an unchanged mask."""
+        cached = self._fcache.get((lid, cols))
+        if cached is None:
+            return None
+        _, _, clive, csig, _ = cached
+        if sig is None and csig is None:
+            return cached if clive == live else None
+        return cached if csig == sig else None
+
     def _rangeable(self, v: Vertex, cols: Tuple[str, ...]) -> bool:
         """Ranges are only meaningful for order-preserving composite
         encodings: single non-dictionary columns, or the packed
@@ -620,6 +709,10 @@ class AdaptivePredTrans(PredTrans):
                     # without one hash — incl. the empty-build cascade
                     # (an emptied vertex emits an empty range)
                     scan.clear()
+                    if pf.sig is None:
+                        v.state_sig = None
+                    else:
+                        v.chain_event(("cut", pf.sig), pf.deps)
                     pf.decision.action = "minmax-cut"
                     pf.decision.act_sel = 1.0
                     cut = True
@@ -632,12 +725,20 @@ class AdaptivePredTrans(PredTrans):
                     hi = min(cons[1], pf.mm.hi)
                     width = max(cons[1] - cons[0] + 1, 1)
                     if (hi - lo + 1) / width < 0.98:
+                        n0 = scan.live
                         stats.rows_range_tested += scan.probe_range(
                             v.key(cols), pf.mm.lo, pf.mm.hi)
+                        # the signature names the survivor *row set*:
+                        # a cut that removed nothing left it unchanged
+                        if scan.live != n0:
+                            v.chain_event(("range", v.canon_cols(cols),
+                                           int(pf.mm.lo),
+                                           int(pf.mm.hi)),
+                                          pf.deps)
             if cut:
                 v.mask = scan.mask
             elif incoming:
-                enter = scan.live
+                enter = before = scan.live
                 stats.rows_probed += scan.probe(
                     [(pf.words, self._hashed(v, e.endpoint_cols(lid)))
                      for pf, ei, e in incoming])
@@ -648,6 +749,14 @@ class AdaptivePredTrans(PredTrans):
                         pf.decision.act_sel = 1.0 - after / enter
                     enter = after
                 v.mask = scan.mask
+                # `enter` is now the post-probe live count: a fused
+                # probe that removed nothing left the row set — and so
+                # its signature — unchanged (cross-pass filter reuse)
+                if enter != before:
+                    v.apply_filters_sig(
+                        [(pf.sig, v.canon_cols(e.endpoint_cols(lid)))
+                         for pf, ei, e in incoming],
+                        [pf.deps for pf, ei, e in incoming])
 
             if cut or incoming:
                 lives[lid] = scan.live
@@ -668,9 +777,7 @@ class AdaptivePredTrans(PredTrans):
                 if self.mode == "force_skip":
                     dec.action = "skipped-forced"
                     continue
-                cached = self._fcache.get((lid, cols))
-                if cached is not None and cached[2] != live:
-                    cached = None           # survivor set changed
+                cached = self._fcache_get(lid, cols, live, v.state_sig)
                 c_build = 0.0 if cached is not None \
                     else costs.build * live
                 dlive = dec.probe_rows
@@ -709,23 +816,36 @@ class AdaptivePredTrans(PredTrans):
                     surv[dv.leaf_id] = frac * (1.0 - sel)
                 else:
                     dec.cost_ns = c_build + costs.probe * dlive
+                nblocks = bloom.blocks_for(max(live, 1),
+                                           self.bits_per_key)
+                fsig = provenance.filter_sig(
+                    v.state_sig, v.canon_cols(cols), nblocks, self.k,
+                    self.minmax)
                 if cached is not None:
-                    words, mm, _, nbytes = cached
+                    words, mm, _, _, nbytes = cached
                 else:
-                    hk = self._hashed(v, cols)
-                    nblocks = bloom.blocks_for(max(live, 1),
-                                               self.bits_per_key)
-                    words = scan.build(hk, nblocks,
-                                       valid=v.key_valid(cols))
-                    mm = self._live_range(v, scan, cols) \
-                        if self.minmax else None
-                    nbytes = bloom.BloomFilter(words, self.k).nbytes()
-                    stats.filters_built += 1
-                    stats.filter_bytes += nbytes
-                    dec.filter_bytes = nbytes
+                    ent = self._cached_filter(fsig)
+                    if ent is not None:
+                        words, mm = ent
+                        nbytes = bloom.BloomFilter(words,
+                                                   self.k).nbytes()
+                        stats.filters_reused += 1
+                    else:
+                        hk = self._hashed(v, cols)
+                        words = scan.build(hk, nblocks,
+                                           valid=v.key_valid(cols))
+                        mm = self._live_range(v, scan, cols) \
+                            if self.minmax else None
+                        nbytes = bloom.BloomFilter(words,
+                                                   self.k).nbytes()
+                        stats.filters_built += 1
+                        stats.filter_bytes += nbytes
+                        dec.filter_bytes = nbytes
+                        self._store_filter(fsig, words, mm, v)
                     self._fcache[(lid, cols)] = (words, mm, live,
-                                                 nbytes)
-                pending[ei] = _Emitted(words, mm, dec.est_sel, dec)
+                                                 v.state_sig, nbytes)
+                pending[ei] = _Emitted(words, mm, dec.est_sel, dec,
+                                       fsig, v.dep_versions)
 
 
 class Yannakakis(Strategy):
@@ -737,6 +857,11 @@ class Yannakakis(Strategy):
 
     def __init__(self, root_seed: int = 0):
         self.root_seed = root_seed
+
+    def cache_signature(self):
+        # the BFS tree (and so the final masks) depends only on the
+        # seed-chosen root; semi-joins are exact, no filter params
+        return ("yannakakis", self.root_seed)
 
     def prefilter(self, vertices, edges):
         stats = TransferStats(strategy=self.name)
@@ -782,6 +907,10 @@ class Yannakakis(Strategy):
             skeys = vs.key(e.endpoint_cols(src))[smask]
             hit = ops.semi_join_mask(dkeys, skeys)
             vd.mask &= hit
+            # semi-join mask mutations are outside the transfer event
+            # protocol — poison the provenance chain rather than let a
+            # stale signature certify a filter from the wrong rows
+            vd.state_sig = None
             stats.rows_semijoin_build += len(skeys)
             stats.rows_semijoin_probe += len(dkeys)
 

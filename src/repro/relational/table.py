@@ -15,9 +15,18 @@ Design notes
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import itertools
 from typing import Dict, Iterable, Mapping, Optional, Sequence
 
 import numpy as np
+
+# monotonic data-version counter (itertools.count is atomic under the
+# GIL): every Table constructed gets a fresh version, so "the same
+# catalog Table object" and "the same version" are interchangeable —
+# the cross-query artifact caches key on it (DESIGN.md §12) and
+# replacing a catalog table automatically changes every derived key
+_versions = itertools.count(1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +116,7 @@ class Table:
     def __init__(self, columns: Mapping[str, Column], name: str = ""):
         self.columns: Dict[str, Column] = dict(columns)
         self.name = name
+        self.version = next(_versions)
         lens = {len(c) for c in self.columns.values()}
         assert len(lens) <= 1, f"ragged table {name}: {lens}"
         self._nrows = lens.pop() if lens else 0
@@ -200,6 +210,31 @@ class Table:
         cols = ", ".join(f"{k}:{c.data.dtype}{'*' if c.is_string else ''}"
                          for k, c in self.columns.items())
         return f"Table({self.name!r}, rows={self._nrows}, [{cols}])"
+
+
+def table_digest(table: Table) -> str:
+    """md5 of a table's full decoded content (names, dtypes, values,
+    validity) — the bit-exactness oracle the serving tests and benches
+    compare concurrent / warm-cache results against. Strings hash via
+    their decoded values, so vocabulary-local code assignments cannot
+    mask (or fake) a difference."""
+    h = hashlib.md5()
+    for name in table.names:
+        c = table[name]
+        data = c.decode()
+        if c.valid is not None:
+            # NULL slots hold unspecified representative bytes; zero
+            # them so only the authoritative (valid, value) pairs hash
+            data = data.copy()
+            data[~c.valid] = np.zeros((), data.dtype)
+        h.update(name.encode())
+        h.update(str(data.dtype).encode())
+        h.update(np.ascontiguousarray(data).tobytes())
+        if c.valid is None:
+            h.update(b"|all-valid")
+        else:
+            h.update(b"|v" + np.ascontiguousarray(c.valid).tobytes())
+    return h.hexdigest()
 
 
 def concat_tables(tables: Sequence[Table]) -> Table:

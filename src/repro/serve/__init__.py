@@ -1,0 +1,7 @@
+"""Concurrent query serving with cross-query caching (DESIGN.md §12)."""
+from repro.serve.server import (
+    QueryServer, ServeConfig, ServerMetrics, ServerSaturated, Session,
+)
+
+__all__ = ["QueryServer", "ServeConfig", "ServerMetrics",
+           "ServerSaturated", "Session"]

@@ -1,0 +1,326 @@
+"""Concurrent query-serving front end (DESIGN.md §12).
+
+`QueryServer` admits many queries concurrently over one shared immutable
+catalog and makes repeat traffic cheap through two cross-query caches:
+
+* a **plan cache** (`repro.relational.plancache.PlanCache`) keyed on the
+  canonical plan fingerprint + catalog signature — hits skip
+  `collect_columns`, `extract_join_graph` and `annotate_join_depth`;
+* a **transfer-artifact cache** (`repro.core.artifact_cache.
+  ArtifactCache`) holding Bloom/min-max filters keyed by provenance
+  filter signature and whole post-transfer slot states keyed by
+  (plan fingerprint, catalog signature, strategy cache signature) —
+  a slot hit replays the scan+transfer phases for free.
+
+Concurrency model: a bounded admission queue feeds a fixed pool of
+worker threads. Each admitted query gets its *own* `Executor` and its
+own `Strategy` instance (strategies carry per-run scratch state and are
+not concurrently shareable; the engines underneath them are cached
+singletons, created under a lock, and safe to share). The caches are
+the only deliberately shared mutable state, and both take their own
+locks. Admission policy: ``"block"`` (backpressure, default) or
+``"reject"`` (raise `ServerSaturated` when the queue is full).
+
+Catalog updates go through `update_table`, which swaps the table under
+the catalog lock and drops every cached artifact derived from the old
+version — cache keys embed `Table.version`, so stale entries also
+become unreachable by construction; invalidation just frees the bytes.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.artifact_cache import ArtifactCache
+from repro.core.transfer import BACKEND_AWARE, STRATEGIES, make_strategy
+from repro.relational.executor import ExecStats, Executor
+from repro.relational.plan import PlanNode
+from repro.relational.plancache import PlanCache
+from repro.relational.table import Table
+
+# strategies whose constructor accepts the shared artifact cache (the
+# Bloom/min-max filter reuse path; slot-state reuse needs no strategy
+# cooperation and works for every cacheable strategy)
+FILTER_CACHED = {"pred-trans", "pred-trans-opt", "pred-trans-adaptive"}
+
+
+class ServerSaturated(RuntimeError):
+    """Raised by admission="reject" when the queue is full."""
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Serving knobs. `strategy`/`strategy_kw` are per-server defaults;
+    every submit may override them per query."""
+    strategy: str = "pred-trans-adaptive"
+    strategy_kw: dict = dataclasses.field(default_factory=dict)
+    join_backend: str = "numpy"
+    engine: str = "single"
+    late_materialize: bool = True
+    workers: int = 4
+    max_queue: int = 64                 # admission bound (0 = unbounded)
+    admission: str = "block"            # "block" | "reject"
+    plan_cache_entries: int = 512
+    artifact_cache_bytes: int = 256 << 20
+
+    def __post_init__(self):
+        if self.admission not in ("block", "reject"):
+            raise ValueError(f"unknown admission {self.admission!r}; "
+                             "choose 'block' or 'reject'")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+
+
+class ServerMetrics:
+    """Aggregate per-query accounting, lock-guarded: latency quantiles
+    per tag, admission counters, warm-replay counts."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._lat: Dict[str, List[float]] = {}
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0
+        self.warm_replays = 0           # queries served from slot state
+
+    def record_submit(self) -> None:
+        with self._lock:
+            self.submitted += 1
+
+    def record_reject(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def record_done(self, tag: str, seconds: float,
+                    stats: Optional[ExecStats]) -> None:
+        with self._lock:
+            if stats is None:
+                self.failed += 1
+                return
+            self.completed += 1
+            self._lat.setdefault(tag, []).append(seconds)
+            if stats.transfer is not None and stats.transfer.from_cache:
+                self.warm_replays += 1
+
+    @staticmethod
+    def _quantiles(lat: List[float]) -> dict:
+        a = np.asarray(lat)
+        return {"n": int(a.size),
+                "p50_ms": float(np.percentile(a, 50) * 1e3),
+                "p99_ms": float(np.percentile(a, 99) * 1e3),
+                "mean_ms": float(a.mean() * 1e3)}
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            every = [s for lat in self._lat.values() for s in lat]
+            out = {"submitted": self.submitted,
+                   "completed": self.completed,
+                   "failed": self.failed, "rejected": self.rejected,
+                   "warm_replays": self.warm_replays}
+            if every:
+                out["latency"] = self._quantiles(every)
+                out["per_tag"] = {t: self._quantiles(lat)
+                                  for t, lat in sorted(self._lat.items())}
+            return out
+
+
+class _Request:
+    __slots__ = ("plan", "strategy", "strategy_kw", "tag", "future")
+
+    def __init__(self, plan, strategy, strategy_kw, tag, future):
+        self.plan = plan
+        self.strategy = strategy
+        self.strategy_kw = strategy_kw
+        self.tag = tag
+        self.future = future
+
+
+class QueryServer:
+    """Thread-pooled serving loop over one shared catalog + caches.
+
+    >>> with QueryServer(catalog) as srv:
+    ...     table, stats = srv.query(build_query(5, sf))
+    ...     fut = srv.submit(build_query(3, sf))        # async
+    ...     table3, stats3 = fut.result()
+    """
+
+    def __init__(self, catalog: Mapping[str, Table],
+                 config: Optional[ServeConfig] = None):
+        self.config = config or ServeConfig()
+        self._catalog_lock = threading.Lock()
+        self.catalog: Dict[str, Table] = dict(catalog)
+        self.plan_cache = PlanCache(self.config.plan_cache_entries)
+        self.artifact_cache = ArtifactCache(
+            self.config.artifact_cache_bytes)
+        self.metrics = ServerMetrics()
+        self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue(
+            self.config.max_queue)
+        self._closed = False
+        self._workers = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"repro-serve-{i}")
+            for i in range(max(1, self.config.workers))]
+        for t in self._workers:
+            t.start()
+
+    # -- strategy / executor construction ---------------------------------
+    def _make_strategy(self, name: str, kw: dict):
+        kw = dict(kw)
+        if name in FILTER_CACHED:
+            kw.setdefault("artifact_cache", self.artifact_cache)
+        if name in BACKEND_AWARE:
+            kw.setdefault("backend", self.config.join_backend
+                          if self.config.join_backend in
+                          ("numpy", "jax", "pallas") else "numpy")
+        return make_strategy(name, **kw)
+
+    def _execute(self, req: _Request) -> Tuple[Table, ExecStats]:
+        # a fresh Strategy + Executor per query: per-run scratch state
+        # stays private, while the catalog snapshot, engines and caches
+        # are the shared (and individually locked) parts
+        with self._catalog_lock:
+            catalog = dict(self.catalog)
+        ex = Executor(catalog,
+                      self._make_strategy(req.strategy, req.strategy_kw),
+                      join_backend=self.config.join_backend,
+                      late_materialize=self.config.late_materialize,
+                      engine=self.config.engine,
+                      plan_cache=self.plan_cache,
+                      artifact_cache=self.artifact_cache)
+        return ex.execute(req.plan)
+
+    # -- worker loop -------------------------------------------------------
+    def _worker(self) -> None:
+        import time
+        while True:
+            req = self._queue.get()
+            if req is None:             # shutdown sentinel
+                self._queue.task_done()
+                return
+            if not req.future.set_running_or_notify_cancel():
+                self._queue.task_done()
+                continue
+            t0 = time.perf_counter()
+            try:
+                result = self._execute(req)
+            except BaseException as e:   # noqa: BLE001 — relayed to caller
+                self.metrics.record_done(req.tag,
+                                         time.perf_counter() - t0, None)
+                req.future.set_exception(e)
+            else:
+                self.metrics.record_done(req.tag,
+                                         time.perf_counter() - t0,
+                                         result[1])
+                req.future.set_result(result)
+            finally:
+                self._queue.task_done()
+
+    # -- submission --------------------------------------------------------
+    def submit(self, plan: PlanNode, strategy: Optional[str] = None,
+               tag: str = "", **strategy_kw
+               ) -> "Future[Tuple[Table, ExecStats]]":
+        """Admit one query; returns a `concurrent.futures.Future`
+        resolving to (result table, ExecStats). Admission follows
+        `config.admission`: "block" applies backpressure, "reject"
+        raises `ServerSaturated` when the queue is full."""
+        if self._closed:
+            raise RuntimeError("server is closed")
+        name = strategy or self.config.strategy
+        kw = dict(self.config.strategy_kw) if strategy is None else {}
+        kw.update(strategy_kw)
+        fut: "Future[Tuple[Table, ExecStats]]" = Future()
+        req = _Request(plan, name, kw, tag or name, fut)
+        if self.config.admission == "reject":
+            try:
+                self._queue.put_nowait(req)
+            except queue.Full:
+                self.metrics.record_reject()
+                raise ServerSaturated(
+                    f"admission queue full "
+                    f"({self.config.max_queue} pending)") from None
+        else:
+            self._queue.put(req)
+        self.metrics.record_submit()
+        return fut
+
+    def query(self, plan: PlanNode, strategy: Optional[str] = None,
+              tag: str = "", **strategy_kw) -> Tuple[Table, ExecStats]:
+        """Synchronous submit-and-wait."""
+        return self.submit(plan, strategy, tag, **strategy_kw).result()
+
+    async def aquery(self, plan: PlanNode,
+                     strategy: Optional[str] = None, tag: str = "",
+                     **strategy_kw) -> Tuple[Table, ExecStats]:
+        """Awaitable submit — many `aquery` coroutines run concurrently
+        over the worker pool from one event loop."""
+        return await asyncio.wrap_future(
+            self.submit(plan, strategy, tag, **strategy_kw))
+
+    def session(self, strategy: Optional[str] = None, tag: str = "",
+                **strategy_kw) -> "Session":
+        return Session(self, strategy, tag, strategy_kw)
+
+    # -- catalog updates / invalidation ------------------------------------
+    def update_table(self, name: str, table: Table) -> int:
+        """Replace a catalog table and drop every cached artifact the
+        old version contributed to. Queries admitted after this see the
+        new table; in-flight queries keep their snapshot (and their
+        results stay internally consistent — each query snapshots the
+        whole catalog once). Returns entries invalidated."""
+        with self._catalog_lock:
+            old = self.catalog.get(name)
+            self.catalog[name] = table
+        if old is None:
+            return 0
+        return self.artifact_cache.invalidate_table(old)
+
+    # -- observability / lifecycle -----------------------------------------
+    def metrics_snapshot(self) -> dict:
+        return {"server": self.metrics.snapshot(),
+                "plan_cache": self.plan_cache.snapshot(),
+                "artifact_cache": self.artifact_cache.snapshot()}
+
+    def close(self, wait: bool = True) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for _ in self._workers:
+            self._queue.put(None)
+        if wait:
+            for t in self._workers:
+                t.join()
+
+    def __enter__(self) -> "QueryServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class Session:
+    """A client handle bound to one server with a default strategy —
+    the unit the serving benches/tests hand to each simulated client."""
+
+    def __init__(self, server: QueryServer, strategy: Optional[str],
+                 tag: str, strategy_kw: dict):
+        self.server = server
+        self.strategy = strategy
+        self.tag = tag
+        self.strategy_kw = dict(strategy_kw)
+
+    def submit(self, plan: PlanNode, tag: str = ""):
+        return self.server.submit(plan, self.strategy,
+                                  tag or self.tag, **self.strategy_kw)
+
+    def query(self, plan: PlanNode, tag: str = ""):
+        return self.submit(plan, tag).result()
+
+    async def aquery(self, plan: PlanNode, tag: str = ""):
+        return await asyncio.wrap_future(self.submit(plan, tag))

@@ -1,0 +1,305 @@
+"""Serving layer: plan/artifact caches, concurrency, invalidation.
+
+Correctness bar: every cached or concurrent path must be md5-bit-exact
+(`table_digest`) against the serial cold-cache oracle — including warm
+reruns, mixed strategies, and eager/late materialization.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.artifact_cache import ArtifactCache
+from repro.core.transfer import AdaptivePredTrans, make_strategy
+from repro.core import provenance
+from repro.relational.executor import Executor
+from repro.relational.expr import Col, Lit
+from repro.relational.plan import GroupBy, Join, Scan
+from repro.relational.plancache import (
+    PlanCache, expr_fingerprint, plan_fingerprint,
+)
+from repro.relational.table import Table, table_digest
+from repro.serve import QueryServer, ServeConfig, ServerSaturated
+from repro.tpch import QUERIES, build_query
+
+SF = 0.01
+QNS = sorted(QUERIES)
+
+
+def _oracle(catalog, qn, strategy="pred-trans"):
+    ex = Executor(catalog, make_strategy(strategy))
+    return table_digest(ex.execute(build_query(qn, SF))[0])
+
+
+# -------------------------------------------------------------------------
+# plan fingerprints
+# -------------------------------------------------------------------------
+
+
+def test_plan_fingerprint_stable_across_instances():
+    """Two independently built instances of one query share a
+    fingerprint (leaf_ids are volatile and must not leak in)."""
+    fp1, t1 = plan_fingerprint(build_query(5, SF))
+    fp2, t2 = plan_fingerprint(build_query(5, SF))
+    assert fp1 is not None and fp1 == fp2 and t1 == t2
+
+
+def test_plan_fingerprint_distinguishes_queries():
+    fps = {plan_fingerprint(build_query(q, SF))[0] for q in QNS}
+    assert None not in fps
+    assert len(fps) == len(QNS)
+
+
+def test_plan_fingerprint_sees_literal_changes():
+    a = Scan("part", filter=Col("p_size") == Lit(15))
+    b = Scan("part", filter=Col("p_size") == Lit(16))
+    assert plan_fingerprint(a)[0] != plan_fingerprint(b)[0]
+
+
+def test_expr_fingerprint_alias_rename():
+    strip = lambda n: n.split("_", 1)[1]  # noqa: E731
+    assert expr_fingerprint(Col("n1_nationkey") == Lit(3), strip) == \
+        expr_fingerprint(Col("n2_nationkey") == Lit(3), strip)
+
+
+# -------------------------------------------------------------------------
+# PR-5 filter-cache key regression (satellite: live count can collide)
+# -------------------------------------------------------------------------
+
+
+def _two_state_catalogs():
+    """Two catalogs with the same table names and *equal live counts*
+    on the filtered build side but different surviving rows — the
+    live-count-only cache key cannot tell them apart."""
+    def build(keep_lo):
+        dim = Table.from_arrays({
+            "d_id": np.arange(100, dtype=np.int64),
+            "d_grp": (np.arange(100, dtype=np.int64) < 50
+                      ).astype(np.int64)}, "dim")
+        fact = Table.from_arrays({
+            "f_d": np.arange(100, dtype=np.int64),
+            "f_v": np.ones(100, dtype=np.int64)}, "fact")
+        return {"dim": dim, "fact": fact}, keep_lo
+    return build(1), build(0)
+
+
+def _count_plan(keep):
+    # dim filtered to 50 rows either way; which 50 differs with `keep`
+    return GroupBy(
+        Join(Scan("fact"), Scan("dim", filter=Col("d_grp") == Lit(keep)),
+             ["f_d"], ["d_id"]),
+        [], [("cnt", "count", "")])
+
+
+def test_filter_cache_no_collision_across_predicate_states():
+    """One strategy instance + shared artifact cache, two queries whose
+    build sides have identical live counts over different rows: results
+    must match per-query cold oracles (a live-count-keyed cache would
+    serve query 2 the filter of query 1)."""
+    (cat1, k1), (cat2, k2) = _two_state_catalogs()
+    ac = ArtifactCache()
+    for cat, keep in ((cat1, k1), (cat2, k2)):
+        cold = Executor(cat, make_strategy("pred-trans-adaptive"))
+        want = table_digest(cold.execute(_count_plan(keep))[0])
+        warm = Executor(
+            cat, make_strategy("pred-trans-adaptive",
+                               artifact_cache=ac),
+            artifact_cache=ac)
+        got = table_digest(warm.execute(_count_plan(keep))[0])
+        assert got == want
+
+
+def test_fcache_get_validates_by_signature():
+    """Direct unit check of the fixed per-query lookup: equal live
+    counts no longer hit across different provenance signatures; the
+    live fallback survives only when both signatures are unknown."""
+    s = AdaptivePredTrans()
+    s._fcache = {}
+    words = np.zeros(4, np.uint32)
+    sig_a, sig_b = b"a" * 16, b"b" * 16
+    s._fcache[(1, ("c",))] = (words, None, 50, sig_a, 16)
+    assert s._fcache_get(1, ("c",), 50, sig_a) is not None
+    assert s._fcache_get(1, ("c",), 50, sig_b) is None        # PR-5 bug
+    assert s._fcache_get(1, ("c",), 50, None) is None
+    s._fcache[(2, ("c",))] = (words, None, 50, None, 16)
+    assert s._fcache_get(2, ("c",), 50, None) is not None
+    assert s._fcache_get(2, ("c",), 49, None) is None
+
+
+def test_filter_sig_namespaces_minmax():
+    sig = provenance.digest("s")
+    assert provenance.filter_sig(sig, ("a",), 8, 3) != \
+        provenance.filter_sig(sig, ("a",), 8, 3, minmax=True)
+    assert provenance.filter_sig(None, ("a",), 8, 3) is None
+
+
+# -------------------------------------------------------------------------
+# warm-cache bit-exactness (serial)
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["pred-trans",
+                                      "pred-trans-adaptive"])
+def test_warm_cache_bit_exact_all_queries(tpch_small, strategy):
+    ac, pc = ArtifactCache(), PlanCache()
+    ex = Executor(tpch_small,
+                  make_strategy(strategy, artifact_cache=ac),
+                  plan_cache=pc, artifact_cache=ac)
+    for qn in QNS:
+        want = _oracle(tpch_small, qn, strategy)
+        d1 = table_digest(ex.execute(build_query(qn, SF))[0])
+        r2, s2 = ex.execute(build_query(qn, SF))
+        assert table_digest(r2) == d1 == want, f"q{qn}"
+        assert s2.transfer.from_cache, f"q{qn} second run must replay"
+    assert ac.hit_count("slots") >= len(QNS)
+    assert pc.hits >= len(QNS)
+
+
+def test_filter_reuse_across_aliased_scans(tpch_small):
+    """pred-trans on the full suite populates the Bloom-filter cache;
+    a rerun through a *fresh strategy instance* (empty per-query cache)
+    must reuse filters from the shared cache."""
+    ac = ArtifactCache()
+    for qn in QNS:
+        ex = Executor(tpch_small,
+                      make_strategy("pred-trans", artifact_cache=ac))
+        ex.execute(build_query(qn, SF))
+    built0 = ac.hit_count("bloom")
+    ex = Executor(tpch_small,
+                  make_strategy("pred-trans", artifact_cache=ac))
+    _, st = ex.execute(build_query(5, SF))
+    assert st.transfer.filters_reused > 0
+    assert ac.hit_count("bloom") > built0
+
+
+def test_artifact_cache_lru_and_invalidation():
+    ac = ArtifactCache(max_bytes=1000)
+    t = Table.from_arrays({"x": np.arange(4, dtype=np.int64)}, "t")
+    ac.put(("bloom", b"a"), ("A",), nbytes=400, versions=[t.version])
+    ac.put(("bloom", b"b"), ("B",), nbytes=400, versions=[99999])
+    assert ac.get(("bloom", b"a")) == ("A",)
+    ac.put(("bloom", b"c"), ("C",), nbytes=400, versions=[])   # evicts b
+    assert ac.get(("bloom", b"b")) is None
+    assert ac.invalidate_table(t) == 1
+    assert ac.get(("bloom", b"a")) is None
+    assert ac.get(("bloom", b"c")) is not None
+    ac.put(("bloom", b"huge"), ("D",), nbytes=10**6)           # > budget
+    assert ac.get(("bloom", b"huge")) is None
+
+
+def test_update_table_invalidates_and_recomputes(tpch_small):
+    """Swapping a catalog table must (a) drop derived artifacts and
+    (b) make warm reruns reflect the new data, not the cached state."""
+    cfg = ServeConfig(strategy="pred-trans", workers=2)
+    with QueryServer(tpch_small, cfg) as srv:
+        plan = build_query(5, SF)
+        d1 = table_digest(srv.query(build_query(5, SF))[0])
+        assert table_digest(srv.query(plan)[0]) == d1
+        # halve region: Q5 aggregates per region-restricted nation
+        region = tpch_small["region"]
+        half = region.gather(np.arange(max(1, len(region) // 2)))
+        half = Table(half.columns, "region")
+        dropped = srv.update_table("region", half)
+        assert dropped > 0
+        cold = Executor({**tpch_small, "region": half},
+                        make_strategy("pred-trans"))
+        want = table_digest(cold.execute(build_query(5, SF))[0])
+        got, st = srv.query(build_query(5, SF))
+        assert not st.transfer.from_cache
+        assert table_digest(got) == want
+        assert want != d1
+
+
+# -------------------------------------------------------------------------
+# concurrency correctness (satellite 3)
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("late", [True, False])
+def test_concurrent_mixed_strategies_bit_exact(tpch_small, late):
+    """N concurrent queries across strategies × one materialization
+    mode, twice (cold then warm), every result md5-bit-exact vs the
+    serial cold-cache oracle."""
+    qns = [2, 3, 5, 9, 10, 18, 21]
+    oracles = {qn: _oracle(tpch_small, qn) for qn in qns}
+    cfg = ServeConfig(strategy="pred-trans", workers=4,
+                      late_materialize=late)
+    strategies = ["pred-trans", "pred-trans-adaptive", "yannakakis",
+                  "no-pred-trans"]
+    with QueryServer(tpch_small, cfg) as srv:
+        for _round in range(2):          # cold, then warm
+            futs = [(qn, srv.submit(build_query(qn, SF),
+                                    strategy=strategies[i % 4]))
+                    for i, qn in enumerate(qns * 2)]
+            for qn, f in futs:
+                assert table_digest(f.result()[0]) == oracles[qn], \
+                    f"q{qn}"
+        snap = srv.metrics_snapshot()
+        assert snap["server"]["completed"] == len(qns) * 4
+        assert snap["server"]["warm_replays"] > 0
+        assert snap["artifact_cache"]["kinds"]["slots"]["hits"] > 0
+
+
+def test_concurrent_same_query_storm(tpch_small):
+    """Many workers racing on one plan shape: first finisher populates,
+    the rest must replay or rebuild — never corrupt (Slot.keys copies,
+    locked caches)."""
+    want = _oracle(tpch_small, 5)
+    cfg = ServeConfig(strategy="pred-trans", workers=8)
+    with QueryServer(tpch_small, cfg) as srv:
+        futs = [srv.submit(build_query(5, SF)) for _ in range(16)]
+        assert all(table_digest(f.result()[0]) == want for f in futs)
+
+
+def test_admission_reject(tpch_small):
+    """admission="reject" raises ServerSaturated once the bounded
+    queue fills behind a stalled worker."""
+    cfg = ServeConfig(strategy="no-pred-trans", workers=1, max_queue=1,
+                      admission="reject")
+    gate = threading.Event()
+
+    class Stall(Exception):
+        pass
+
+    with QueryServer(tpch_small, cfg) as srv:
+        orig = srv._execute
+
+        def slow(req):
+            gate.wait(10)
+            return orig(req)
+        srv._execute = slow
+        first = srv.submit(build_query(5, SF))      # occupies the worker
+        got = None
+        # one queue slot + one in flight: keep submitting until full
+        try:
+            for _ in range(4):
+                srv.submit(build_query(5, SF))
+        except ServerSaturated as e:
+            got = e
+        gate.set()
+        first.result()
+        assert got is not None
+        assert srv.metrics.rejected >= 1
+
+
+def test_engine_singletons_race_free():
+    """Concurrent first-touch engine creation yields one instance per
+    key (the locked get_* paths)."""
+    import repro.core.engine_bloom as eb
+    import repro.core.engine_join as ej
+    eb._ENGINES.clear()
+    ej._ENGINES.clear()
+    out = []
+    barrier = threading.Barrier(8)
+
+    def touch():
+        barrier.wait()
+        out.append((eb.get_engine("numpy"), ej.get_join_engine("numpy")))
+
+    threads = [threading.Thread(target=touch) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len({id(a) for a, _ in out}) == 1
+    assert len({id(b) for _, b in out}) == 1
