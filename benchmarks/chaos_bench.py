@@ -1,0 +1,251 @@
+"""Chaos benchmark: seeded faults at every registered point, all 20
+TPC-H queries, md5-bit-exact via the degradation ladder (DESIGN.md §13).
+
+For each fault point in `repro.core.faultinject.FAULT_POINTS` the suite
+replays the full TPC-H query set on a `degrade=True` executor with a
+deterministic fault schedule armed, and asserts every result is
+bit-identical to the clean pred-trans oracle. Per point it records how
+many faults fired, how many ladder moves they caused, and — the number
+that must stay zero — how many results diverged. A deadline probe then
+checks that a deadline far below a query's runtime aborts it within one
+transfer pass, and a cancellation probe that a cross-thread cancel
+lands at the next check.
+
+Schedules per point (all deterministic, see faultinject docstring):
+
+* ``engine.probe`` / ``engine.build`` — ``"all"``: every transfer
+  probe/build faults, forcing the strategy rung
+  (pred-trans → no-pred-trans, which does no Bloom work).
+* ``join.indices`` — seeded at-index with a fired cap: the eager
+  oracle rung routes through the same numpy ``join_indices``, so an
+  unbounded schedule would fail every rung by construction.
+* ``exchange.send`` — ``"all"`` on the distributed engine, forcing
+  the distributed → single-host rung.
+* ``gather.payload`` — ``"all"``, forcing late → eager
+  materialization (the eager path never gathers through JoinCursor).
+* ``cache.deserialize`` — at-index on a warm artifact cache: absorbed
+  by verify-on-hit (self-heal), no ladder move, result recomputed.
+
+``--smoke`` is the CI job: sf 0.01, a 5-query subset, exits nonzero on
+any wrong result, missing degradation, or never-fired schedule.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+STRATEGY = "pred-trans"
+SEED = 20260807
+SMOKE_QUERIES = (3, 5, 9, 10, 18)
+
+
+def _executor(cat, point: str, **kw):
+    from repro.core.transfer import make_strategy
+    from repro.relational.executor import Executor
+    if point == "exchange.send":
+        kw.setdefault("engine", "distributed")
+        kw.setdefault("dist_shards", 2)
+        kw.setdefault("dist_device", False)
+    return Executor(cat, make_strategy(STRATEGY), degrade=True, **kw)
+
+
+def _schedule(point: str):
+    from repro.core.faultinject import FaultSchedule
+    if point == "join.indices":
+        # finite: the eager rung fires this point too (see module doc)
+        return FaultSchedule.seeded(SEED, 0.9, points=(point,), limit=2)
+    if point == "cache.deserialize":
+        return FaultSchedule({point: 0})
+    return FaultSchedule({point: "all"})
+
+
+def oracle_digests(cat, sf: float, queries):
+    from repro.core.transfer import make_strategy
+    from repro.relational.executor import Executor
+    from repro.relational.table import table_digest
+    from repro.tpch import build_query
+    out = {}
+    for qn in queries:
+        ex = Executor(cat, make_strategy(STRATEGY))
+        out[qn] = table_digest(ex.execute(build_query(qn, sf))[0])
+    return out
+
+
+def chaos_point(cat, sf: float, point: str, queries, digests):
+    """Replay `queries` with `point` faulting; count fired faults,
+    ladder moves, and (must be zero) diverging results."""
+    from repro.core import faultinject
+    from repro.core.artifact_cache import ArtifactCache
+    from repro.relational.table import table_digest
+    from repro.tpch import build_query
+    fired = degr = wrong = failed = 0
+    for qn in queries:
+        if point == "cache.deserialize":
+            # self-heal path: warm hit faults, cache recomputes — the
+            # ladder never engages
+            from repro.core.transfer import make_strategy
+            from repro.relational.executor import Executor
+            from repro.relational.plancache import PlanCache
+            ac = ArtifactCache()
+            ex = Executor(cat, make_strategy(STRATEGY,
+                                             artifact_cache=ac),
+                          plan_cache=PlanCache(), artifact_cache=ac)
+            ex.execute(build_query(qn, sf))          # populate
+            with faultinject.inject(_schedule(point)) as sched:
+                res, stats = ex.execute(build_query(qn, sf))
+            fired += sched.total_fired()
+            degr += ac.corruptions
+        else:
+            ex = _executor(cat, point)
+            with faultinject.inject(_schedule(point)) as sched:
+                try:
+                    res, stats = ex.execute(build_query(qn, sf))
+                except Exception as e:               # noqa: BLE001
+                    print(f"chaos: {point} Q{qn} FAILED outright: {e}",
+                          file=sys.stderr)
+                    failed += 1
+                    fired += sched.total_fired()
+                    continue
+            fired += sched.total_fired()
+            degr += len(stats.degraded)
+        if table_digest(res) != digests[qn]:
+            print(f"chaos: {point} Q{qn} WRONG RESULT", file=sys.stderr)
+            wrong += 1
+    return {"faults_fired": fired, "degradations": degr,
+            "wrong_results": wrong, "failed": failed,
+            "queries": len(list(queries))}
+
+
+def deadline_probe(cat, sf: float, qn: int = 9):
+    """A deadline far below the query's runtime must abort it in a
+    small fraction of that runtime (per-pass/per-vertex checks)."""
+    from repro.core.errors import DeadlineExceeded, QueryContext
+    from repro.core.transfer import make_strategy
+    from repro.relational.executor import Executor
+    from repro.tpch import build_query
+    ex = Executor(cat, make_strategy(STRATEGY))
+    t0 = time.perf_counter()
+    ex.execute(build_query(qn, sf))
+    full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    try:
+        Executor(cat, make_strategy(STRATEGY)).execute(
+            build_query(qn, sf),
+            ctx=QueryContext(timeout=full / 100, tag=f"Q{qn}"))
+        aborted = False
+    except DeadlineExceeded:
+        aborted = True
+    abort = time.perf_counter() - t0
+    return {"query": f"Q{qn}", "full_seconds": full,
+            "abort_seconds": abort, "aborted": aborted,
+            "abort_fraction": abort / full if full else None}
+
+
+def cancel_probe(cat, sf: float, qn: int = 9):
+    """Cross-thread cancel through the serving layer lands as
+    QueryCancelled on the Future."""
+    import threading
+
+    from repro.serve import QueryCancelled, QueryServer, ServeConfig
+    from repro.tpch import build_query
+    with QueryServer(cat, ServeConfig(strategy=STRATEGY,
+                                      workers=1)) as srv:
+        started = threading.Event()
+        orig = srv._execute
+
+        def traced(req):
+            started.set()
+            return orig(req)
+
+        srv._execute = traced
+        fut = srv.submit(build_query(qn, sf), tag=f"Q{qn}")
+        started.wait(30)
+        srv.cancel(fut)
+        try:
+            fut.result(60)
+            cancelled = False
+        except QueryCancelled:
+            cancelled = True
+        except Exception:                            # noqa: BLE001
+            # Future.cancel() won the race before the worker started
+            cancelled = True
+    return {"query": f"Q{qn}", "cancelled": cancelled}
+
+
+def main(sf: float, queries=None):
+    from benchmarks.common import catalog
+    from repro.core.faultinject import FAULT_POINTS
+    from repro.tpch import QUERIES
+    cat = catalog(sf)
+    queries = sorted(QUERIES) if queries is None else sorted(queries)
+    digests = oracle_digests(cat, sf, queries)
+    points = {}
+    for point in FAULT_POINTS:
+        print(f"chaos: {point} over {len(queries)} queries ...",
+              file=sys.stderr)
+        points[point] = chaos_point(cat, sf, point, queries, digests)
+    doc = {"seed": SEED, "strategy": STRATEGY,
+           "queries": [f"Q{qn}" for qn in queries],
+           "points": points,
+           "deadline": deadline_probe(cat, sf),
+           "cancel": cancel_probe(cat, sf)}
+    hdr = (f"{'point':<18} {'fired':>6} {'degraded':>9} "
+           f"{'wrong':>6} {'failed':>7}")
+    print(hdr)
+    for point, r in points.items():
+        print(f"{point:<18} {r['faults_fired']:>6} "
+              f"{r['degradations']:>9} {r['wrong_results']:>6} "
+              f"{r['failed']:>7}")
+    d = doc["deadline"]
+    print(f"deadline: {d['query']} full {d['full_seconds']:.3f}s, "
+          f"aborted in {d['abort_seconds']:.4f}s "
+          f"({100 * d['abort_fraction']:.1f}%)")
+    print(f"cancel:   {doc['cancel']['query']} "
+          f"cancelled={doc['cancel']['cancelled']}")
+    return doc
+
+
+def check(doc) -> int:
+    """Hard assertions shared by --smoke and run.py --check."""
+    ok = True
+
+    def need(cond, msg):
+        nonlocal ok
+        print(("ok   " if cond else "FAIL ") + msg, file=sys.stderr)
+        ok = ok and cond
+
+    for point, r in doc["points"].items():
+        need(r["faults_fired"] > 0, f"{point}: schedule fired")
+        need(r["wrong_results"] == 0, f"{point}: zero wrong results")
+        need(r["failed"] == 0, f"{point}: zero unhandled failures")
+        if point != "cache.deserialize":
+            need(r["degradations"] > 0, f"{point}: ladder engaged")
+        else:
+            need(r["degradations"] > 0,
+                 f"{point}: corruption detected + healed")
+    need(doc["deadline"]["aborted"], "deadline: query aborted")
+    need(doc["deadline"]["abort_fraction"] < 0.5,
+         "deadline: abort well under full runtime")
+    need(doc["cancel"]["cancelled"], "cancel: cross-thread cancel lands")
+    return 0 if ok else 1
+
+
+def smoke(sf: float) -> int:
+    """CI job: small catalog, 5-query subset, hard assertions."""
+    return check(main(sf, queries=SMOKE_QUERIES))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: sf 0.01 subset, assert bit-exact "
+                         "degradation at every fault point")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke(min(args.sf, 0.01)))
+    sys.exit(check(main(args.sf)))

@@ -247,6 +247,15 @@ def run_check(sf: float, baseline_path: str, rel_tol: float = 0.10,
               file=sys.stderr)
         failures.append("serving slot-cache hits")
 
+    # chaos gate: correctness, not timing — every fault point must fire,
+    # degrade (or self-heal), and leave zero wrong results. Runs on the
+    # small catalog regardless of --sf: the gate checks ladder
+    # mechanics, which don't scale with data size.
+    from benchmarks import chaos_bench
+    print("\n===== chaos (gate) =====", file=sys.stderr)
+    if chaos_bench.smoke(0.01) != 0:
+        failures.append("chaos fault-injection suite")
+
     split = q5_transfer_split(sf)
     base_split = baseline.get("q5_transfer_seconds", {})
     if "numpy" in split and "jax" in split:
@@ -286,10 +295,11 @@ def main() -> None:
     if args.check:
         sys.exit(run_check(args.sf, args.json or "BENCH_tpch.json"))
 
-    from benchmarks import (curation_bench, distributed_transfer,
-                            figure2_tpch, figure3_breakdown,
-                            figure4_robustness, kernel_bench,
-                            serving_bench, table1_q5_sizes)
+    from benchmarks import (chaos_bench, curation_bench,
+                            distributed_transfer, figure2_tpch,
+                            figure3_breakdown, figure4_robustness,
+                            kernel_bench, serving_bench,
+                            table1_q5_sizes)
 
     exhibits = {
         "figure2_tpch": lambda: figure2_tpch.main(args.sf),
@@ -303,6 +313,7 @@ def main() -> None:
         "curation_bench": lambda: curation_bench.main(
             max(int(args.sf * 1_000_000), 20_000)),
         "serving": lambda: serving_bench.main(args.sf),
+        "chaos": lambda: chaos_bench.main(args.sf),
     }
     if args.only:
         names = args.only.split(",")
@@ -363,6 +374,8 @@ def main() -> None:
             doc["distributed_join"] = results["distributed_join"]
         if "serving" in results:
             doc["serving"] = results["serving"]
+        if "chaos" in results:
+            doc["chaos"] = results["chaos"]
         tmp = args.json + ".tmp"
         with open(tmp, "w") as f:       # atomic: a crash mid-dump must
             json.dump(doc, f, indent=1, sort_keys=True)

@@ -16,24 +16,105 @@ first element of the key tuple:
 
 Every entry records the set of `Table.version` numbers it was derived
 from; `invalidate_versions` (or `invalidate_all`) is the explicit
-invalidation hook for table replacement. Lookups never validate content
-— the keys are self-certifying (a signature can only be recomputed from
-the same inputs), which is what makes O(1) hits safe.
+invalidation hook for table replacement. The keys are self-certifying
+(a signature can only be recomputed from the same inputs) — that covers
+*which* artifact an entry is, but not whether its bytes are still the
+ones that were stored. Hits therefore **verify on read** (DESIGN.md
+§13): `put` records a content checksum (`content_checksum` — md5 over
+the value's structure, with large arrays sampled head+tail so a hit
+stays O(1) in entry size), and `get` recomputes and compares it. A
+mismatch — bit rot, an in-place mutation bug, or an injected
+``cache.deserialize`` fault — drops the entry, bumps the `corruptions`
+counter, and reports a miss, so a poisoned entry self-heals by
+recompute instead of serving wrong bytes. `verify_on_hit=False` turns
+the guard off for benchmarking the bare lookup.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import threading
 from collections import OrderedDict
 from typing import Dict, Iterable, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core import faultinject
+
+#: arrays at most this big are hashed in full ...
+_FULL_HASH_BYTES = 64 << 10
+#: ... larger ones contribute head + tail samples of this size (plus
+#: dtype/shape), bounding verify cost per hit regardless of entry size
+_SAMPLE_BYTES = 32 << 10
+
+
+def _hash_array(h, a: np.ndarray) -> None:
+    h.update(f"nd:{a.dtype.str}:{a.shape}".encode())
+    a = np.ascontiguousarray(a)
+    if a.nbytes <= _FULL_HASH_BYTES:
+        h.update(a.tobytes())
+    else:
+        flat = a.reshape(-1).view(np.uint8)
+        h.update(flat[:_SAMPLE_BYTES].tobytes())
+        h.update(flat[-_SAMPLE_BYTES:].tobytes())
+
+
+def _hash_value(h, v) -> None:
+    """Structural walk over the artifact kinds the cache stores: bloom
+    word/range arrays, slot tuples of (Table, key dict), TransferStats
+    snapshots. Dataclasses hash their declared fields only (lazy caches
+    like `Column._vrange` appear after `put` and must not flip the
+    checksum); dict items hash in sorted key order."""
+    if v is None:
+        h.update(b"\x00N")
+    elif isinstance(v, np.ndarray):
+        _hash_array(h, v)
+    elif isinstance(v, (bool, int, float, str, bytes)):
+        h.update(f"{type(v).__name__}:{v!r}".encode())
+    elif isinstance(v, (tuple, list)):
+        h.update(f"seq:{len(v)}".encode())
+        for item in v:
+            _hash_value(h, item)
+    elif isinstance(v, (dict,)):
+        h.update(f"map:{len(v)}".encode())
+        for k in sorted(v, key=repr):
+            h.update(repr(k).encode())
+            _hash_value(h, v[k])
+    elif isinstance(v, (set, frozenset)):
+        h.update(f"set:{len(v)}".encode())
+        for item in sorted(v, key=repr):
+            h.update(repr(item).encode())
+    elif dataclasses.is_dataclass(v):
+        h.update(f"dc:{type(v).__name__}".encode())
+        for f in dataclasses.fields(v):
+            h.update(f.name.encode())
+            _hash_value(h, getattr(v, f.name))
+    elif hasattr(v, "columns") and isinstance(v.columns, dict):
+        # Table (duck-typed: core must not import relational)
+        h.update(f"tbl:{type(v).__name__}:{getattr(v, 'name', '')}"
+                 .encode())
+        _hash_value(h, v.columns)
+    else:
+        h.update(f"obj:{type(v).__name__}:{v!r}".encode())
+
+
+def content_checksum(value) -> str:
+    """Sampled-md5 content digest of a cache value (hex)."""
+    h = hashlib.md5()
+    _hash_value(h, value)
+    return h.hexdigest()
 
 
 class ArtifactCache:
     """Byte-bounded LRU over provenance-keyed transfer artifacts."""
 
-    def __init__(self, max_bytes: int = 256 << 20):
+    def __init__(self, max_bytes: int = 256 << 20,
+                 verify_on_hit: bool = True):
         self.max_bytes = int(max_bytes)
+        self.verify_on_hit = verify_on_hit
         self._lock = threading.Lock()
-        self._entries: "OrderedDict[tuple, Tuple[object, int, frozenset]]" \
+        self._entries: \
+            "OrderedDict[tuple, Tuple[object, int, frozenset, object]]" \
             = OrderedDict()
         self._bytes = 0
         self._by_version: Dict[int, Set[tuple]] = {}
@@ -42,6 +123,7 @@ class ArtifactCache:
         self._puts: Dict[str, int] = {}
         self._evictions = 0
         self._invalidated = 0
+        self._corruptions = 0
 
     # -- core ----------------------------------------------------------
     def get(self, key: tuple):
@@ -52,8 +134,30 @@ class ArtifactCache:
                 self._misses[kind] = self._misses.get(kind, 0) + 1
                 return None
             self._entries.move_to_end(key)
+        value, _, _, stored = ent
+        if self.verify_on_hit:
+            # outside the lock: verify cost must not serialize
+            # concurrent warm hits across worker threads
+            try:
+                faultinject.fire("cache.deserialize")
+                ok = stored is None or content_checksum(value) == stored
+            except faultinject.InjectedFault:
+                ok = False
+            if not ok:
+                # self-heal: drop the poisoned entry (unless a racing
+                # put already replaced it) and report a miss — the
+                # caller recomputes and re-stores good bytes
+                with self._lock:
+                    if self._entries.get(key) is ent:
+                        self._entries.pop(key)
+                        self._bytes -= ent[1]
+                        self._unindex(key, ent[2])
+                    self._corruptions += 1
+                    self._misses[kind] = self._misses.get(kind, 0) + 1
+                return None
+        with self._lock:
             self._hits[kind] = self._hits.get(kind, 0) + 1
-            return ent[0]
+        return value
 
     def put(self, key: tuple, value, nbytes: int,
             versions: Iterable[int] = ()) -> None:
@@ -62,18 +166,19 @@ class ArtifactCache:
         nbytes = int(nbytes)
         if nbytes > self.max_bytes:
             return                       # would evict everything else
+        checksum = content_checksum(value) if self.verify_on_hit else None
         with self._lock:
             old = self._entries.pop(key, None)
             if old is not None:
                 self._bytes -= old[1]
                 self._unindex(key, old[2])
-            self._entries[key] = (value, nbytes, versions)
+            self._entries[key] = (value, nbytes, versions, checksum)
             self._bytes += nbytes
             for v in versions:
                 self._by_version.setdefault(v, set()).add(key)
             self._puts[kind] = self._puts.get(kind, 0) + 1
             while self._bytes > self.max_bytes and self._entries:
-                k, (_, nb, vers) = self._entries.popitem(last=False)
+                k, (_, nb, vers, _) = self._entries.popitem(last=False)
                 self._bytes -= nb
                 self._unindex(k, vers)
                 self._evictions += 1
@@ -130,6 +235,11 @@ class ArtifactCache:
                 return sum(self._hits.values())
             return self._hits.get(kind, 0)
 
+    @property
+    def corruptions(self) -> int:
+        """Entries dropped by verify-on-hit (each healed by recompute)."""
+        return self._corruptions
+
     def snapshot(self) -> dict:
         with self._lock:
             kinds = sorted(set(self._hits) | set(self._misses)
@@ -144,4 +254,5 @@ class ArtifactCache:
             return {"entries": len(self._entries), "bytes": self._bytes,
                     "max_bytes": self.max_bytes,
                     "evictions": self._evictions,
-                    "invalidated": self._invalidated, "kinds": per}
+                    "invalidated": self._invalidated,
+                    "corruptions": self._corruptions, "kinds": per}

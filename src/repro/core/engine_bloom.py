@@ -53,7 +53,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bloom, hashing
+from repro.core import bloom, faultinject, hashing
 from repro.core.bloom import (
     BLOCK_BITS, DEFAULT_BITS_PER_KEY, DEFAULT_K, LANES, BloomFilter,
     _bucket, _pad, blocks_for,
@@ -467,6 +467,7 @@ class _NumpyScan(VertexScan):
         if not incoming:
             self.live_after = []
             return 0
+        faultinject.fire("engine.probe")
         if self._alive is None and not self._is_full():
             self._alive = np.flatnonzero(self._mask0)
         packed = pack_filters([w for w, _ in incoming], self._k)
@@ -533,6 +534,7 @@ class _NumpyScan(VertexScan):
         return int(np.count_nonzero(self._mask0))
 
     def build(self, ek, nblocks, valid=None):
+        faultinject.fire("engine.build")
         if self._alive is None and not self._is_full():
             self._alive = np.flatnonzero(self._mask0)
         alive = self._alive
@@ -584,6 +586,7 @@ class _DeviceScan(VertexScan):
         if not incoming:
             self.live_after = []
             return 0
+        faultinject.fire("engine.probe")
         rows = 0
         counts: list = []
         self.live_after = counts
@@ -677,6 +680,7 @@ class _DeviceScan(VertexScan):
         return self._count
 
     def build(self, ek, nblocks, valid=None):
+        faultinject.fire("engine.build")
         if self._e.host_build:
             idx = self._host_idx()
             if valid is not None:

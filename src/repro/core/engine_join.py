@@ -48,6 +48,8 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, \
 
 import numpy as np
 
+from repro.core import faultinject
+
 if TYPE_CHECKING:   # type-only: relational imports this module's engines
     from repro.relational.table import Table
 
@@ -290,6 +292,7 @@ class NumpyJoinEngine(JoinEngine):
         self.radix_min = radix_min
 
     def join_indices(self, build_key, probe_key, how="inner"):
+        faultinject.fire("join.indices")
         if len(build_key) >= self.radix_min and len(probe_key):
             return radix_join_indices(build_key, probe_key, how)
         return sorted_join_indices(build_key, probe_key, how)
@@ -317,6 +320,7 @@ class _HashMapJoinEngine(JoinEngine):
         raise NotImplementedError
 
     def join_indices(self, build_key, probe_key, how="inner"):
+        faultinject.fire("join.indices")
         nb = len(build_key)
         if (nb == 0 or len(probe_key) == 0
                 or nb > self.device_max_build):
@@ -600,6 +604,21 @@ class JoinCursor:
                           probe.name)
 
     # -- materialization ----------------------------------------------
+    def gather_bytes(self, names: Optional[Sequence[str]] = None) -> int:
+        """Upper estimate of the bytes `materialize(names)` will gather
+        (rows × row bytes over the columns that actually need a
+        gather), computable *before* any allocation — the executor's
+        pre-gather memory-budget guard reads this (DESIGN.md §13)."""
+        keep = None if names is None else set(names)
+        total = 0
+        for n, sid in self.cols:
+            if keep is not None and n not in keep:
+                continue
+            if self.sel[sid] is None:
+                continue
+            total += self.nrows * self.slots[sid].table[n].data.itemsize
+        return total
+
     def materialize(self, names: Optional[Sequence[str]] = None
                     ) -> Tuple["Table", int]:
         """Gather payload columns once (all of them, or just `names` for
@@ -607,6 +626,7 @@ class JoinCursor:
         (table, gathered_bytes) — the join phase's materialization
         traffic."""
         from repro.relational.table import Table
+        faultinject.fire("gather.payload")
         keep = None if names is None else set(names)
         cols = {}
         nbytes = 0

@@ -53,6 +53,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import faultinject
 from repro.core.engine_join import (
     JoinEngine, _partition_ids, assemble_partitioned_join, get_join_engine,
     join_partition,
@@ -139,11 +140,13 @@ class SimulatedExchange:
         """blocks[s][t] = shard s's rows bound for shard t; returns
         received[t] = concat over sources s in shard order (global row
         order, since shards own ascending contiguous ranges)."""
+        faultinject.fire("exchange.send")
         p = self.nshards
         return [np.concatenate([blocks[s][t] for s in range(p)])
                 for t in range(p)]
 
     def all_gather(self, shards: List[np.ndarray]) -> np.ndarray:
+        faultinject.fire("exchange.send")
         return np.concatenate(shards)
 
 
@@ -194,6 +197,7 @@ class MeshExchange:
         return jax.device_put(arr, self._sharding)
 
     def all_to_all(self, blocks: List[List[np.ndarray]]) -> List[np.ndarray]:
+        faultinject.fire("exchange.send")
         p = self._p
         width = blocks[0][0].shape[1]
         cnt = np.array([[len(blocks[s][t]) for t in range(p)]
@@ -209,6 +213,7 @@ class MeshExchange:
                 for t in range(p)]
 
     def all_gather(self, shards: List[np.ndarray]) -> np.ndarray:
+        faultinject.fire("exchange.send")
         p = self._p
         width = shards[0].shape[1]
         cnt = [len(s) for s in shards]
@@ -376,6 +381,7 @@ class DistributedJoinEngine(JoinEngine):
     def __init__(self, nshards: Optional[int] = None,
                  local_backend: str = "numpy",
                  device: Optional[bool] = None, mesh=None):
+        self.ctx = None          # per-query QueryContext (set on forks)
         self.local = get_join_engine(local_backend)
         if device is None:
             # auto: device-backed only when the requested shard count
@@ -398,6 +404,7 @@ class DistributedJoinEngine(JoinEngine):
         with a fresh stats sink — one per executor, so per-query byte
         accounting never mixes across executors or subqueries."""
         eng = object.__new__(DistributedJoinEngine)
+        eng.ctx = None
         eng.local = self.local
         eng.exchange = self.exchange
         eng.nshards = self.nshards
@@ -416,6 +423,9 @@ class DistributedJoinEngine(JoinEngine):
         halves through the exchange; invalid rows are dropped shard-
         locally on the receiving side. All-valid joins are bit-and-byte
         identical to the pre-validity wire format."""
+        ctx = getattr(self, "ctx", None)
+        if ctx is not None:
+            ctx.check()
         if build_valid is not None and bool(build_valid.all()):
             build_valid = None
         if probe_valid is not None and bool(probe_valid.all()):

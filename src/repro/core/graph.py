@@ -268,8 +268,12 @@ class Strategy:
     name = "base"
     uses_per_join_filter = False
 
-    def prefilter(self, vertices: Dict[int, Vertex], edges: List[Edge]
-                  ) -> TransferStats:
+    def prefilter(self, vertices: Dict[int, Vertex], edges: List[Edge],
+                  ctx=None) -> TransferStats:
+        """`ctx` is an optional `repro.core.errors.QueryContext`;
+        strategies that do real transfer work call `ctx.check()` per
+        pass and per vertex so a deadline or cancellation aborts within
+        one pass (DESIGN.md §13)."""
         return TransferStats(strategy=self.name)
 
     def cache_signature(self) -> Optional[tuple]:

@@ -58,7 +58,7 @@ class BloomJoin(Strategy):
         self.engine: BloomEngine = get_engine(backend, k=k,
                                               interpret=interpret)
 
-    def prefilter(self, vertices, edges):
+    def prefilter(self, vertices, edges, ctx=None):
         # no transfer phase, but record which engine the per-join
         # filters below will run on
         return TransferStats(strategy=self.name,
@@ -152,7 +152,8 @@ class PredTrans(Strategy):
             ("bloom", fsig), (host, mm), nbytes=host.nbytes + 32,
             versions=v.dep_versions)
 
-    def prefilter(self, vertices, edges):
+    def prefilter(self, vertices, edges, ctx=None):
+        self._ctx = ctx
         stats = TransferStats(strategy=self.name,
                               backend=self.engine.backend)
         # initial live counts, shared with the adaptive scheduler's
@@ -184,6 +185,8 @@ class PredTrans(Strategy):
 
     def _run_passes(self, order, rank, vertices, adj, stats):
         for p in range(self.passes):
+            if self._ctx is not None:
+                self._ctx.check("transfer")
             forward = (p % 2 == 0)
             seq = order if forward else order[::-1]
             self._one_pass(seq, rank, forward, vertices, adj, stats, p)
@@ -216,6 +219,8 @@ class PredTrans(Strategy):
             return ok_dir and e.allows(src, dst)
 
         for lid in seq:
+            if self._ctx is not None:
+                self._ctx.check()       # per-vertex cancellation point
             v = vertices[lid]
             scan = self.engine.begin(v.mask)
             # 1. apply all incoming filters — one fused multi-filter
@@ -501,6 +506,8 @@ class AdaptivePredTrans(PredTrans):
         self._lives: Dict[int, int] = dict(self._live0)
         before = sum(self._lives.values())
         for p in range(self.passes):
+            if self._ctx is not None:
+                self._ctx.check("transfer")
             forward = (p % 2 == 0)
             seq = order if forward else order[::-1]
             self._one_pass(seq, rank, forward, vertices, adj, stats, p)
@@ -686,6 +693,8 @@ class AdaptivePredTrans(PredTrans):
         surv: Dict[int, float] = {}
 
         for lid in seq:
+            if self._ctx is not None:
+                self._ctx.check()       # per-vertex cancellation point
             v = vertices[lid]
             scan = self.engine.begin(v.mask)
 
@@ -863,7 +872,7 @@ class Yannakakis(Strategy):
         # seed-chosen root; semi-joins are exact, no filter params
         return ("yannakakis", self.root_seed)
 
-    def prefilter(self, vertices, edges):
+    def prefilter(self, vertices, edges, ctx=None):
         stats = TransferStats(strategy=self.name)
         before = {lid: v.live for lid, v in vertices.items()}
         t0 = time.perf_counter()
@@ -896,6 +905,8 @@ class Yannakakis(Strategy):
 
         def semi(dst: int, src: int, e: Edge):
             """dst.mask &= dst ⋉ src (precise)."""
+            if ctx is not None:
+                ctx.check("transfer")   # per-semi-join cancellation
             if not e.allows(src, dst):
                 return
             vd, vs = vertices[dst], vertices[src]

@@ -6,6 +6,17 @@ requeue); here the same logic is a process-level loop so every behaviour
 is testable: a `Preempted` (or any crash and rerun) resumes from the last
 checkpoint — onto a *different mesh if the cluster shrank or grew*
 (CheckpointManager resharding restore).
+
+Relation to query-level fault tolerance (DESIGN.md §13): this module
+covers the *training* loop, where the unit of recovery is a checkpointed
+step and the response to a fault is restart-with-resume. The *query*
+pipeline's counterpart lives in `repro.core.errors` (typed taxonomy +
+`QueryContext` deadlines/cancellation) and the executor's degradation
+ladder — there the unit of recovery is a whole query and the response is
+a retry on a safer backend rung, because queries are stateless and
+bit-exact across rungs where training steps are not. The shared error
+taxonomy is re-exported here so fault-handling code paths on either side
+can catch one family of types.
 """
 from __future__ import annotations
 
@@ -17,6 +28,10 @@ from typing import Any, Callable, Dict, Optional
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.core.errors import (                          # noqa: F401
+    BackendError, CacheCorruption, DeadlineExceeded, QueryCancelled,
+    QueryContext, QueryError, ResourceExhausted,
+)
 
 
 class Preempted(Exception):

@@ -29,6 +29,9 @@ import numpy as np
 
 from repro.core import provenance
 from repro.core.engine_join import JoinCursor, Slot, get_join_engine
+from repro.core.errors import (
+    DeadlineExceeded, QueryCancelled, QueryContext, ResourceExhausted,
+)
 from repro.core.graph import (
     Edge, NoPredTrans, Strategy, TransferStats, Vertex,
 )
@@ -68,6 +71,10 @@ class ExecStats:
     # (repro.core.engine_join_dist.DistStats)
     dist: Optional[object] = None
     subqueries: List["ExecStats"] = dataclasses.field(default_factory=list)
+    # degradation-ladder record (DESIGN.md §13): one dict per fallback
+    # taken before this result was produced — {"from", "to", "phase",
+    # "error", "detail"}. Empty = the query ran on its requested config.
+    degraded: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:
@@ -100,7 +107,9 @@ class Executor:
                  dist_shards: Optional[int] = None,
                  dist_device: Optional[bool] = None,
                  plan_cache=None,
-                 artifact_cache=None):
+                 artifact_cache=None,
+                 degrade: bool = False,
+                 mem_budget_bytes: Optional[int] = None):
         """`engine="single"` (default) runs the late-materialized join
         runtime on one host; `engine="distributed"` routes every join
         through `repro.core.engine_join_dist` — row-sharded cursors,
@@ -114,7 +123,19 @@ class Executor:
         `artifact_cache` (`repro.core.artifact_cache.ArtifactCache`)
         replays whole post-transfer slot states on exact repeats
         (DESIGN.md §12). Both are shared, thread-safe, and optional —
-        the serving layer (`repro.serve`) wires them in."""
+        the serving layer (`repro.serve`) wires them in.
+
+        `degrade=True` arms the degradation ladder (DESIGN.md §13): a
+        backend failure retries the query on the next-safer rung
+        (distributed → late-numpy → eager oracle; pred-trans-adaptive →
+        pred-trans → no-prefilter), recorded in `ExecStats.degraded`.
+        Off by default so engine-vs-oracle tests can never silently
+        pass via a fallback; the serving layer turns it on.
+
+        `mem_budget_bytes` caps the join phase's payload-gather bytes
+        per query, estimated *before* allocation — exceeding it raises
+        `ResourceExhausted` (which the ladder answers by switching
+        materialization mode) instead of OOMing."""
         if engine not in ("single", "distributed"):
             raise ValueError(f"unknown engine {engine!r}; "
                              "choose 'single' or 'distributed'")
@@ -127,6 +148,10 @@ class Executor:
         self.dist_device = dist_device
         self.plan_cache = plan_cache
         self.artifact_cache = artifact_cache
+        self.degrade = degrade
+        self.mem_budget_bytes = mem_budget_bytes
+        self._ctx: Optional[QueryContext] = None
+        self._phase = "scan"
         if engine == "distributed":
             from repro.core.engine_join_dist import get_distributed_engine
             self.join_engine = get_distributed_engine(
@@ -135,6 +160,9 @@ class Executor:
             self.join_engine = get_join_engine(join_backend)
 
     def _sub_executor(self) -> "Executor":
+        # degrade stays off: a subquery failure propagates to the outer
+        # query, whose ladder retries the *whole* query on a safer rung
+        # (partial per-subquery fallbacks would mix rungs in one result)
         return Executor(self.catalog, self.strategy,
                         join_backend=self.join_backend,
                         late_materialize=self.late_materialize,
@@ -142,15 +170,129 @@ class Executor:
                         dist_shards=self.dist_shards,
                         dist_device=self.dist_device,
                         plan_cache=self.plan_cache,
-                        artifact_cache=self.artifact_cache)
+                        artifact_cache=self.artifact_cache,
+                        mem_budget_bytes=self.mem_budget_bytes)
+
+    def _clone(self, **overrides) -> "Executor":
+        """This executor's config with `overrides` applied — the ladder
+        builds each fallback rung this way (degrade stays off on the
+        clone: the loop in `_execute_degrading` owns the retries)."""
+        kw = dict(strategy=self.strategy,
+                  join_backend=self.join_backend,
+                  late_materialize=self.late_materialize,
+                  engine=self.engine,
+                  dist_shards=self.dist_shards,
+                  dist_device=self.dist_device,
+                  plan_cache=self.plan_cache,
+                  artifact_cache=self.artifact_cache,
+                  mem_budget_bytes=self.mem_budget_bytes)
+        kw.update(overrides)
+        return Executor(self.catalog, **kw)
+
+    # -- degradation ladder (DESIGN.md §13) -----------------------------
+    #: strategy rungs, each mapping to its next-safer neighbor; the
+    #: terminal rung (no-pred-trans) does no engine-backed transfer work
+    STRATEGY_LADDER = {
+        "pred-trans-adaptive": "pred-trans",
+        "pred-trans-opt": "pred-trans",
+        "pred-trans": "no-pred-trans",
+        "bloom-join": "no-pred-trans",
+        "yannakakis": "no-pred-trans",
+    }
+
+    def _rung_desc(self) -> str:
+        mode = "late" if self.late_materialize else "eager"
+        return (f"{self.engine}/{mode}/{self.join_backend}"
+                f"+{self.strategy.name}")
+
+    def _degrade_strategy(self) -> Optional["Executor"]:
+        nxt = self.STRATEGY_LADDER.get(self.strategy.name)
+        if nxt is None:
+            return None
+        from repro.core.transfer import BACKEND_AWARE, make_strategy
+        kw = {"backend": "numpy"} if nxt in BACKEND_AWARE else {}
+        return self._clone(strategy=make_strategy(nxt, **kw))
+
+    def _degrade_engine(self) -> Optional["Executor"]:
+        if self.engine == "distributed":
+            return self._clone(engine="single", join_backend="numpy")
+        if self.late_materialize and self.join_backend != "numpy":
+            return self._clone(join_backend="numpy")
+        if self.late_materialize:
+            return self._clone(late_materialize=False,
+                               join_backend="numpy")
+        return None
+
+    def _next_rung(self, err: Exception) -> Optional["Executor"]:
+        """Classify a failure to a ladder move. Injected/engine faults
+        carry a `point`; real failures fall back to the phase the
+        executor was in. Transfer-side failures step the strategy rung
+        first; join/engine-side failures step the engine rung, falling
+        over to the strategy ladder once the engine rungs are spent."""
+        if isinstance(err, ResourceExhausted):
+            # the memory guard fires on payload-gather estimates; the
+            # only rung that changes gather volume is the
+            # materialization mode, so this move is its own ladder
+            if not self.late_materialize:
+                return self._clone(late_materialize=True,
+                                   join_backend="numpy")
+            return None
+        point = getattr(err, "point", None)
+        transfer_side = (point in ("engine.probe", "engine.build")
+                         or (point is None
+                             and self._phase == "transfer"))
+        if transfer_side:
+            return self._degrade_strategy() or self._degrade_engine()
+        return self._degrade_engine() or self._degrade_strategy()
 
     # ------------------------------------------------------------------
-    def execute(self, plan: PlanNode) -> Tuple[Table, ExecStats]:
+    def execute(self, plan: PlanNode,
+                ctx: Optional[QueryContext] = None
+                ) -> Tuple[Table, ExecStats]:
+        if not self.degrade:
+            return self._execute_once(plan, ctx)
+        return self._execute_degrading(plan, ctx)
+
+    def _execute_degrading(self, plan: PlanNode,
+                           ctx: Optional[QueryContext]
+                           ) -> Tuple[Table, ExecStats]:
+        """Run the query, stepping down the ladder on backend failure.
+        Cooperative aborts (deadline/cancel) always propagate — the
+        client asked for the abort, a cheaper rung is not an answer."""
+        degraded: List[dict] = []
+        cur = self
+        for _ in range(8):              # > total rung count, by margin
+            try:
+                result, stats = cur._execute_once(plan, ctx)
+                stats.degraded = degraded
+                return result, stats
+            except (DeadlineExceeded, QueryCancelled):
+                raise
+            except Exception as e:
+                nxt = cur._next_rung(e)
+                if nxt is None:
+                    raise
+                degraded.append({
+                    "from": cur._rung_desc(), "to": nxt._rung_desc(),
+                    "phase": getattr(e, "point", None) or cur._phase,
+                    "error": type(e).__name__,
+                    "detail": str(e)[:160]})
+                cur = nxt
+        raise RuntimeError("degradation ladder did not terminate")
+
+    def _execute_once(self, plan: PlanNode,
+                      ctx: Optional[QueryContext] = None
+                      ) -> Tuple[Table, ExecStats]:
+        self._ctx = ctx
+        self._phase = "scan"
+        if ctx is not None:
+            ctx.check("scan")
         stats = ExecStats(strategy=self.strategy.name)
         if self.engine == "distributed":
             # fresh fork per execute(): a prior call's returned stats
             # object must keep describing that call
             self.join_engine = self.join_engine.fork()
+            self.join_engine.ctx = ctx   # forks are per-query: safe
             stats.dist = self.join_engine.stats
 
         # -- cache identity: canonical plan fingerprint (DESIGN §12) ----
@@ -184,6 +326,9 @@ class Executor:
                 stats.phase_seconds["scan"] = time.perf_counter() - t0
                 stats.phase_seconds["transfer"] = 0.0
                 t0 = time.perf_counter()
+                self._phase = "join"
+                if ctx is not None:
+                    ctx.check("join")
                 result = self._exec(plan, slots, stats)
                 stats.phase_seconds["join"] = time.perf_counter() - t0
                 stats.result_rows = len(result)
@@ -201,6 +346,9 @@ class Executor:
 
         # -- phase 1: transfer -----------------------------------------
         t0 = time.perf_counter()
+        self._phase = "transfer"
+        if ctx is not None:
+            ctx.check("transfer")
         if info is not None:
             # plan-cache hit: re-bind the edge templates and join
             # depths to this plan's fresh leaf ids (leaves() order is
@@ -222,7 +370,8 @@ class Executor:
                                 for e in edges),
                     depths=tuple(vertices[leaf.leaf_id].join_depth
                                  for leaf in leaves)))
-        stats.transfer = self.strategy.prefilter(vertices, edges)
+        stats.transfer = self.strategy.prefilter(vertices, edges,
+                                                 ctx=ctx)
         # compact each vertex once; the transfer phase's composite keys
         # are compacted alongside and seed the join runtime's key cache
         slots: Dict[int, Slot] = {}
@@ -245,6 +394,9 @@ class Executor:
 
         # -- phase 2: join ---------------------------------------------
         t0 = time.perf_counter()
+        self._phase = "join"
+        if ctx is not None:
+            ctx.check("join")
         result = self._exec(plan, slots, stats)
         stats.phase_seconds["join"] = time.perf_counter() - t0
         stats.result_rows = len(result)
@@ -289,7 +441,7 @@ class Executor:
                       needed: Optional[set] = None) -> Vertex:
         if isinstance(leaf, SubqueryScan):
             sub = self._sub_executor()
-            table, sub_stats = sub.execute(leaf.plan)
+            table, sub_stats = sub.execute(leaf.plan, ctx=self._ctx)
             stats.subqueries.append(sub_stats)
             table = Table(table.columns, leaf.alias)
             # a derived leaf's row set is determined by (subplan shape,
@@ -351,14 +503,32 @@ class Executor:
             out = self._materialize(out, stats)
         return out
 
+    def _mem_budget(self) -> Optional[int]:
+        ctx = self._ctx
+        if ctx is not None and ctx.mem_budget_bytes is not None:
+            return ctx.mem_budget_bytes
+        return self.mem_budget_bytes
+
     def _materialize(self, cur: JoinCursor, stats: ExecStats,
                      names: Optional[set] = None) -> Table:
+        avail = None
         if names is not None:
             avail = [n for n, _ in cur.cols if n in names]
             if not avail and cur.cols:
                 # a value-free operator (e.g. bare count(*)) still needs
                 # the row count, which a zero-column Table loses
                 avail = [cur.cols[0][0]]
+        budget = self._mem_budget()
+        if budget is not None:
+            # pre-gather guard: estimate rows × row bytes before any
+            # allocation; exceeding the budget degrades instead of OOMs
+            est = stats.join_materialized_bytes + cur.gather_bytes(avail)
+            if est > budget:
+                raise ResourceExhausted(
+                    f"payload gather needs ~{est} bytes "
+                    f"(budget {budget})", phase="join",
+                    tag=self._ctx.tag if self._ctx else "")
+        if avail is not None:
             table, nbytes = cur.materialize(avail)
         else:
             table, nbytes = cur.materialize()
@@ -378,6 +548,8 @@ class Executor:
             return JoinCursor.from_slot(slots[node.leaf_id])
 
         if isinstance(node, Join):
+            if self._ctx is not None:
+                self._ctx.check("join")  # per-join cancellation point
             if not self.late_materialize:
                 return self._exec_join_eager(node, slots, stats)
             probe = self._as_cursor(self._exec_node(node.left, slots,
@@ -438,7 +610,7 @@ class Executor:
         if isinstance(node, Bind):
             t = self._exec(node.child, slots, stats)
             sub = self._sub_executor()
-            sub_t, sub_stats = sub.execute(node.subplan)
+            sub_t, sub_stats = sub.execute(node.subplan, ctx=self._ctx)
             stats.subqueries.append(sub_stats)
             assert len(sub_t) == 1, "Bind subplan must yield one row"
             c = sub_t[node.sub_col]
@@ -499,6 +671,16 @@ class Executor:
         out = ops.hash_join(build, probe, node.right_on, node.left_on,
                             how=node.how)
         stats.join_materialized_bytes += out.nbytes()
+        budget = self._mem_budget()
+        if budget is not None and stats.join_materialized_bytes > budget:
+            # eager joins materialize whole intermediates; over budget
+            # the ladder's answer is the late-materialized runtime,
+            # which gathers payload once instead of per join
+            raise ResourceExhausted(
+                f"eager join materialized "
+                f"{stats.join_materialized_bytes} bytes "
+                f"(budget {budget})", phase="join",
+                tag=self._ctx.tag if self._ctx else "")
         stats.joins.append(JoinStat(node.how, len(build), len(probe),
                                     pr_pre, len(out)))
         if node.extra is not None:

@@ -1,7 +1,13 @@
-"""Concurrent query serving with cross-query caching (DESIGN.md §12)."""
+"""Concurrent query serving with cross-query caching (DESIGN.md §12)
+and fault tolerance — deadlines, cooperative cancellation, degradation
+ladder (DESIGN.md §13)."""
+from repro.core.errors import (
+    DeadlineExceeded, QueryCancelled, QueryContext, ResourceExhausted,
+)
 from repro.serve.server import (
     QueryServer, ServeConfig, ServerMetrics, ServerSaturated, Session,
 )
 
 __all__ = ["QueryServer", "ServeConfig", "ServerMetrics",
-           "ServerSaturated", "Session"]
+           "ServerSaturated", "Session", "QueryContext",
+           "DeadlineExceeded", "QueryCancelled", "ResourceExhausted"]

@@ -38,6 +38,9 @@ from typing import Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from repro.core.artifact_cache import ArtifactCache
+from repro.core.errors import (
+    DeadlineExceeded, QueryCancelled, QueryContext,
+)
 from repro.core.transfer import BACKEND_AWARE, STRATEGIES, make_strategy
 from repro.relational.executor import ExecStats, Executor
 from repro.relational.plan import PlanNode
@@ -68,6 +71,14 @@ class ServeConfig:
     admission: str = "block"            # "block" | "reject"
     plan_cache_entries: int = 512
     artifact_cache_bytes: int = 256 << 20
+    # fault tolerance (DESIGN.md §13): serving degrades by default — a
+    # backend failure retries the query on the next-safer rung instead
+    # of erroring the Future; per-query `submit(timeout=...)` overrides
+    # `default_timeout`; `mem_budget_bytes` caps each query's payload
+    # gather (None = unbounded)
+    degrade: bool = True
+    default_timeout: Optional[float] = None
+    mem_budget_bytes: Optional[int] = None
 
     def __post_init__(self):
         if self.admission not in ("block", "reject"):
@@ -89,6 +100,15 @@ class ServerMetrics:
         self.failed = 0
         self.rejected = 0
         self.warm_replays = 0           # queries served from slot state
+        # fault-tolerance counters (DESIGN.md §13). failed = every query
+        # resolving its Future with an exception; timeouts/cancellations
+        # split that by cause. degradations counts *successful* queries
+        # that took at least one ladder fallback — they are completed,
+        # not failed.
+        self.errors = 0
+        self.timeouts = 0
+        self.cancellations = 0
+        self.degradations = 0
 
     def record_submit(self) -> None:
         with self._lock:
@@ -99,12 +119,21 @@ class ServerMetrics:
             self.rejected += 1
 
     def record_done(self, tag: str, seconds: float,
-                    stats: Optional[ExecStats]) -> None:
+                    stats: Optional[ExecStats],
+                    error: Optional[BaseException] = None) -> None:
         with self._lock:
             if stats is None:
                 self.failed += 1
+                if isinstance(error, DeadlineExceeded):
+                    self.timeouts += 1
+                elif isinstance(error, QueryCancelled):
+                    self.cancellations += 1
+                else:
+                    self.errors += 1
                 return
             self.completed += 1
+            if stats.degraded:
+                self.degradations += 1
             self._lat.setdefault(tag, []).append(seconds)
             if stats.transfer is not None and stats.transfer.from_cache:
                 self.warm_replays += 1
@@ -123,7 +152,10 @@ class ServerMetrics:
             out = {"submitted": self.submitted,
                    "completed": self.completed,
                    "failed": self.failed, "rejected": self.rejected,
-                   "warm_replays": self.warm_replays}
+                   "warm_replays": self.warm_replays,
+                   "errors": self.errors, "timeouts": self.timeouts,
+                   "cancellations": self.cancellations,
+                   "degradations": self.degradations}
             if every:
                 out["latency"] = self._quantiles(every)
                 out["per_tag"] = {t: self._quantiles(lat)
@@ -132,14 +164,16 @@ class ServerMetrics:
 
 
 class _Request:
-    __slots__ = ("plan", "strategy", "strategy_kw", "tag", "future")
+    __slots__ = ("plan", "strategy", "strategy_kw", "tag", "future",
+                 "ctx")
 
-    def __init__(self, plan, strategy, strategy_kw, tag, future):
+    def __init__(self, plan, strategy, strategy_kw, tag, future, ctx):
         self.plan = plan
         self.strategy = strategy
         self.strategy_kw = strategy_kw
         self.tag = tag
         self.future = future
+        self.ctx = ctx
 
 
 class QueryServer:
@@ -193,8 +227,10 @@ class QueryServer:
                       late_materialize=self.config.late_materialize,
                       engine=self.config.engine,
                       plan_cache=self.plan_cache,
-                      artifact_cache=self.artifact_cache)
-        return ex.execute(req.plan)
+                      artifact_cache=self.artifact_cache,
+                      degrade=self.config.degrade,
+                      mem_budget_bytes=self.config.mem_budget_bytes)
+        return ex.execute(req.plan, ctx=req.ctx)
 
     # -- worker loop -------------------------------------------------------
     def _worker(self) -> None:
@@ -211,8 +247,11 @@ class QueryServer:
             try:
                 result = self._execute(req)
             except BaseException as e:   # noqa: BLE001 — relayed to caller
+                # one failing query errors its own Future; the worker
+                # thread survives to serve the next request
                 self.metrics.record_done(req.tag,
-                                         time.perf_counter() - t0, None)
+                                         time.perf_counter() - t0, None,
+                                         error=e)
                 req.future.set_exception(e)
             else:
                 self.metrics.record_done(req.tag,
@@ -224,19 +263,31 @@ class QueryServer:
 
     # -- submission --------------------------------------------------------
     def submit(self, plan: PlanNode, strategy: Optional[str] = None,
-               tag: str = "", **strategy_kw
-               ) -> "Future[Tuple[Table, ExecStats]]":
+               tag: str = "", timeout: Optional[float] = None,
+               **strategy_kw) -> "Future[Tuple[Table, ExecStats]]":
         """Admit one query; returns a `concurrent.futures.Future`
         resolving to (result table, ExecStats). Admission follows
         `config.admission`: "block" applies backpressure, "reject"
-        raises `ServerSaturated` when the queue is full."""
+        raises `ServerSaturated` when the queue is full.
+
+        `timeout` (seconds, overriding `config.default_timeout`) starts
+        at admission; a query past its deadline aborts at the next
+        cancellation point with `DeadlineExceeded` on the Future. The
+        returned Future carries its `QueryContext` as `query_context`;
+        `QueryServer.cancel(fut)` is the cooperative cancel API."""
         if self._closed:
             raise RuntimeError("server is closed")
         name = strategy or self.config.strategy
         kw = dict(self.config.strategy_kw) if strategy is None else {}
         kw.update(strategy_kw)
+        ctx = QueryContext(
+            timeout=(timeout if timeout is not None
+                     else self.config.default_timeout),
+            tag=tag or name,
+            mem_budget_bytes=self.config.mem_budget_bytes)
         fut: "Future[Tuple[Table, ExecStats]]" = Future()
-        req = _Request(plan, name, kw, tag or name, fut)
+        fut.query_context = ctx
+        req = _Request(plan, name, kw, tag or name, fut, ctx)
         if self.config.admission == "reject":
             try:
                 self._queue.put_nowait(req)
@@ -248,20 +299,43 @@ class QueryServer:
         else:
             self._queue.put(req)
         self.metrics.record_submit()
+        if self._closed and fut.cancel():
+            # raced close(): our request may sit behind the shutdown
+            # sentinels where no worker will ever see it — resolve its
+            # Future (cancelled) so nothing is left permanently pending
+            raise RuntimeError("server is closed")
         return fut
 
+    def cancel(self, fut: Future) -> bool:
+        """Cancel a submitted query. Still queued: the Future is
+        cancelled outright. Already running: its cooperative token is
+        flipped, and the query aborts at the next cancellation point
+        (phase boundary / transfer vertex / join) with `QueryCancelled`
+        on the Future. Returns False only for a Future this server
+        never issued (no attached context)."""
+        if fut.cancel():
+            return True
+        ctx = getattr(fut, "query_context", None)
+        if ctx is None:
+            return False
+        ctx.cancel()
+        return True
+
     def query(self, plan: PlanNode, strategy: Optional[str] = None,
-              tag: str = "", **strategy_kw) -> Tuple[Table, ExecStats]:
+              tag: str = "", timeout: Optional[float] = None,
+              **strategy_kw) -> Tuple[Table, ExecStats]:
         """Synchronous submit-and-wait."""
-        return self.submit(plan, strategy, tag, **strategy_kw).result()
+        return self.submit(plan, strategy, tag, timeout,
+                           **strategy_kw).result()
 
     async def aquery(self, plan: PlanNode,
                      strategy: Optional[str] = None, tag: str = "",
+                     timeout: Optional[float] = None,
                      **strategy_kw) -> Tuple[Table, ExecStats]:
         """Awaitable submit — many `aquery` coroutines run concurrently
         over the worker pool from one event loop."""
         return await asyncio.wrap_future(
-            self.submit(plan, strategy, tag, **strategy_kw))
+            self.submit(plan, strategy, tag, timeout, **strategy_kw))
 
     def session(self, strategy: Optional[str] = None, tag: str = "",
                 **strategy_kw) -> "Session":
@@ -287,15 +361,38 @@ class QueryServer:
                 "plan_cache": self.plan_cache.snapshot(),
                 "artifact_cache": self.artifact_cache.snapshot()}
 
-    def close(self, wait: bool = True) -> None:
+    def _drain_pending(self) -> int:
+        """Pop every queued request and cancel its Future (shutdown
+        sentinels pass through). Returns requests cancelled."""
+        n = 0
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return n
+            if req is not None and req.future.cancel():
+                n += 1
+            self._queue.task_done()
+
+    def close(self, wait: bool = True,
+              cancel_pending: bool = False) -> None:
+        """Shut the server down deterministically: after `close(wait=
+        True)` returns, every Future this server issued is resolved —
+        queued requests either ran to completion (default) or were
+        cancelled (`cancel_pending=True`); none is left pending."""
         if self._closed:
             return
         self._closed = True
+        if cancel_pending:
+            self._drain_pending()
         for _ in self._workers:
             self._queue.put(None)
         if wait:
             for t in self._workers:
                 t.join()
+            # submits that raced close() may have landed behind the
+            # sentinels, where no (now exited) worker can reach them
+            self._drain_pending()
 
     def __enter__(self) -> "QueryServer":
         return self
@@ -315,12 +412,15 @@ class Session:
         self.tag = tag
         self.strategy_kw = dict(strategy_kw)
 
-    def submit(self, plan: PlanNode, tag: str = ""):
+    def submit(self, plan: PlanNode, tag: str = "",
+               timeout: Optional[float] = None):
         return self.server.submit(plan, self.strategy,
-                                  tag or self.tag, **self.strategy_kw)
+                                  tag or self.tag, timeout,
+                                  **self.strategy_kw)
 
-    def query(self, plan: PlanNode, tag: str = ""):
-        return self.submit(plan, tag).result()
+    def query(self, plan: PlanNode, tag: str = "",
+              timeout: Optional[float] = None):
+        return self.submit(plan, tag, timeout).result()
 
     async def aquery(self, plan: PlanNode, tag: str = ""):
         return await asyncio.wrap_future(self.submit(plan, tag))

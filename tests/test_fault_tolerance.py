@@ -1,0 +1,487 @@
+"""Fault-tolerant query execution (DESIGN.md §13).
+
+Covers the four tentpole mechanisms end to end: QueryContext deadlines
+and cross-thread cancellation (abort within one transfer pass), the
+degradation ladder under every registered fault point (md5-bit-exact vs
+the clean oracle), artifact-cache corruption self-heal, and the
+pre-gather memory budget — plus the serving-layer satellites (worker
+survival, metrics counters, deterministic shutdown).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import faultinject
+from repro.core.artifact_cache import ArtifactCache, content_checksum
+from repro.core.errors import (
+    BackendError, DeadlineExceeded, QueryCancelled, QueryContext,
+    ResourceExhausted,
+)
+from repro.core.faultinject import FAULT_POINTS, FaultSchedule, InjectedFault
+from repro.core.transfer import make_strategy
+from repro.relational.executor import Executor
+from repro.relational.plan import GroupBy, Join, Scan
+from repro.relational.plancache import PlanCache
+from repro.relational.table import Column, Table, table_digest
+from repro.serve import QueryServer, ServeConfig
+from repro.tpch import build_query
+
+SF = 0.01
+
+
+def _oracle(catalog, qn):
+    ex = Executor(catalog, make_strategy("pred-trans"))
+    return table_digest(ex.execute(build_query(qn, SF))[0])
+
+
+def _small_catalog(n=5000, seed=0):
+    rng = np.random.default_rng(seed)
+    fact = Table({"f_k": Column(rng.integers(0, 100, n)),
+                  "f_v": Column(rng.integers(0, 10, n))}, "fact")
+    dim = Table({"d_k": Column(np.arange(100)),
+                 "d_w": Column(rng.integers(0, 5, 100))}, "dim")
+    return {"fact": fact, "dim": dim}
+
+
+def _small_plan():
+    return GroupBy(Join(Scan("fact"), Scan("dim"), ["f_k"], ["d_k"]),
+                   ["d_w"], [("cnt", "count", None)])
+
+
+# -------------------------------------------------------------------------
+# QueryContext: deadlines + cancellation
+# -------------------------------------------------------------------------
+
+
+def test_deadline_pre_expired():
+    cat = _small_catalog()
+    ex = Executor(cat, make_strategy("pred-trans"))
+    with pytest.raises(DeadlineExceeded) as ei:
+        ex.execute(_small_plan(), ctx=QueryContext(timeout=-1.0))
+    assert ei.value.phase == "scan"
+
+
+def test_deadline_expires_mid_transfer():
+    """An injectable counting clock expires the deadline after the
+    scan-phase checks; the query must abort inside the transfer phase
+    (per-pass/per-vertex checks), not run to completion."""
+    cat = _small_catalog()
+    calls = [0]
+
+    def clock():
+        calls[0] += 1
+        return float(calls[0])
+
+    # deadline at the 6th tick: scan-boundary checks pass, the
+    # transfer pass loop trips it
+    ctx = QueryContext(deadline=6.0, clock=clock)
+    ex = Executor(cat, make_strategy("pred-trans"))
+    with pytest.raises(DeadlineExceeded) as ei:
+        ex.execute(_small_plan(), ctx=ctx)
+    assert ei.value.phase == "transfer"
+
+
+def test_deadline_aborts_within_one_pass(tpch_small):
+    """Acceptance bar: a deadline below a query's known runtime aborts
+    within one transfer pass. With a clock frozen past the deadline the
+    very first post-scan check raises — zero passes complete."""
+    now = time.monotonic()
+    ctx = QueryContext(deadline=now - 1.0, tag="q9")
+    ex = Executor(tpch_small, make_strategy("pred-trans"))
+    t0 = time.perf_counter()
+    with pytest.raises(DeadlineExceeded):
+        ex.execute(build_query(9, SF), ctx=ctx)
+    assert time.perf_counter() - t0 < 5.0
+    assert ctx.phase in ("scan", "transfer")
+
+
+def test_cancel_from_another_thread():
+    """A clock that blocks mid-transfer hands control to a second
+    thread, which cancels; the blocked query must then raise
+    QueryCancelled at its next check (cancelled is checked before the
+    deadline, so the far-future deadline never fires)."""
+    cat = _small_catalog()
+    reached = threading.Event()
+    released = threading.Event()
+    calls = [0]
+
+    def clock():
+        calls[0] += 1
+        if calls[0] == 5:
+            reached.set()
+            assert released.wait(10)
+        return 0.0
+
+    ctx = QueryContext(deadline=1e9, tag="c", clock=clock)
+    errs = []
+
+    def run():
+        ex = Executor(cat, make_strategy("pred-trans"))
+        try:
+            ex.execute(_small_plan(), ctx=ctx)
+        except BaseException as e:   # noqa: BLE001
+            errs.append(e)
+
+    t = threading.Thread(target=run)
+    t.start()
+    assert reached.wait(10)
+    ctx.cancel()
+    released.set()
+    t.join(10)
+    assert len(errs) == 1 and isinstance(errs[0], QueryCancelled)
+
+
+def test_query_context_remaining_and_tag():
+    ctx = QueryContext(timeout=100.0, tag="t1")
+    assert 0 < ctx.remaining() <= 100.0
+    assert not ctx.cancelled
+    assert QueryContext().remaining() is None
+
+
+# -------------------------------------------------------------------------
+# fault injection harness
+# -------------------------------------------------------------------------
+
+
+def test_fault_schedule_deterministic_and_counted():
+    s = FaultSchedule({"join.indices": [1, 3]})
+    with faultinject.inject(s):
+        faultinject.fire("join.indices")                  # idx 0
+        with pytest.raises(InjectedFault):
+            faultinject.fire("join.indices")              # idx 1
+        faultinject.fire("join.indices")                  # idx 2
+        with pytest.raises(InjectedFault) as ei:
+            faultinject.fire("join.indices")              # idx 3
+        faultinject.fire("engine.probe")                  # unscheduled
+    assert ei.value.point == "join.indices"
+    assert s.calls["join.indices"] == 4 and s.fired["join.indices"] == 2
+    faultinject.fire("join.indices")      # disarmed: no-op
+    assert s.calls["join.indices"] == 4
+
+
+def test_fault_schedule_seeded_reproducible():
+    a = FaultSchedule.seeded(7, 0.5, points=("engine.probe",))
+    b = FaultSchedule.seeded(7, 0.5, points=("engine.probe",))
+    pat_a, pat_b = [], []
+    for sched, pat in ((a, pat_a), (b, pat_b)):
+        with faultinject.inject(sched):
+            for _ in range(64):
+                try:
+                    faultinject.fire("engine.probe")
+                    pat.append(0)
+                except InjectedFault:
+                    pat.append(1)
+    assert pat_a == pat_b and 0 < sum(pat_a) < 64
+
+
+def test_fault_schedules_do_not_nest():
+    with faultinject.inject({"engine.probe": 0}):
+        with pytest.raises(RuntimeError):
+            with faultinject.inject({"engine.build": 0}):
+                pass
+    assert faultinject.active() is None
+
+
+def test_injected_fault_is_backend_error():
+    assert issubclass(InjectedFault, BackendError)
+
+
+# -------------------------------------------------------------------------
+# degradation ladder: every fault point, md5-bit-exact vs oracle
+# -------------------------------------------------------------------------
+
+# schedule per point + the rung move it must cause (see DESIGN.md §13).
+# join.indices uses finite indices: the eager-oracle rung routes through
+# the same numpy engine, so an "all" schedule would break every rung.
+_POINT_CASES = [
+    ("engine.probe", {"engine.probe": "all"}, "no-pred-trans"),
+    ("engine.build", {"engine.build": "all"}, "no-pred-trans"),
+    ("join.indices", {"join.indices": [0, 1]}, None),
+    ("gather.payload", {"gather.payload": "all"}, None),
+]
+
+
+@pytest.mark.parametrize("point,spec,want_strategy",
+                         [pytest.param(*c, id=c[0])
+                          for c in _POINT_CASES])
+def test_ladder_per_fault_point_bit_exact(tpch_small, point, spec,
+                                          want_strategy):
+    qn = 5
+    want = _oracle(tpch_small, qn)
+    ex = Executor(tpch_small, make_strategy("pred-trans"), degrade=True)
+    with faultinject.inject(spec) as sched:
+        result, stats = ex.execute(build_query(qn, SF))
+    assert sched.total_fired() > 0, f"{point} never fired"
+    assert stats.degraded, f"{point}: no ladder move recorded"
+    assert stats.degraded[0]["phase"] == point
+    assert table_digest(result) == want
+    if want_strategy is not None:
+        assert stats.strategy == want_strategy
+
+
+def test_ladder_exchange_send_distributed(tpch_small):
+    """exchange.send faults knock the distributed engine down to the
+    single-host rung; the result stays bit-exact."""
+    want = _oracle(tpch_small, 5)
+    ex = Executor(tpch_small, make_strategy("pred-trans"),
+                  engine="distributed", dist_shards=4, dist_device=False,
+                  degrade=True)
+    with faultinject.inject({"exchange.send": "all"}) as sched:
+        result, stats = ex.execute(build_query(5, SF))
+    assert sched.total_fired() > 0
+    assert stats.degraded and stats.degraded[0]["from"].startswith(
+        "distributed/")
+    assert stats.degraded[0]["to"].startswith("single/")
+    assert table_digest(result) == want
+
+
+def test_ladder_adaptive_steps_to_pred_trans(tpch_small):
+    """pred-trans-adaptive's first strategy rung is pred-trans, not
+    straight to no-prefilter."""
+    want = _oracle(tpch_small, 5)
+    # force_apply: the cost gate may skip every edge at sf 0.01, and a
+    # fault point that never fires cannot exercise the ladder
+    ex = Executor(tpch_small,
+                  make_strategy("pred-trans-adaptive",
+                                mode="force_apply"),
+                  degrade=True)
+    with faultinject.inject({"engine.probe": "all"}):
+        result, stats = ex.execute(build_query(5, SF))
+    rungs = [d["to"].split("+")[1] for d in stats.degraded]
+    assert rungs[0] == "pred-trans", rungs
+    assert stats.strategy == "no-pred-trans"    # probes still faulting
+    assert table_digest(result) == want
+
+
+def test_no_degradation_without_opt_in(tpch_small):
+    """degrade=False (the default) must propagate the fault — silent
+    fallbacks would mask real engine bugs in oracle tests."""
+    ex = Executor(tpch_small, make_strategy("pred-trans"))
+    with faultinject.inject({"engine.probe": "all"}):
+        with pytest.raises(InjectedFault):
+            ex.execute(build_query(5, SF))
+
+
+# -------------------------------------------------------------------------
+# artifact cache: verify-on-hit + self-heal
+# -------------------------------------------------------------------------
+
+
+def test_cache_corruption_detected_and_dropped():
+    ac = ArtifactCache()
+    words = np.arange(64, dtype=np.uint32)
+    ac.put(("bloom", b"sig"), (words, None), nbytes=words.nbytes)
+    assert ac.get(("bloom", b"sig")) is not None
+    words[3] ^= 0xFFFF                     # flip bits in place
+    assert ac.get(("bloom", b"sig")) is None       # dropped, miss
+    assert ac.corruptions == 1
+    assert len(ac) == 0
+    assert ac.snapshot()["corruptions"] == 1
+
+
+def test_cache_deserialize_fault_counts_as_corruption():
+    ac = ArtifactCache()
+    ac.put(("bloom", b"x"), (np.ones(8, np.uint32), None), nbytes=32)
+    with faultinject.inject({"cache.deserialize": 0}) as sched:
+        assert ac.get(("bloom", b"x")) is None     # absorbed, not raised
+    assert sched.fired["cache.deserialize"] == 1
+    assert ac.corruptions == 1
+
+
+def test_cache_self_heal_end_to_end(tpch_small):
+    """Corrupt the stored slot entry's bytes; the warm rerun must
+    detect it, recompute, and still be bit-exact."""
+    want = _oracle(tpch_small, 5)
+    ac, pc = ArtifactCache(), PlanCache()
+    ex = Executor(tpch_small,
+                  make_strategy("pred-trans", artifact_cache=ac),
+                  plan_cache=pc, artifact_cache=ac)
+    assert table_digest(ex.execute(build_query(5, SF))[0]) == want
+    # flip bytes inside one stored slot table (entries are
+    # (value, nbytes, versions, checksum); value = (slots, snap))
+    key = next(k for k in ac._entries if k[0] == "slots")
+    slots_entry = ac._entries[key][0][0]
+    tbl = slots_entry[0][0]
+    col = tbl[tbl.names[0]]
+    col.data.flags.writeable = True
+    col.data[0] += 1
+    r2, s2 = ex.execute(build_query(5, SF))
+    assert table_digest(r2) == want
+    assert not s2.transfer.from_cache       # the hit was rejected
+    assert ac.corruptions >= 1
+    # healed: the rerun re-stored a good entry, next hit replays warm
+    r3, s3 = ex.execute(build_query(5, SF))
+    assert table_digest(r3) == want and s3.transfer.from_cache
+
+
+def test_content_checksum_samples_large_arrays():
+    big = np.zeros(1 << 20, np.int64)      # 8 MiB: sampled head+tail
+    c1 = content_checksum(big)
+    big[0] = 1                             # head sample sees this
+    assert content_checksum(big) != c1
+    t0 = time.perf_counter()
+    for _ in range(10):
+        content_checksum(big)
+    assert (time.perf_counter() - t0) / 10 < 0.05   # O(1), not O(n)
+
+
+def test_verify_on_hit_can_be_disabled():
+    ac = ArtifactCache(verify_on_hit=False)
+    words = np.arange(8, dtype=np.uint32)
+    ac.put(("bloom", b"k"), (words, None), nbytes=32)
+    words[0] ^= 1
+    assert ac.get(("bloom", b"k")) is not None
+    assert ac.corruptions == 0
+
+
+# -------------------------------------------------------------------------
+# memory budget
+# -------------------------------------------------------------------------
+
+
+def test_memory_budget_raises_without_degrade():
+    cat = _small_catalog()
+    ex = Executor(cat, make_strategy("pred-trans"),
+                  mem_budget_bytes=100)
+    with pytest.raises(ResourceExhausted) as ei:
+        ex.execute(_small_plan())
+    assert ei.value.phase == "join"
+
+
+def test_memory_budget_degrades_eager_to_late():
+    """A budget the eager path exceeds but the late path fits: the
+    ladder switches materialization mode and stays bit-exact."""
+    cat = _small_catalog()
+    plan = _small_plan()
+    want = table_digest(
+        Executor(cat, make_strategy("pred-trans")).execute(plan)[0])
+    _, se = Executor(cat, make_strategy("pred-trans"),
+                     late_materialize=False).execute(plan)
+    _, sl = Executor(cat, make_strategy("pred-trans")).execute(plan)
+    assert sl.join_materialized_bytes < se.join_materialized_bytes
+    budget = (sl.join_materialized_bytes
+              + se.join_materialized_bytes) // 2
+    ex = Executor(cat, make_strategy("pred-trans"),
+                  late_materialize=False, degrade=True,
+                  mem_budget_bytes=budget)
+    result, stats = ex.execute(plan)
+    assert stats.degraded and stats.degraded[0]["error"] == \
+        "ResourceExhausted"
+    assert "late" in stats.degraded[0]["to"]
+    assert table_digest(result) == want
+
+
+def test_memory_budget_from_context_overrides_executor():
+    cat = _small_catalog()
+    ex = Executor(cat, make_strategy("pred-trans"))
+    with pytest.raises(ResourceExhausted):
+        ex.execute(_small_plan(),
+                   ctx=QueryContext(mem_budget_bytes=100))
+
+
+# -------------------------------------------------------------------------
+# serving layer: worker survival, counters, shutdown
+# -------------------------------------------------------------------------
+
+
+def test_worker_survives_failing_query(tpch_small):
+    """A query that faults errors its own Future; the same worker then
+    serves the next query."""
+    cfg = ServeConfig(strategy="pred-trans", workers=1, degrade=False)
+    with QueryServer(tpch_small, cfg) as srv:
+        with faultinject.inject({"engine.probe": "all"}):
+            fut = srv.submit(build_query(5, SF))
+            with pytest.raises(InjectedFault):
+                fut.result(30)
+        want = _oracle(tpch_small, 5)
+        assert table_digest(srv.query(build_query(5, SF))[0]) == want
+        snap = srv.metrics_snapshot()["server"]
+        assert snap["errors"] == 1 and snap["completed"] == 1
+
+
+def test_server_degrades_by_default(tpch_small):
+    want = _oracle(tpch_small, 5)
+    with QueryServer(tpch_small,
+                     ServeConfig(strategy="pred-trans",
+                                 workers=1)) as srv:
+        with faultinject.inject({"engine.probe": "all"}):
+            result, stats = srv.query(build_query(5, SF))
+        assert stats.degraded and table_digest(result) == want
+        assert srv.metrics_snapshot()["server"]["degradations"] == 1
+
+
+def test_server_timeout_and_cancel_counters(tpch_small):
+    cfg = ServeConfig(strategy="pred-trans", workers=1)
+    with QueryServer(tpch_small, cfg) as srv:
+        with pytest.raises(DeadlineExceeded):
+            srv.query(build_query(5, SF), timeout=0.0)
+        # cancel a running query: stall the worker inside _execute
+        # via a gate, flip the token, release
+        gate = threading.Event()
+        orig = srv._execute
+
+        def gated(req):
+            gate.wait(10)
+            return orig(req)
+
+        srv._execute = gated
+        fut = srv.submit(build_query(5, SF))
+        assert srv.cancel(fut) is True       # queued or running
+        gate.set()
+        with pytest.raises(BaseException):   # cancelled either way
+            fut.result(30)
+        snap = srv.metrics_snapshot()["server"]
+        assert snap["timeouts"] == 1
+        assert snap["cancellations"] + snap["failed"] >= 1
+
+
+def test_close_resolves_all_futures(tpch_small):
+    """Regression: close() must leave no Future permanently pending —
+    queued requests behind a stalled worker are cancelled when
+    cancel_pending=True."""
+    cfg = ServeConfig(strategy="no-pred-trans", workers=1, max_queue=0)
+    srv = QueryServer(tpch_small, cfg)
+    gate = threading.Event()
+    orig = srv._execute
+
+    def stalled(req):
+        gate.wait(20)
+        return orig(req)
+
+    srv._execute = stalled
+    futs = [srv.submit(build_query(5, SF)) for _ in range(6)]
+    closer = threading.Thread(
+        target=srv.close, kwargs={"wait": True, "cancel_pending": True})
+    closer.start()
+    gate.set()
+    closer.join(30)
+    assert not closer.is_alive()
+    for f in futs:
+        assert f.done(), "future left pending after close()"
+    with pytest.raises(RuntimeError):
+        srv.submit(build_query(5, SF))
+
+
+def test_close_default_drains_queued_work(tpch_small):
+    """Default close(): queued requests run to completion before the
+    workers exit."""
+    cfg = ServeConfig(strategy="pred-trans", workers=2)
+    srv = QueryServer(tpch_small, cfg)
+    futs = [srv.submit(build_query(qn, SF)) for qn in (3, 5, 10)]
+    srv.close(wait=True)
+    for f in futs:
+        assert f.done() and f.exception() is None
+
+
+# -------------------------------------------------------------------------
+# ft.runner re-export (satellite: taxonomy shared with training FT)
+# -------------------------------------------------------------------------
+
+
+def test_ft_runner_reexports_taxonomy():
+    from repro.ft import runner
+    assert runner.DeadlineExceeded is DeadlineExceeded
+    assert runner.QueryContext is QueryContext
+    assert issubclass(runner.BackendError, runner.QueryError)
