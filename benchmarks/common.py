@@ -17,20 +17,26 @@ def catalog(sf: float):
 
 
 def run_query(sf: float, qn: int, strategy: str, warm: int = 1,
-              backend: Optional[str] = None, **query_kw):
+              backend: Optional[str] = None, reorder: str = "auto",
+              exec_kw: Optional[dict] = None, **query_kw):
     """Paper methodology: run twice, measure the second (warm) run.
 
     `backend=` selects the bloom engine (numpy | jax | pallas) for the
     Bloom-based strategies; strategies that do no Bloom work ignore it.
+    `reorder=` / `exec_kw=` feed the `ExecConfig` (runtime join
+    ordering, caches, engine selection) — a fresh Executor is built per
+    iteration so per-run scratch state never leaks between reps.
     """
     from repro.core.transfer import BACKEND_AWARE, make_strategy
-    from repro.relational import Executor
+    from repro.relational import ExecConfig, Executor
     from repro.tpch import build_query
     cat = catalog(sf)
     skw = {"backend": backend} if (backend is not None
                                    and strategy in BACKEND_AWARE) else {}
     res = stats = None
     for _ in range(warm + 1):
-        ex = Executor(cat, make_strategy(strategy, **skw))
-        res, stats = ex.execute(build_query(qn, sf=sf, **query_kw))
+        cfg = ExecConfig(strategy=make_strategy(strategy, **skw),
+                         reorder=reorder, **(exec_kw or {}))
+        res, stats = Executor(cat, cfg).execute(
+            build_query(qn, sf=sf, **query_kw))
     return res, stats

@@ -1,0 +1,131 @@
+"""Runtime join-order robustness bench (DESIGN.md §14).
+
+The claim under test: with predicate transfer done first, the runtime
+order derived from transfer *actuals* is never much worse than the best
+static order an optimizer could have picked — and is immune to the
+adversarially bad ones. Protocol, drift-immune like `run.py`'s paired
+estimators: for each of the heaviest TPC-H join queries, every rep
+interleaves one runtime-ordered run, the plan's own static order, and
+``len(SEEDS)`` adversarial static permutations (seeded valid orders
+forced through ``ExecConfig.reorder_fn``) inside one measurement
+window. The gated number is
+
+    max over static orders o of  median over reps of  t_runtime / t_o
+
+— the ratio against whichever static order is genuinely fastest,
+judged by its median. Pairing runtime with each opponent inside the
+same rep window cancels drift; taking each opponent's *median* before
+the max keeps one lucky draw from a noisy opponent from defining
+"best static" (a per-rep min rides the opponents' noise minima and
+inflates the ratio by an order-statistic bias). Every variant's result
+is md5-checked against the static plan's bytes first — a robustness
+number backed by wrong rows is worthless.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+STRATEGY = "pred-trans"
+HEAVY = [5, 7, 8, 9, 21]        # widest join graphs in the suite
+SEEDS = (11, 23, 47)
+
+
+def _modes():
+    """mode name -> run_query kwargs. 'runtime' is the greedy runtime
+    order; everything else pins a static order (the plan's own, or a
+    seeded adversarial permutation)."""
+    from repro.relational import reorder
+    modes = {"runtime": {},
+             "static": {"reorder": "off"}}
+    for s in SEEDS:
+        modes[f"seed{s}"] = {"exec_kw": {
+            "reorder_fn": (lambda m, _s=s: reorder.seeded_order(m, _s))}}
+    return modes
+
+
+def bench_query(sf: float, qn: int, repeat: int = 5) -> dict:
+    import numpy as np
+
+    from benchmarks.common import run_query
+    from repro.relational.table import table_digest
+
+    modes = _modes()
+    # correctness first: every ordering must produce the static bytes
+    digests, reports = {}, {}
+    for name, kw in modes.items():
+        res, stats = run_query(sf, qn, STRATEGY, warm=0, **kw)
+        digests[name] = table_digest(res)
+        reports[name] = stats.report()
+    ref = digests["static"]
+    bad = sorted(n for n, d in digests.items() if d != ref)
+    if bad:
+        raise AssertionError(
+            f"Q{qn}: orders {bad} diverged from the static plan bytes")
+
+    secs = {name: [] for name in modes}
+    import gc
+    gc.collect()
+    gc.disable()       # a GC pause inside one 30-140ms run is a ±10%
+    try:               # ratio outlier; collect between windows instead
+        for _ in range(repeat):
+            for name, kw in modes.items():  # interleaved: drift-immune
+                _, stats = run_query(sf, qn, STRATEGY, warm=0, **kw)
+                secs[name].append(stats.total_seconds)
+            gc.collect()
+    finally:
+        gc.enable()
+
+    def med(v):
+        return float(np.median(v))
+
+    # per-opponent median paired ratio; the gate compares against the
+    # best opponent = the largest of these medians
+    ratio = {n: med([r / o for r, o in zip(secs["runtime"], v)])
+             for n, v in secs.items() if n != "runtime"}
+    med_secs = {n: med(v) for n, v in secs.items() if n != "runtime"}
+    rep = reports["runtime"]
+    return {
+        "runtime_seconds": med(secs["runtime"]),
+        "static_seconds": med_secs["static"],
+        "adversarial_seconds": {
+            n: s for n, s in med_secs.items() if n != "static"},
+        "best_static_seconds": min(med_secs.values()),
+        "runtime_over_best_static": max(ratio.values()),
+        "runtime_over_static": ratio["static"],
+        "worst_static_over_best": (max(med_secs.values())
+                                   / min(med_secs.values())),
+        "reordered": rep["reordered"],
+        "join_order": rep["join_order"],
+        "qerror": rep["qerror"],
+    }
+
+
+def main(sf: float, queries=None, repeat: int = 5) -> dict:
+    rows = {}
+    for qn in (queries or HEAVY):
+        print(f"reorder: Q{qn} ...", file=sys.stderr)
+        rows[f"Q{qn}"] = bench_query(sf, qn, repeat)
+    hdr = (f"{'query':>6} {'runtime s':>10} {'best static':>12} "
+           f"{'rt/best':>8} {'worst/best':>10} {'reordered':>9}")
+    print(hdr)
+    for q, r in rows.items():
+        print(f"{q:>6} {r['runtime_seconds']:>10.4f} "
+              f"{r['best_static_seconds']:>12.4f} "
+              f"{r['runtime_over_best_static']:>8.3f} "
+              f"{r['worst_static_over_best']:>10.3f} "
+              f"{str(r['reordered']):>9}")
+    return {"strategy": STRATEGY, "seeds": list(SEEDS),
+            "queries": rows}
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.1)
+    ap.add_argument("--repeat", type=int, default=5)
+    ap.add_argument("--queries", type=int, nargs="+", default=None)
+    args = ap.parse_args()
+    main(args.sf, args.queries, args.repeat)

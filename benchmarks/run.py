@@ -101,32 +101,31 @@ def measure_adaptive(sf: float, repeat: int = 7):
 
 
 def adaptive_decisions(sf: float):
-    """One adaptive run per query, recording every per-edge scheduling
-    decision (estimated vs actual selectivity, skip/apply/prune/
-    min-max-cut, modeled cost/benefit) — the decision-quality record
-    the ISSUE acceptance asks for."""
-    import math
-
+    """One adaptive run per query through the unified
+    `ExecStats.report()` surface: per-edge scheduling decisions
+    (estimated vs actual selectivity with q-error, skip/apply/prune/
+    min-max-cut) plus the runtime join-order record — the
+    decision-quality exhibits BENCH_tpch.json tracks."""
     from benchmarks.common import run_query
-    from repro.core.graph import decision_counts
-    out = {}
     from repro.tpch import QUERIES
+
+    def rnd(e: dict) -> dict:
+        return {k: (round(v, 4) if isinstance(v, float) else v)
+                for k, v in e.items()}
+
+    dec, qerr, jorder = {}, {}, {}
     for qn in sorted(QUERIES):
         _, stats = run_query(sf, qn, "pred-trans-adaptive", warm=0)
-        edges = stats.transfer_edges()
-        out[f"Q{qn}"] = {
-            "decisions": decision_counts(edges),
-            "passes_run": stats.transfer.passes_run,
-            "edges": [
-                {"edge": d.edge, "pass": d.pass_idx, "action": d.action,
-                 "build_rows": d.build_rows, "probe_rows": d.probe_rows,
-                 "rows_probed": d.rows_probed,
-                 "est_sel": None if math.isnan(d.est_sel) else
-                 round(d.est_sel, 4),
-                 "act_sel": None if math.isnan(d.act_sel) else
-                 round(d.act_sel, 4)}
-                for d in edges]}
-    return out
+        rep = stats.report()
+        tr = rep["transfer"] or {}
+        q = f"Q{qn}"
+        dec[q] = {"decisions": tr.get("decisions"),
+                  "passes_run": tr.get("passes_run"),
+                  "edges": [rnd(e) for e in rep["edges"]]}
+        qerr[q] = rnd(rep["qerror"])
+        jorder[q] = {"reordered": rep["reordered"],
+                     "regions": rep["join_order"]}
+    return {"decisions": dec, "qerror": qerr, "join_order": jorder}
 
 
 def run_check(sf: float, baseline_path: str, rel_tol: float = 0.10,
@@ -228,6 +227,25 @@ def run_check(sf: float, baseline_path: str, rel_tol: float = 0.10,
              float(np.exp(np.mean(np.log(base_ad_sp)))),
              rel_tol, higher_is_better=True)
 
+    # reorder-robustness gate (DESIGN §14): on the widest join graphs,
+    # the runtime order must sit within 10% of the *best* static order
+    # among the plan's own and >=3 adversarial permutations. Every
+    # order runs interleaved in the same rep window, so the gated
+    # ratio is drift-immune and needs no baseline; jitter slack scales
+    # with 1/time like the other per-query gates.
+    from benchmarks import reorder_bench
+    print("\n===== reorder robustness (gate) =====", file=sys.stderr)
+    # median-of-9 reps regardless of --repeat: the gated number is the
+    # worst per-opponent median paired ratio, and each median needs
+    # enough reps to be tight on a noisy box. The extra slack absorbs
+    # the runtime leg's fixed decision overhead (ndistinct + subset DP,
+    # ~3-8% of these 30-140ms queries) on top of the usual jitter.
+    rb = reorder_bench.main(sf, repeat=max(repeat, 9))
+    for q, r in sorted(rb["queries"].items()):
+        gate(f"{q} runtime/best-static order ratio",
+             r["runtime_over_best_static"], 1.0, rel_tol,
+             slack=0.08 + 0.002 / r["best_static_seconds"])
+
     # serving gate: cold and warm passes share one measurement window
     # (paired), so the warm/cold throughput ratio is drift-immune. The
     # 1.3x floor is the serving-layer acceptance contract at
@@ -298,7 +316,7 @@ def main() -> None:
     from benchmarks import (chaos_bench, curation_bench,
                             distributed_transfer, figure2_tpch,
                             figure3_breakdown, figure4_robustness,
-                            kernel_bench, serving_bench,
+                            kernel_bench, reorder_bench, serving_bench,
                             table1_q5_sizes)
 
     exhibits = {
@@ -314,6 +332,7 @@ def main() -> None:
             max(int(args.sf * 1_000_000), 20_000)),
         "serving": lambda: serving_bench.main(args.sf),
         "chaos": lambda: chaos_bench.main(args.sf),
+        "reorder": lambda: reorder_bench.main(args.sf),
     }
     if args.only:
         names = args.only.split(",")
@@ -364,7 +383,10 @@ def main() -> None:
             print("\n===== check_adaptive =====", file=sys.stderr)
             doc["check_adaptive"] = measure_adaptive(args.sf)
             print("\n===== adaptive_decisions =====", file=sys.stderr)
-            doc["adaptive_decisions"] = adaptive_decisions(args.sf)
+            ad = adaptive_decisions(args.sf)
+            doc["adaptive_decisions"] = ad["decisions"]
+            doc["qerror"] = ad["qerror"]
+            doc["join_order"] = ad["join_order"]
         if "kernel_bench" in results:
             kb = results["kernel_bench"]
             doc["kernel_bench_ns_per_row"] = dict(kb["rows"])
@@ -376,6 +398,8 @@ def main() -> None:
             doc["serving"] = results["serving"]
         if "chaos" in results:
             doc["chaos"] = results["chaos"]
+        if "reorder" in results:
+            doc["reorder"] = results["reorder"]
         tmp = args.json + ".tmp"
         with open(tmp, "w") as f:       # atomic: a crash mid-dump must
             json.dump(doc, f, indent=1, sort_keys=True)

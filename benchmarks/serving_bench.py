@@ -97,6 +97,11 @@ def bench_concurrency(cat, sf: float, workers: int, schedule,
         "bloom_cache_hits": snap["artifact_cache"]["kinds"]
         .get("bloom", {}).get("hits", 0),
         "warm_replays": snap["server"]["warm_replays"],
+        # runtime join ordering (DESIGN §14), from the report()-fed
+        # server metrics: queries whose order changed, and the q-error
+        # of the transfer-edge estimates they were ordered by
+        "reordered": snap["server"]["reordered"],
+        "qerror": snap["server"].get("qerror"),
         # per-tag latencies span both passes; with pairs repeated the
         # warm share dominates, and cold outliers land in the p99 tail
         # where they belong for a mixed-traffic server

@@ -66,6 +66,12 @@ KEY_WIRE_BYTES = 8
 #: extra wire bytes per row when a validity plane travels alongside the
 #: key halves (nullable join keys only; all-valid sides ship without it)
 VALID_WIRE_BYTES = 4
+#: modeled ns per wire byte for the runtime join-ordering cost model
+#: (repro.relational.reorder): ~2 GB/s effective exchange bandwidth,
+#: the same order as the simulated collectives' memcpy cost. Only the
+#: *ratio* against TransferCosts' per-row join coefficients matters —
+#: it prices large-build steps out of the distributed chain order.
+WIRE_NS_PER_BYTE = 0.5
 
 
 def shard_bounds(n: int, nshards: int) -> np.ndarray:

@@ -172,11 +172,14 @@ class EdgeDecision:
       skipped-forced — mode="force_skip" sweep (tests).
 
     A non-applied edge reports `rows_probed == 0`. `est_sel` is the
-    modeled removed-row fraction; `act_sel` the measured one (NaN when
-    the edge never probed, or for `applied` edges whose probe was
-    batched away by an earlier empty survivor set). Actual selectivity
-    is *conditional* — measured on the rows still alive when this
-    edge's filter ran in LIP order."""
+    modeled removed-row fraction (NaN only for gate-1 skips, which
+    never estimate); `act_sel` the measured one. Actual selectivity is
+    *conditional* — measured on the rows still alive when this edge's
+    filter ran in LIP order. `act_sel` is always finite: an edge whose
+    probe never ran (skipped, pruned, batched away by a min-max cut or
+    an earlier empty survivor set) measures 0.0 removed over
+    `rows_probed == 0` rows, so q-error stays NaN-free by
+    construction."""
 
     edge: str                     # "src->dst[cols]"
     pass_idx: int
@@ -189,10 +192,25 @@ class EdgeDecision:
     cost_ns: float = 0.0
     benefit_ns: float = 0.0
     filter_bytes: int = 0         # bytes built (0 when skipped/reused)
+    src: str = ""                 # source vertex alias ("" = unknown)
+    dst: str = ""                 # destination vertex alias
 
     @property
     def skipped(self) -> bool:
         return self.action != "applied"
+
+    def qerror(self) -> float:
+        """Querytorque-style q-error of this edge's survivor-cardinality
+        estimate: max(est/act, act/est) over clamped-to-1 surviving row
+        counts. 1.0 = perfect (or no information: an edge that never
+        probed has no measured actual to compare against — reporting
+        1.0 instead of NaN keeps aggregates finite)."""
+        if (self.rows_probed <= 0 or math.isnan(self.est_sel)
+                or math.isnan(self.act_sel)):
+            return 1.0
+        est_keep = max(1.0, (1.0 - self.est_sel) * self.rows_probed)
+        act_keep = max(1.0, (1.0 - self.act_sel) * self.rows_probed)
+        return max(est_keep / act_keep, act_keep / est_keep)
 
 
 @dataclasses.dataclass
@@ -222,6 +240,9 @@ class TransferStats:
     # plain strategies record their prune skips here too)
     edges: List[EdgeDecision] = dataclasses.field(default_factory=list)
     passes_run: int = 0
+    # gate decisions whose sel_est came from plancache.SelHistory
+    # (second-query-onward correction) instead of the KMV estimator
+    hints_used: int = 0
 
     def record_vertices(self, vertices: Dict[int, Vertex],
                         before: Dict[int, int],
@@ -269,11 +290,15 @@ class Strategy:
     uses_per_join_filter = False
 
     def prefilter(self, vertices: Dict[int, Vertex], edges: List[Edge],
-                  ctx=None) -> TransferStats:
+                  ctx=None, hints=None) -> TransferStats:
         """`ctx` is an optional `repro.core.errors.QueryContext`;
         strategies that do real transfer work call `ctx.check()` per
         pass and per vertex so a deadline or cancellation aborts within
-        one pass (DESIGN.md §13)."""
+        one pass (DESIGN.md §13). `hints` is an optional
+        {(edge_label, pass_idx): measured_sel} mapping from
+        `plancache.SelHistory` — strategies that estimate selectivity
+        may substitute these measured actuals for their own estimates;
+        others ignore it."""
         return TransferStats(strategy=self.name)
 
     def cache_signature(self) -> Optional[tuple]:

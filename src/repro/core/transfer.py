@@ -24,6 +24,7 @@ TPU kernels, all with identical filter semantics.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
@@ -58,7 +59,7 @@ class BloomJoin(Strategy):
         self.engine: BloomEngine = get_engine(backend, k=k,
                                               interpret=interpret)
 
-    def prefilter(self, vertices, edges, ctx=None):
+    def prefilter(self, vertices, edges, ctx=None, hints=None):
         # no transfer phase, but record which engine the per-join
         # filters below will run on
         return TransferStats(strategy=self.name,
@@ -152,8 +153,12 @@ class PredTrans(Strategy):
             ("bloom", fsig), (host, mm), nbytes=host.nbytes + 32,
             versions=v.dep_versions)
 
-    def prefilter(self, vertices, edges, ctx=None):
+    def prefilter(self, vertices, edges, ctx=None, hints=None):
         self._ctx = ctx
+        # history-corrected selectivity estimates, keyed
+        # (edge_label, pass_idx) — per-query scratch, supplied by the
+        # executor from `plancache.SelHistory` on repeat fingerprints
+        self._hints = hints or {}
         stats = TransferStats(strategy=self.name,
                               backend=self.engine.backend)
         # initial live counts, shared with the adaptive scheduler's
@@ -177,6 +182,14 @@ class PredTrans(Strategy):
                 adj[e.v].append((ei, e))
 
         self._run_passes(order, rank, vertices, adj, stats)
+
+        # NaN-free actual-selectivity contract (graph.EdgeDecision): an
+        # edge whose probe never ran — skipped, pruned, batched away by
+        # a min-max cut or an earlier empty survivor set — measured
+        # zero removed rows over zero probed rows
+        for d in stats.edges:
+            if math.isnan(d.act_sel):
+                d.act_sel = 0.0
 
         stats.seconds = time.perf_counter() - t0
         stats.record_vertices(vertices, before,
@@ -266,7 +279,8 @@ class PredTrans(Strategy):
                     stats.edges.append(EdgeDecision(
                         _edge_label(v, dv, e.endpoint_cols(lid)),
                         pass_idx, "pruned", build_rows=live,
-                        probe_rows=self._live0.get(dv.leaf_id, 0)))
+                        probe_rows=self._live0.get(dv.leaf_id, 0),
+                        src=v.alias, dst=dv.alias))
                 continue
             nblocks = bloom.blocks_for(max(live, 1), self.bits_per_key)
             sel = live / max(v.base_rows if v.base_rows > 0
@@ -781,7 +795,8 @@ class AdaptivePredTrans(PredTrans):
                 cols = tuple(e.endpoint_cols(lid))
                 dec = EdgeDecision(_edge_label(v, dv, cols), pass_idx,
                                    "applied", build_rows=live,
-                                   probe_rows=live_of(dv))
+                                   probe_rows=live_of(dv),
+                                   src=v.alias, dst=dv.alias)
                 stats.edges.append(dec)
                 if self.mode == "force_skip":
                     dec.action = "skipped-forced"
@@ -818,6 +833,16 @@ class AdaptivePredTrans(PredTrans):
                     dec.est_sel = sel = self._sel_est(
                         v, scan, cols, dv,
                         tuple(e.endpoint_cols(e.other(lid))))
+                    # second-query-onward correction: a measured actual
+                    # for this (edge, pass) from an earlier run of the
+                    # same plan fingerprint overrides the KMV estimate.
+                    # Transfer filters have no false negatives, so a
+                    # different gate outcome changes survivor sets but
+                    # never query results.
+                    hint = self._hints.get((dec.edge, pass_idx))
+                    if hint is not None:
+                        dec.est_sel = sel = min(max(hint, 0.0), 1.0)
+                        stats.hints_used += 1
                     dec.benefit_ns = benefit = sel * cap
                     if benefit <= cost:
                         dec.action = "skipped"
@@ -872,7 +897,7 @@ class Yannakakis(Strategy):
         # seed-chosen root; semi-joins are exact, no filter params
         return ("yannakakis", self.root_seed)
 
-    def prefilter(self, vertices, edges, ctx=None):
+    def prefilter(self, vertices, edges, ctx=None, hints=None):
         stats = TransferStats(strategy=self.name)
         before = {lid: v.live for lid, v in vertices.items()}
         t0 = time.perf_counter()

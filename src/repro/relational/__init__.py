@@ -21,11 +21,11 @@ from repro.relational import ops
 from repro.relational.plan import (
     Scan, Join, GroupBy, Project, Sort, Limit, SubqueryScan, PlanNode,
 )
-from repro.relational.executor import Executor, ExecStats
+from repro.relational.executor import ExecConfig, Executor, ExecStats
 
 __all__ = [
     "Table", "Column", "col", "lit", "isin", "between", "like", "Expr",
     "ExprValue", "is_null", "is_not_null", "coalesce",
     "ops", "Scan", "Join", "GroupBy", "Project", "Sort", "Limit",
-    "SubqueryScan", "PlanNode", "Executor", "ExecStats",
+    "SubqueryScan", "PlanNode", "ExecConfig", "Executor", "ExecStats",
 ]

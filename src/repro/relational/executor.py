@@ -22,8 +22,12 @@ join phase's materialization traffic in bytes.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Dict, List, Mapping, Optional, Tuple, Union
+import warnings
+from typing import (
+    Callable, Dict, List, Mapping, Optional, Tuple, Union,
+)
 
 import numpy as np
 
@@ -33,9 +37,9 @@ from repro.core.errors import (
     DeadlineExceeded, QueryCancelled, QueryContext, ResourceExhausted,
 )
 from repro.core.graph import (
-    Edge, NoPredTrans, Strategy, TransferStats, Vertex,
+    Edge, NoPredTrans, Strategy, TransferStats, Vertex, decision_counts,
 )
-from repro.relational import ops
+from repro.relational import ops, reorder as reorder_mod
 from repro.relational.expr import Col
 from repro.relational.plan import (
     Bind, Filter, GroupBy, Join, LeafNode, Limit, PlanNode, Project, Scan,
@@ -75,6 +79,11 @@ class ExecStats:
     # taken before this result was produced — {"from", "to", "phase",
     # "error", "detail"}. Empty = the query ran on its requested config.
     degraded: List[dict] = dataclasses.field(default_factory=list)
+    # runtime join-ordering record (DESIGN.md §14): one dict per
+    # inner-join region — {"units", "rows", "chosen", "changed",
+    # "source", "fallback", "est_rows"}. Empty = no reorderable region
+    # (or reorder off / eager oracle / per-join-filter strategy).
+    join_order: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:
@@ -97,97 +106,261 @@ class ExecStats:
             out += sub.transfer_edges()
         return out
 
+    def join_order_entries(self) -> List[dict]:
+        """Every runtime join-ordering decision of this query — this
+        executor's plus every (nested) subquery's."""
+        out = list(self.join_order)
+        for sub in self.subqueries:
+            out += sub.join_order_entries()
+        return out
+
+    def report(self) -> dict:
+        """The one structured stats surface (JSON-safe: plain
+        ints/floats/strs, NaN mapped to None). Benches and the serving
+        layer's `ServerMetrics` consume this instead of poking fields —
+        per-phase seconds, transfer decisions with per-edge q-error,
+        runtime-vs-static join order, degradations, distributed wire
+        bytes."""
+        def num(x):
+            if x is None:
+                return None
+            x = float(x)
+            return None if math.isnan(x) else x
+
+        edges = []
+        for d in self.transfer_edges():
+            q = d.qerror()
+            edges.append({
+                "edge": d.edge, "pass": int(d.pass_idx),
+                "action": d.action,
+                "src": d.src or None, "dst": d.dst or None,
+                "build_rows": int(d.build_rows),
+                "probe_rows": int(d.probe_rows),
+                "rows_probed": int(d.rows_probed),
+                "est_sel": num(d.est_sel), "act_sel": num(d.act_sel),
+                "qerror": round(q, 4)})
+        qerrs = [e["qerror"] for e in edges if e["rows_probed"] > 0]
+        orders = self.join_order_entries()
+        tr = self.transfer
+        out = {
+            "strategy": self.strategy,
+            "phase_seconds": {k: float(v)
+                              for k, v in self.phase_seconds.items()},
+            "total_seconds": float(self.total_seconds),
+            "result_rows": int(self.result_rows),
+            "join": {
+                "joins": len(self.joins),
+                "input_rows": int(self.join_input_rows()),
+                "materialized_bytes": int(self.join_materialized_bytes),
+            },
+            "join_order": orders,
+            "reordered": any(o.get("changed") for o in orders),
+            "transfer": None if tr is None else {
+                "strategy": tr.strategy, "backend": tr.backend,
+                "seconds": float(tr.seconds),
+                "filters_built": int(tr.filters_built),
+                "filters_reused": int(tr.filters_reused),
+                "from_cache": bool(tr.from_cache),
+                "filter_bytes": int(tr.filter_bytes),
+                "rows_probed": int(tr.rows_probed),
+                "passes_run": int(tr.passes_run),
+                "hints_used": int(tr.hints_used),
+                "decisions": decision_counts(self.transfer_edges()),
+            },
+            "edges": edges,
+            "qerror": {
+                "n": len(qerrs),
+                "max": max(qerrs) if qerrs else None,
+                "geomean": (float(np.exp(np.mean(np.log(qerrs))))
+                            if qerrs else None),
+            },
+            "degraded": list(self.degraded),
+            "dist": None,
+        }
+        if self.dist is not None:
+            out["dist"] = {
+                "nshards": int(self.dist.nshards),
+                "device_backed": bool(self.dist.device_backed),
+                "shuffle_bytes": int(self.dist.shuffle_bytes),
+                "broadcast_bytes": int(self.dist.broadcast_bytes),
+                "strategies": self.dist.strategy_counts(),
+            }
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """The executor's full knob surface as one validated, immutable
+    value (three PRs of kwargs sprawl, consolidated).
+
+    `engine="single"` (default) runs the late-materialized join
+    runtime on one host; `engine="distributed"` routes every join
+    through `repro.core.engine_join_dist` — row-sharded cursors,
+    broadcast/all-to-all key exchange over `dist_shards` shards
+    (default: the device mesh when >1 XLA device exists, else 4
+    simulated shards). Results are bit-identical; the single-host
+    engine is the distributed runtime's correctness oracle.
+
+    `plan_cache` (`repro.relational.plancache.PlanCache`) skips
+    planning/annotation work on canonically-identical plans;
+    `artifact_cache` (`repro.core.artifact_cache.ArtifactCache`)
+    replays whole post-transfer slot states on exact repeats;
+    `sel_history` (`repro.relational.plancache.SelHistory`) feeds
+    measured per-edge selectivities back into the adaptive scheduler's
+    estimates on repeat plan fingerprints (DESIGN.md §12/§14). All
+    shared, thread-safe, and optional — the serving layer
+    (`repro.serve`) wires them in.
+
+    `degrade=True` arms the degradation ladder (DESIGN.md §13): a
+    backend failure retries the query on the next-safer rung
+    (distributed → late-numpy → eager oracle; pred-trans-adaptive →
+    pred-trans → no-prefilter), recorded in `ExecStats.degraded`.
+    Off by default so engine-vs-oracle tests can never silently
+    pass via a fallback; the serving layer turns it on.
+
+    `mem_budget_bytes` caps the join phase's payload-gather bytes
+    per query, estimated *before* allocation — exceeding it raises
+    `ResourceExhausted` (which the ladder answers by switching
+    materialization mode) instead of OOMing.
+
+    `reorder` controls runtime join ordering from transfer actuals
+    (DESIGN.md §14, `repro.relational.reorder`): "auto" (default)
+    re-derives each inner-join region's order after the transfer phase
+    wherever the runtime supports it (late-materialized cursors,
+    non-per-join-filter strategies; the eager oracle always keeps the
+    static order as the bit-exactness reference), "off" keeps the
+    plan's static order everywhere, "on" is an explicit alias of
+    "auto". `reorder_fn` overrides the greedy chooser with a callable
+    `meta -> order` (permutation tests and the robustness bench inject
+    adversarial orders through it; see `reorder.seeded_order`)."""
+
+    strategy: Optional[Strategy] = None
+    join_backend: str = "numpy"
+    late_materialize: bool = True
+    engine: str = "single"
+    dist_shards: Optional[int] = None
+    dist_device: Optional[bool] = None
+    plan_cache: Optional[object] = None
+    artifact_cache: Optional[object] = None
+    sel_history: Optional[object] = None
+    degrade: bool = False
+    mem_budget_bytes: Optional[int] = None
+    reorder: str = "auto"
+    reorder_fn: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.engine not in ("single", "distributed"):
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             "choose 'single' or 'distributed'")
+        if self.reorder not in ("auto", "on", "off"):
+            raise ValueError(f"reorder must be 'auto', 'on' or 'off', "
+                             f"got {self.reorder!r}")
+        if self.dist_shards is not None and self.dist_shards < 1:
+            raise ValueError(f"dist_shards must be >= 1, "
+                             f"got {self.dist_shards!r}")
+        if (self.mem_budget_bytes is not None
+                and self.mem_budget_bytes <= 0):
+            raise ValueError("mem_budget_bytes must be positive, got "
+                             f"{self.mem_budget_bytes!r}")
+
+    def replace(self, **overrides) -> "ExecConfig":
+        return dataclasses.replace(self, **overrides)
+
+
+_UNSET = object()
+_LEGACY_KWARGS = ("join_backend", "late_materialize", "engine",
+                  "dist_shards", "dist_device", "plan_cache",
+                  "artifact_cache", "sel_history", "degrade",
+                  "mem_budget_bytes", "reorder", "reorder_fn")
+_legacy_warned = False
+
+
+def _warn_legacy_kwargs() -> None:
+    global _legacy_warned
+    if _legacy_warned:
+        return
+    _legacy_warned = True
+    warnings.warn(
+        "passing Executor knobs as individual kwargs is deprecated; "
+        "pass one ExecConfig instead: "
+        "Executor(catalog, ExecConfig(strategy=..., engine=..., ...))",
+        DeprecationWarning, stacklevel=3)
+
+
+def _reset_legacy_warning() -> None:
+    """Test hook: make the next legacy-kwargs use warn again."""
+    global _legacy_warned
+    _legacy_warned = False
+
 
 class Executor:
     def __init__(self, catalog: Mapping[str, Table],
                  strategy: Optional[Strategy] = None,
-                 join_backend: str = "numpy",
-                 late_materialize: bool = True,
-                 engine: str = "single",
-                 dist_shards: Optional[int] = None,
-                 dist_device: Optional[bool] = None,
-                 plan_cache=None,
-                 artifact_cache=None,
-                 degrade: bool = False,
-                 mem_budget_bytes: Optional[int] = None):
-        """`engine="single"` (default) runs the late-materialized join
-        runtime on one host; `engine="distributed"` routes every join
-        through `repro.core.engine_join_dist` — row-sharded cursors,
-        broadcast/all-to-all key exchange over `dist_shards` shards
-        (default: the device mesh when >1 XLA device exists, else 4
-        simulated shards). Results are bit-identical; the single-host
-        engine is the distributed runtime's correctness oracle.
-
-        `plan_cache` (`repro.relational.plancache.PlanCache`) skips
-        planning/annotation work on canonically-identical plans;
-        `artifact_cache` (`repro.core.artifact_cache.ArtifactCache`)
-        replays whole post-transfer slot states on exact repeats
-        (DESIGN.md §12). Both are shared, thread-safe, and optional —
-        the serving layer (`repro.serve`) wires them in.
-
-        `degrade=True` arms the degradation ladder (DESIGN.md §13): a
-        backend failure retries the query on the next-safer rung
-        (distributed → late-numpy → eager oracle; pred-trans-adaptive →
-        pred-trans → no-prefilter), recorded in `ExecStats.degraded`.
-        Off by default so engine-vs-oracle tests can never silently
-        pass via a fallback; the serving layer turns it on.
-
-        `mem_budget_bytes` caps the join phase's payload-gather bytes
-        per query, estimated *before* allocation — exceeding it raises
-        `ResourceExhausted` (which the ladder answers by switching
-        materialization mode) instead of OOMing."""
-        if engine not in ("single", "distributed"):
-            raise ValueError(f"unknown engine {engine!r}; "
-                             "choose 'single' or 'distributed'")
+                 config: Optional[ExecConfig] = None,
+                 **legacy):
+        """Preferred construction: `Executor(catalog, ExecConfig(...))`
+        (the config may also be passed in `strategy`'s position, or as
+        `config=`). The pre-ExecConfig kwargs (`join_backend=`,
+        `engine=`, `dist_shards=`, ... — see `_LEGACY_KWARGS`) keep
+        working through a shim that builds the equivalent config and
+        emits one DeprecationWarning per process. See `ExecConfig` for
+        what every knob means."""
+        if isinstance(strategy, ExecConfig):
+            if config is not None:
+                raise ValueError("pass the ExecConfig once, not twice")
+            config, strategy = strategy, None
+        if config is not None:
+            if strategy is not None or legacy:
+                raise ValueError(
+                    "pass either an ExecConfig or individual kwargs, "
+                    "not both")
+        else:
+            bad = sorted(set(legacy) - set(_LEGACY_KWARGS))
+            if bad:
+                raise TypeError(f"unknown Executor kwargs: {bad}")
+            if legacy:
+                _warn_legacy_kwargs()
+            config = ExecConfig(strategy=strategy, **legacy)
+        self.config = config
         self.catalog = dict(catalog)
-        self.strategy = strategy or NoPredTrans()
-        self.join_backend = join_backend
-        self.late_materialize = late_materialize
-        self.engine = engine
-        self.dist_shards = dist_shards
-        self.dist_device = dist_device
-        self.plan_cache = plan_cache
-        self.artifact_cache = artifact_cache
-        self.degrade = degrade
-        self.mem_budget_bytes = mem_budget_bytes
+        self.strategy = config.strategy or NoPredTrans()
+        self.join_backend = config.join_backend
+        self.late_materialize = config.late_materialize
+        self.engine = config.engine
+        self.dist_shards = config.dist_shards
+        self.dist_device = config.dist_device
+        self.plan_cache = config.plan_cache
+        self.artifact_cache = config.artifact_cache
+        self.sel_history = config.sel_history
+        self.degrade = config.degrade
+        self.mem_budget_bytes = config.mem_budget_bytes
+        self.reorder = config.reorder
+        self.reorder_fn = config.reorder_fn
         self._ctx: Optional[QueryContext] = None
         self._phase = "scan"
-        if engine == "distributed":
+        self._reorder_info: Optional[reorder_mod.ReorderInfo] = None
+        if config.engine == "distributed":
             from repro.core.engine_join_dist import get_distributed_engine
             self.join_engine = get_distributed_engine(
-                dist_shards, join_backend, dist_device)
+                config.dist_shards, config.join_backend,
+                config.dist_device)
         else:
-            self.join_engine = get_join_engine(join_backend)
+            self.join_engine = get_join_engine(config.join_backend)
 
     def _sub_executor(self) -> "Executor":
         # degrade stays off: a subquery failure propagates to the outer
         # query, whose ladder retries the *whole* query on a safer rung
         # (partial per-subquery fallbacks would mix rungs in one result)
-        return Executor(self.catalog, self.strategy,
-                        join_backend=self.join_backend,
-                        late_materialize=self.late_materialize,
-                        engine=self.engine,
-                        dist_shards=self.dist_shards,
-                        dist_device=self.dist_device,
-                        plan_cache=self.plan_cache,
-                        artifact_cache=self.artifact_cache,
-                        mem_budget_bytes=self.mem_budget_bytes)
+        return Executor(self.catalog, self.config.replace(
+            strategy=self.strategy, degrade=False))
 
     def _clone(self, **overrides) -> "Executor":
         """This executor's config with `overrides` applied — the ladder
         builds each fallback rung this way (degrade stays off on the
         clone: the loop in `_execute_degrading` owns the retries)."""
-        kw = dict(strategy=self.strategy,
-                  join_backend=self.join_backend,
-                  late_materialize=self.late_materialize,
-                  engine=self.engine,
-                  dist_shards=self.dist_shards,
-                  dist_device=self.dist_device,
-                  plan_cache=self.plan_cache,
-                  artifact_cache=self.artifact_cache,
-                  mem_budget_bytes=self.mem_budget_bytes)
+        kw = dict(strategy=self.strategy, degrade=False)
         kw.update(overrides)
-        return Executor(self.catalog, **kw)
+        return Executor(self.catalog, self.config.replace(**kw))
 
     # -- degradation ladder (DESIGN.md §13) -----------------------------
     #: strategy rungs, each mapping to its next-safer neighbor; the
@@ -285,6 +458,7 @@ class Executor:
                       ) -> Tuple[Table, ExecStats]:
         self._ctx = ctx
         self._phase = "scan"
+        self._reorder_info = None
         if ctx is not None:
             ctx.check("scan")
         stats = ExecStats(strategy=self.strategy.name)
@@ -299,7 +473,9 @@ class Executor:
         t0 = time.perf_counter()
         leaves = plan.leaves()
         fp = cat_sig = info = slot_key = None
-        if self.plan_cache is not None or self.artifact_cache is not None:
+        if (self.plan_cache is not None
+                or self.artifact_cache is not None
+                or self.sel_history is not None):
             fp, tables = plan_fingerprint(plan)
             if fp is not None:
                 cat_sig = tuple((t, self.catalog[t].version)
@@ -325,6 +501,7 @@ class Executor:
                 stats.transfer = self._replay_transfer(transfer_snap)
                 stats.phase_seconds["scan"] = time.perf_counter() - t0
                 stats.phase_seconds["transfer"] = 0.0
+                self._arm_reorder(leaves, stats.transfer)
                 t0 = time.perf_counter()
                 self._phase = "join"
                 if ctx is not None:
@@ -370,8 +547,14 @@ class Executor:
                                 for e in edges),
                     depths=tuple(vertices[leaf.leaf_id].join_depth
                                  for leaf in leaves)))
+        hints = None
+        if self.sel_history is not None and fp is not None:
+            hints = self.sel_history.get((fp, cat_sig))
         stats.transfer = self.strategy.prefilter(vertices, edges,
-                                                 ctx=ctx)
+                                                 ctx=ctx, hints=hints)
+        if self.sel_history is not None and fp is not None:
+            self.sel_history.observe((fp, cat_sig),
+                                     stats.transfer.edges)
         # compact each vertex once; the transfer phase's composite keys
         # are compacted alongside and seed the join runtime's key cache
         slots: Dict[int, Slot] = {}
@@ -391,6 +574,7 @@ class Executor:
             self._store_slots(slot_key, leaves, slots, stats.transfer,
                               cat_sig)
         stats.phase_seconds["transfer"] = time.perf_counter() - t0
+        self._arm_reorder(leaves, stats.transfer)
 
         # -- phase 2: join ---------------------------------------------
         t0 = time.perf_counter()
@@ -401,6 +585,29 @@ class Executor:
         stats.phase_seconds["join"] = time.perf_counter() - t0
         stats.result_rows = len(result)
         return result, stats
+
+    # -- runtime join ordering (DESIGN §14) -----------------------------
+    def _reorder_active(self) -> bool:
+        """Runtime ordering needs the late-materialized cursor runtime
+        (the eager oracle keeps the plan's static order as the
+        bit-exactness reference) and a strategy without per-join
+        filters (BloomJoin's hook is defined against the static tree's
+        build/probe sides)."""
+        return (self.reorder != "off" and self.late_materialize
+                and not self.strategy.uses_per_join_filter)
+
+    def _arm_reorder(self, leaves, transfer) -> None:
+        """Snapshot the transfer phase's ordering inputs (exact live
+        counts come from the slots at region-execution time; match
+        fractions, domains and cost coefficients come from here).
+        Works on both the cold path and the warm slot-replay path."""
+        if not self._reorder_active():
+            return
+        shards = getattr(self.join_engine, "nshards", None) \
+            if self.engine == "distributed" else None
+        self._reorder_info = reorder_mod.build_info(
+            leaves, transfer, self.catalog,
+            getattr(self.strategy, "costs", None), shards)
 
     # -- slot-state caching (DESIGN §12) --------------------------------
     def _store_slots(self, slot_key, leaves, slots: Dict[int, Slot],
@@ -552,6 +759,16 @@ class Executor:
                 self._ctx.check("join")  # per-join cancellation point
             if not self.late_materialize:
                 return self._exec_join_eager(node, slots, stats)
+            if node.how == "inner" and self._reorder_info is not None:
+                # runtime join ordering (DESIGN §14): the maximal
+                # inner-join region rooted here executes under the
+                # order derived from transfer actuals; interior joins
+                # are consumed by the region, everything else recurses
+                # back through this method
+                region = reorder_mod.collect_region(node)
+                if region is not None:
+                    return reorder_mod.execute_region(self, region,
+                                                      slots, stats)
             probe = self._as_cursor(self._exec_node(node.left, slots,
                                                     stats))
             build = self._as_cursor(self._exec_node(node.right, slots,

@@ -224,3 +224,76 @@ class PlanCache:
                     "misses": self.misses,
                     "hit_rate": self.hits / max(self.hits + self.misses,
                                                 1)}
+
+
+# --------------------------------------------------------------------------
+# per-edge selectivity history (DESIGN §14)
+# --------------------------------------------------------------------------
+
+
+class SelHistory:
+    """Thread-safe LRU of measured transfer-edge selectivities, keyed
+    like the plan cache — (plan fingerprint, catalog signature) — so
+    history only ever feeds a query with identical semantics over
+    identical data. Per key it keeps an EWMA of each
+    (edge_label, pass_idx)'s measured actual removed-row fraction; the
+    executor passes the map to `Strategy.prefilter(hints=...)` on the
+    second query onward, where the adaptive scheduler substitutes it
+    for its KMV estimate (`TransferStats.hints_used` counts the
+    substitutions). Transfer filters have no false negatives, so a
+    hint that flips a gate decision changes survivor sets but never
+    query results."""
+
+    def __init__(self, max_entries: int = 512, alpha: float = 0.3):
+        self.max_entries = int(max_entries)
+        self.alpha = float(alpha)
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[tuple, dict]" = OrderedDict()
+
+    def get(self, key: tuple) -> Optional[dict]:
+        """{(edge_label, pass_idx): ewma_act_sel} for this plan, or
+        None before the first observation."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                return None
+            self._entries.move_to_end(key)
+            return dict(ent)
+
+    def observe(self, key: tuple, edges) -> None:
+        """Fold one query's measured `EdgeDecision` actuals in. Only
+        *applied* edges that actually probed rows carry a measurement;
+        their `act_sel` is conditional on the edge's LIP position,
+        which the (edge, pass) key pins."""
+        obs = {}
+        for d in edges:
+            if d.action != "applied" or d.rows_probed <= 0:
+                continue
+            a = d.act_sel
+            if not isinstance(a, float) or a != a:    # NaN guard
+                continue
+            obs.setdefault((d.edge, d.pass_idx),
+                           min(max(float(a), 0.0), 1.0))
+        if not obs:
+            return
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self._entries[key] = dict(obs)
+            else:
+                for k, a in obs.items():
+                    prev = ent.get(k)
+                    ent[k] = a if prev is None else \
+                        (1.0 - self.alpha) * prev + self.alpha * a
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._entries),
+                    "edges": sum(len(e)
+                                 for e in self._entries.values())}

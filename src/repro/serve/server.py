@@ -42,9 +42,9 @@ from repro.core.errors import (
     DeadlineExceeded, QueryCancelled, QueryContext,
 )
 from repro.core.transfer import BACKEND_AWARE, STRATEGIES, make_strategy
-from repro.relational.executor import ExecStats, Executor
+from repro.relational.executor import ExecConfig, ExecStats, Executor
 from repro.relational.plan import PlanNode
-from repro.relational.plancache import PlanCache
+from repro.relational.plancache import PlanCache, SelHistory
 from repro.relational.table import Table
 
 # strategies whose constructor accepts the shared artifact cache (the
@@ -79,6 +79,9 @@ class ServeConfig:
     degrade: bool = True
     default_timeout: Optional[float] = None
     mem_budget_bytes: Optional[int] = None
+    # runtime join reordering (DESIGN.md §14): "auto" reorders wherever
+    # the executor supports it, "off" pins the plan's static order
+    reorder: str = "auto"
 
     def __post_init__(self):
         if self.admission not in ("block", "reject"):
@@ -86,6 +89,9 @@ class ServeConfig:
                              "choose 'block' or 'reject'")
         if self.strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}")
+        if self.reorder not in ("auto", "on", "off"):
+            raise ValueError(f"unknown reorder {self.reorder!r}; "
+                             "choose 'auto', 'on' or 'off'")
 
 
 class ServerMetrics:
@@ -109,6 +115,9 @@ class ServerMetrics:
         self.timeouts = 0
         self.cancellations = 0
         self.degradations = 0
+        # runtime join reordering (DESIGN.md §14)
+        self.reordered = 0              # queries whose order changed
+        self._qerr: List[Tuple[float, float, int]] = []
 
     def record_submit(self) -> None:
         with self._lock:
@@ -119,10 +128,14 @@ class ServerMetrics:
             self.rejected += 1
 
     def record_done(self, tag: str, seconds: float,
-                    stats: Optional[ExecStats],
+                    report: Optional[dict],
                     error: Optional[BaseException] = None) -> None:
+        """Fold one finished query in. `report` is the structured
+        `ExecStats.report()` dict (None for a failed query) — the one
+        stats surface the server reads; it never pokes ExecStats
+        internals."""
         with self._lock:
-            if stats is None:
+            if report is None:
                 self.failed += 1
                 if isinstance(error, DeadlineExceeded):
                     self.timeouts += 1
@@ -132,11 +145,18 @@ class ServerMetrics:
                     self.errors += 1
                 return
             self.completed += 1
-            if stats.degraded:
+            if report.get("degraded"):
                 self.degradations += 1
             self._lat.setdefault(tag, []).append(seconds)
-            if stats.transfer is not None and stats.transfer.from_cache:
+            tr = report.get("transfer")
+            if tr is not None and tr.get("from_cache"):
                 self.warm_replays += 1
+            if report.get("reordered"):
+                self.reordered += 1
+            qe = report.get("qerror") or {}
+            if qe.get("n"):
+                self._qerr.append((float(qe["geomean"]),
+                                   float(qe["max"]), int(qe["n"])))
 
     @staticmethod
     def _quantiles(lat: List[float]) -> dict:
@@ -155,7 +175,19 @@ class ServerMetrics:
                    "warm_replays": self.warm_replays,
                    "errors": self.errors, "timeouts": self.timeouts,
                    "cancellations": self.cancellations,
-                   "degradations": self.degradations}
+                   "degradations": self.degradations,
+                   "reordered": self.reordered}
+            if self._qerr:
+                # edge-count-weighted geomean across queries; max is
+                # the worst single-edge misestimate seen anywhere
+                logs = sum(n * np.log(max(g, 1.0))
+                           for g, _m, n in self._qerr)
+                edges = sum(n for _g, _m, n in self._qerr)
+                out["qerror"] = {
+                    "queries": len(self._qerr),
+                    "edges": int(edges),
+                    "max": max(m for _g, m, _n in self._qerr),
+                    "geomean": float(np.exp(logs / max(edges, 1)))}
             if every:
                 out["latency"] = self._quantiles(every)
                 out["per_tag"] = {t: self._quantiles(lat)
@@ -193,6 +225,7 @@ class QueryServer:
         self.plan_cache = PlanCache(self.config.plan_cache_entries)
         self.artifact_cache = ArtifactCache(
             self.config.artifact_cache_bytes)
+        self.sel_history = SelHistory()
         self.metrics = ServerMetrics()
         self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue(
             self.config.max_queue)
@@ -221,16 +254,18 @@ class QueryServer:
         # are the shared (and individually locked) parts
         with self._catalog_lock:
             catalog = dict(self.catalog)
-        ex = Executor(catalog,
-                      self._make_strategy(req.strategy, req.strategy_kw),
-                      join_backend=self.config.join_backend,
-                      late_materialize=self.config.late_materialize,
-                      engine=self.config.engine,
-                      plan_cache=self.plan_cache,
-                      artifact_cache=self.artifact_cache,
-                      degrade=self.config.degrade,
-                      mem_budget_bytes=self.config.mem_budget_bytes)
-        return ex.execute(req.plan, ctx=req.ctx)
+        cfg = ExecConfig(
+            strategy=self._make_strategy(req.strategy, req.strategy_kw),
+            join_backend=self.config.join_backend,
+            late_materialize=self.config.late_materialize,
+            engine=self.config.engine,
+            plan_cache=self.plan_cache,
+            artifact_cache=self.artifact_cache,
+            sel_history=self.sel_history,
+            degrade=self.config.degrade,
+            mem_budget_bytes=self.config.mem_budget_bytes,
+            reorder=self.config.reorder)
+        return Executor(catalog, cfg).execute(req.plan, ctx=req.ctx)
 
     # -- worker loop -------------------------------------------------------
     def _worker(self) -> None:
@@ -256,7 +291,7 @@ class QueryServer:
             else:
                 self.metrics.record_done(req.tag,
                                          time.perf_counter() - t0,
-                                         result[1])
+                                         result[1].report())
                 req.future.set_result(result)
             finally:
                 self._queue.task_done()
@@ -359,7 +394,8 @@ class QueryServer:
     def metrics_snapshot(self) -> dict:
         return {"server": self.metrics.snapshot(),
                 "plan_cache": self.plan_cache.snapshot(),
-                "artifact_cache": self.artifact_cache.snapshot()}
+                "artifact_cache": self.artifact_cache.snapshot(),
+                "sel_history": self.sel_history.snapshot()}
 
     def _drain_pending(self) -> int:
         """Pop every queued request and cancel its Future (shutdown

@@ -136,13 +136,23 @@ def q5(sf: float, join_order: int = 0) -> PlanNode:
         j = Join(j, orders, ["l_orderkey"], ["o_orderkey"])
         j = Join(j, cust, ["o_custkey", "s_nationkey"],
                  ["c_custkey", "c_nationkey"])
-    else:
+    elif join_order == 2:
         # fact-table first (adversarial order)
         j = Join(li, orders, ["l_orderkey"], ["o_orderkey"])
         j = Join(j, cust, ["o_custkey"], ["c_custkey"])
         j = Join(j, supp, ["l_suppkey", "c_nationkey"],
                  ["s_suppkey", "s_nationkey"])
         j = Join(j, nat, ["s_nationkey"], ["n_nationkey"])
+        j = Join(j, reg, ["n_regionkey"], ["r_regionkey"])
+    else:
+        # many-to-many hub first (worst case): customer x supplier per
+        # nation, cross products that only collapse once lineitem and
+        # orders finally link the two sides
+        j = Join(cust, nat, ["c_nationkey"], ["n_nationkey"])
+        j = Join(j, supp, ["n_nationkey"], ["s_nationkey"])
+        j = Join(j, li, ["s_suppkey"], ["l_suppkey"])
+        j = Join(j, orders, ["l_orderkey", "c_custkey"],
+                 ["o_orderkey", "o_custkey"])
         j = Join(j, reg, ["n_regionkey"], ["r_regionkey"])
 
     j = Project(j, {

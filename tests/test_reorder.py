@@ -1,0 +1,261 @@
+"""Runtime join ordering from transfer actuals (DESIGN.md §14).
+
+Bit-exactness: any runtime-chosen (or adversarially injected) join
+order must reproduce the eager oracle's bytes on every TPC-H query —
+the engine contract says order is an execution detail, never a result
+property. Plus the ExecConfig surface (validation, legacy-kwargs shim),
+the unified `ExecStats.report()` dict, q-error accounting, and the
+history-corrected selectivity feedback loop.
+"""
+import json
+import math
+import warnings
+
+import pytest
+
+from repro.core.transfer import TransferCosts, make_strategy
+from repro.relational import ExecConfig, Executor
+from repro.relational import executor as executor_mod
+from repro.relational import reorder
+from repro.relational.plancache import SelHistory
+from repro.relational.table import table_digest
+from repro.tpch import QUERIES, build_query
+
+SF = 0.01
+WIDE = (5, 7, 8, 9, 21)      # widest join graphs in the suite
+
+
+def run(cat, qn, strategy="pred-trans", **cfg_kw):
+    if isinstance(strategy, str):
+        strategy = make_strategy(strategy)
+    cfg = ExecConfig(strategy=strategy, **cfg_kw)
+    return Executor(cat, cfg).execute(build_query(qn, sf=SF))
+
+
+@pytest.fixture(scope="module")
+def eager_digests(tpch_small):
+    """The eager oracle never reorders — its bytes are the reference."""
+    return {qn: table_digest(run(tpch_small, qn,
+                                 late_materialize=False)[0])
+            for qn in sorted(QUERIES)}
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qn", sorted(QUERIES))
+def test_runtime_reorder_bit_exact(tpch_small, eager_digests, qn):
+    """Runtime reorder on (the default): every query, both transfer
+    strategies, reproduces the eager oracle bytes; the widest join
+    graphs additionally through the distributed engine."""
+    for strat in ("pred-trans", "pred-trans-adaptive"):
+        res, _ = run(tpch_small, qn, strategy=strat)
+        assert table_digest(res) == eager_digests[qn], (qn, strat)
+    if qn in WIDE:
+        res, _ = run(tpch_small, qn, engine="distributed")
+        assert table_digest(res) == eager_digests[qn], (qn, "dist")
+
+
+@pytest.mark.parametrize("qn", WIDE)
+@pytest.mark.parametrize("seed", (11, 23, 47))
+def test_any_permutation_bit_exact(tpch_small, eager_digests, qn, seed):
+    """Property test: a seeded pseudo-random *valid* permutation forced
+    through `reorder_fn` still reproduces the eager oracle bytes — the
+    canonical-order restoration is order-independent."""
+    res, stats = run(tpch_small, qn,
+                     reorder_fn=lambda m: reorder.seeded_order(m, seed))
+    assert table_digest(res) == eager_digests[qn], (qn, seed)
+    assert any(e["source"] == "fn" or e["fallback"]
+               for e in stats.report()["join_order"])
+
+
+# ---------------------------------------------------------------------------
+# the ordering decision itself
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_order_beats_adversarial_static(tpch_small):
+    """Forced-misestimate scenario: `build_query(5, join_order=3)` puts
+    the many-to-many customer-nation-supplier hub first — cross
+    products per nation that only collapse once lineitem and orders
+    link the two sides, the classic independence-assumption
+    misestimate. The runtime order derived from transfer actuals must
+    (a) overrule that spine with strictly less intermediate-join
+    traffic, (b) not lose to any adversarial permutation, and (c) stay
+    bit-exact against the *same plan's* eager oracle (a different join
+    order sums revenue in a different float order, so plans are only
+    comparable to themselves). Conversely a sane spine — even the
+    fact-table-first one, post-transfer — models inside the hysteresis
+    band and is kept verbatim: runtime ordering is insurance against
+    misestimates, not basis-point shaving on an already-good plan."""
+    def traffic(st):
+        return sum(j.out_rows for j in st.joins)
+
+    def go(jo, **cfg_kw):
+        cfg = ExecConfig(strategy=make_strategy("pred-trans"), **cfg_kw)
+        return Executor(tpch_small, cfg).execute(
+            build_query(5, sf=SF, join_order=jo))
+
+    oracle, _ = go(3, late_materialize=False)
+    res, st_runtime = go(3)
+    assert st_runtime.report()["reordered"] is True
+    assert table_digest(res) == table_digest(oracle)
+    _, st_static = go(3, reorder="off")
+    assert traffic(st_runtime) < traffic(st_static), \
+        (traffic(st_runtime), traffic(st_static))
+    # the sane default spine is kept (spine-keep hysteresis), and the
+    # overruled adversarial plan recovers to within a few percent of
+    # it (the plans carry different transfer graphs, so their exact
+    # traffics are not comparable row for row)
+    _, st_good = go(0)
+    assert st_good.report()["reordered"] is False
+    assert traffic(st_runtime) <= 1.1 * traffic(st_good)
+    for seed in (11, 23, 47):
+        _, st_adv = go(3, reorder_fn=lambda m: reorder.seeded_order(
+            m, seed))
+        assert traffic(st_runtime) <= traffic(st_adv), seed
+
+
+def test_join_order_recorded(tpch_small):
+    _, st = run(tpch_small, 5)
+    entries = st.report()["join_order"]
+    assert entries, "Q5 has a reorderable inner-join region"
+    e = entries[0]
+    k = len(e["units"])
+    assert sorted(e["chosen"]) == list(range(k))
+    assert e["changed"] == (e["chosen"] != list(range(k)))
+    assert e["source"] == "greedy" and e["fallback"] is None
+    assert len(e["est_rows"]) == k - 1
+
+    _, st_off = run(tpch_small, 5, reorder="off")
+    rep = st_off.report()
+    assert rep["join_order"] == [] and rep["reordered"] is False
+
+
+def test_validate_and_seeded_orders():
+    adj = {0: {1}, 1: {0, 2}, 2: {1}}
+    assert reorder.validate_order([1, 0, 2], 3, adj) == [1, 0, 2]
+    with pytest.raises(ValueError):
+        reorder.validate_order([0, 2, 1], 3, adj)   # cartesian step
+    with pytest.raises(ValueError):
+        reorder.validate_order([0, 1], 3, adj)      # not a permutation
+
+    meta = {"names": list("abcd"), "rows": [10, 20, 30, 40],
+            "edges": [(0, 1), (1, 2), (2, 3)], "static": [0, 1, 2, 3]}
+    adj4 = {0: {1}, 1: {0, 2}, 2: {1, 3}, 3: {2}}
+    seen = set()
+    for s in range(8):
+        order = reorder.seeded_order(meta, s)
+        assert order == reorder.seeded_order(meta, s)   # deterministic
+        reorder.validate_order(order, 4, adj4)
+        seen.add(tuple(order))
+    assert len(seen) > 1
+
+
+# ---------------------------------------------------------------------------
+# ExecConfig surface
+# ---------------------------------------------------------------------------
+
+
+def test_execconfig_validation(tpch_small):
+    with pytest.raises(ValueError):
+        ExecConfig(engine="cluster")
+    with pytest.raises(ValueError):
+        ExecConfig(reorder="maybe")
+    with pytest.raises(ValueError):
+        ExecConfig(dist_shards=0)
+    with pytest.raises(ValueError):
+        ExecConfig(mem_budget_bytes=0)
+    with pytest.raises(TypeError):
+        Executor(tpch_small, make_strategy("pred-trans"), bogus_knob=1)
+    with pytest.raises(ValueError):
+        Executor(tpch_small, ExecConfig(), config=ExecConfig())
+    with pytest.raises(ValueError):
+        Executor(tpch_small, config=ExecConfig(), late_materialize=False)
+
+
+def test_legacy_kwargs_shim_equivalent_and_warns_once(tpch_small,
+                                                      eager_digests):
+    strat = make_strategy("pred-trans")
+    executor_mod._reset_legacy_warning()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ex = Executor(tpch_small, strat, late_materialize=True,
+                      reorder="off")
+    assert sum(issubclass(x.category, DeprecationWarning)
+               for x in w) == 1
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        Executor(tpch_small, strat, reorder="off")   # second use: silent
+    assert not any(issubclass(x.category, DeprecationWarning)
+                   for x in w2)
+    # the shim builds the exact same config the explicit route does
+    assert ex.config == ExecConfig(strategy=strat, late_materialize=True,
+                                   reorder="off")
+    res, _ = ex.execute(build_query(5, sf=SF))
+    assert table_digest(res) == eager_digests[5]
+
+
+# ---------------------------------------------------------------------------
+# report() + q-error accounting
+# ---------------------------------------------------------------------------
+
+
+def test_report_structure_json_safe(tpch_small):
+    _, st = run(tpch_small, 5, strategy="pred-trans-adaptive")
+    rep = st.report()
+    json.dumps(rep)                       # JSON-safe end to end
+    for key in ("strategy", "phase_seconds", "total_seconds",
+                "result_rows", "join", "join_order", "reordered",
+                "transfer", "edges", "qerror", "degraded", "dist"):
+        assert key in rep, key
+    assert rep["strategy"] == "pred-trans-adaptive"
+    assert rep["transfer"]["strategy"] == "pred-trans-adaptive"
+    assert isinstance(rep["transfer"]["decisions"], dict)
+    for e in rep["edges"]:
+        assert e["qerror"] >= 1.0
+        for v in e.values():              # NaN maps to None, never leaks
+            assert not (isinstance(v, float) and math.isnan(v))
+    qe = rep["qerror"]
+    assert set(qe) == {"n", "max", "geomean"}
+    if qe["n"]:
+        assert qe["max"] >= qe["geomean"] >= 1.0
+
+
+@pytest.mark.parametrize("qn", sorted(QUERIES))
+def test_act_sel_nan_free(tpch_small, qn):
+    """Min-max short-circuits and early-exit skips must never leave a
+    NaN actual selectivity behind — q-error stays computable on every
+    edge of every query."""
+    costs = TransferCosts(probe=45, build=45, join_small=500,
+                          join_large=500)
+    _, st = run(tpch_small, qn,
+                strategy=make_strategy("pred-trans-adaptive",
+                                       costs=costs))
+    for d in st.transfer_edges():
+        assert not math.isnan(d.act_sel), (qn, d.edge, d.action)
+
+
+def test_sel_history_feeds_second_run(tpch_small):
+    """Second-query-onward estimate correction: with join costs forcing
+    the adaptive gate to apply edges, run 1 populates the history and
+    run 2 substitutes measured selectivities for KMV estimates
+    (`hints_used > 0`) — with bit-identical results (transfer filters
+    are sound, so gate flips never change bytes)."""
+    costs = TransferCosts(probe=45, build=45, join_small=500,
+                          join_large=500)
+    hist = SelHistory()
+    digests, hints = [], []
+    for _ in range(2):
+        cfg = ExecConfig(
+            strategy=make_strategy("pred-trans-adaptive", costs=costs),
+            sel_history=hist)
+        res, st = Executor(tpch_small, cfg).execute(
+            build_query(5, sf=SF))
+        digests.append(table_digest(res))
+        hints.append(st.report()["transfer"]["hints_used"])
+    assert len(hist) > 0
+    assert hints[0] == 0 and hints[1] > 0
+    assert digests[0] == digests[1]
