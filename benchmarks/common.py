@@ -1,9 +1,28 @@
-"""Shared benchmark utilities: catalog cache, timed strategy runs."""
+"""Shared benchmark utilities: catalog cache, timed strategy runs,
+GC-fenced timing windows."""
 from __future__ import annotations
 
+import contextlib
+import gc
 from typing import Dict, Optional
 
 _CATALOGS: Dict[float, dict] = {}
+
+
+@contextlib.contextmanager
+def gc_fence():
+    """GC-fenced timing window: collect, then disable the collector for
+    the duration — a GC pause inside one 30-140ms measured run is a
+    ±10% ratio outlier. Callers `gc.collect()` between reps themselves
+    if the window spans several; the fence re-enables on exit either
+    way. Every timing loop in run.py / serving_bench / reorder_bench
+    measures inside one of these, so their numbers are comparable."""
+    gc.collect()
+    gc.disable()
+    try:
+        yield
+    finally:
+        gc.enable()
 
 STRATEGIES = ["no-pred-trans", "bloom-join", "yannakakis", "pred-trans",
               "pred-trans-opt", "pred-trans-adaptive"]

@@ -87,6 +87,9 @@ def calibrate(n: int = 262_144, reps: int = 3):
 
       probe — hash + Bloom-probe one key column against a filter;
       build — hash + build a filter from a key column;
+      fused — one fused vertex scan (probe incoming filter -> build
+              outgoing filter, DESIGN.md §15): the per-row cost of the
+              device-resident transfer step, vs probe+build separately;
       join  — sorted equi-join cost per input row (build + probe rows),
               the per-row proxy for the downstream work a removed row
               saves.
@@ -133,11 +136,23 @@ def calibrate(n: int = 262_144, reps: int = 3):
             # is all overhead (TransferCosts.fixed)
             return ready(eng.probe_filter(filt, eng.keys(tiny)))
 
+        from repro.core import bloom
+        nblocks = bloom.blocks_for(nb)
+        mask = np.ones(nb, bool)
+        out_keys = keys * 7 + 3
+
+        def fused_fresh():
+            scan = eng.begin(mask)
+            scan.probe([(filt.words, eng.keys(keys))])
+            return ready(scan.build(eng.keys(out_keys), nblocks))
+
         dt_p, _ = _time(probe_fresh, reps=reps)
         dt_b, _ = _time(build_fresh, reps=reps)
+        dt_x, _ = _time(fused_fresh, reps=reps)
         dt_f, _ = _time(probe_tiny, reps=reps)
         out[backend] = {"probe": dt_p / nb * 1e9,
                         "build": dt_b / nb * 1e9,
+                        "fused": dt_x / nb * 1e9,
                         "fixed": dt_f * 1e9,
                         "n": nb}
 
@@ -152,9 +167,25 @@ def calibrate(n: int = 262_144, reps: int = 3):
 
     join_small = join_rate(min(1 << 14, n), min(1 << 16, n * 4))
     join_large = join_rate(min(1 << 17, n), min(1 << 19, n * 4))
+
+    def segjoin_device_rate(nb, npr, match=0.25):
+        # the device sorted-segment join (DESIGN.md §15) at the same
+        # selectivity as join_rate: one d2h scalar per call by design,
+        # so the coefficient is dominated by the on-device sort
+        from repro.kernels.semijoin import ops as sj
+        dom = int(nb / match)
+        bk = rng.choice(dom, nb, replace=False).astype(np.int64)
+        pk = rng.integers(0, dom, npr).astype(np.int64)
+        dt, _ = _time(
+            lambda: jax.block_until_ready(
+                sj.segment_join_device(bk, pk)[1]), reps=reps)
+        return dt / npr * 1e9
+
+    segjoin_dev = segjoin_device_rate(min(1 << 14, n), min(1 << 16, n * 4))
     for backend in out:
         out[backend]["join_small"] = join_small
         out[backend]["join_large"] = join_large
+        out[backend]["segjoin_device"] = segjoin_dev
     return out
 
 
@@ -244,10 +275,12 @@ def main(n: int = 1_000_000):
 
     cal = calibrate()
     print("\ncalibration (adaptive scheduler, ns/row):")
-    print("backend,probe,build,join_small,join_large")
+    print("backend,probe,build,fused,join_small,join_large,"
+          "segjoin_device")
     for backend, c in cal.items():
         print(f"{backend},{c['probe']:.1f},{c['build']:.1f},"
-              f"{c['join_small']:.1f},{c['join_large']:.1f}")
+              f"{c['fused']:.1f},{c['join_small']:.1f},"
+              f"{c['join_large']:.1f},{c['segjoin_device']:.1f}")
     xo = join_crossover()
     print("\njoin crossover (build_n,sorted_ns_row,radix_ns_row):")
     for nb, s, r in xo["rows"]:

@@ -67,16 +67,14 @@ def bench_query(sf: float, qn: int, repeat: int = 5) -> dict:
 
     secs = {name: [] for name in modes}
     import gc
-    gc.collect()
-    gc.disable()       # a GC pause inside one 30-140ms run is a ±10%
-    try:               # ratio outlier; collect between windows instead
+
+    from benchmarks.common import gc_fence
+    with gc_fence():
         for _ in range(repeat):
             for name, kw in modes.items():  # interleaved: drift-immune
                 _, stats = run_query(sf, qn, STRATEGY, warm=0, **kw)
                 secs[name].append(stats.total_seconds)
             gc.collect()
-    finally:
-        gc.enable()
 
     def med(v):
         return float(np.median(v))

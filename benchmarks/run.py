@@ -11,6 +11,7 @@ tracked across PRs — see BENCH_tpch.json."""
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import os
 import sys
@@ -26,15 +27,17 @@ def q5_transfer_split(sf: float, backends=("numpy", "jax")):
     warm runs) — the engine hot path the perf gate watches. Backends
     are interleaved round-robin so a co-tenant load burst lands on all
     of them and their *ratios* stay drift-immune."""
-    from benchmarks.common import run_query
+    from benchmarks.common import gc_fence, run_query
     for backend in backends:
         run_query(sf, 5, "pred-trans", backend=backend)   # warm caches
     ts = {backend: [] for backend in backends}
-    for _ in range(5):
-        for backend in backends:
-            _, stats = run_query(sf, 5, "pred-trans", warm=0,
-                                 backend=backend)
-            ts[backend].append(stats.transfer.seconds)
+    with gc_fence():
+        for _ in range(5):
+            for backend in backends:
+                _, stats = run_query(sf, 5, "pred-trans", warm=0,
+                                     backend=backend)
+                ts[backend].append(stats.transfer.seconds)
+            gc.collect()
     return {backend: sorted(v)[len(v) // 2] for backend, v in ts.items()}
 
 
@@ -46,20 +49,22 @@ def measure_paired_speedups(sf: float, repeat: int = 5):
     Pairing makes each ratio drift-immune (a load burst hits both
     sides); the *median* over `repeat` pairs discards the outlier pairs
     a burst lands between. Seconds keep the minimum (stable envelope)."""
-    from benchmarks.common import run_query
+    from benchmarks.common import gc_fence, run_query
     from repro.tpch import QUERIES
     out = {}
     for qn in sorted(QUERIES):
         run_query(sf, qn, "no-pred-trans", warm=0)        # warm
         run_query(sf, qn, "pred-trans", warm=0)
         ratios, pts = [], []
-        for _ in range(repeat):
-            t_npt = run_query(sf, qn, "no-pred-trans",
-                              warm=0)[1].total_seconds
-            t_pt = run_query(sf, qn, "pred-trans",
-                             warm=0)[1].total_seconds
-            pts.append(t_pt)
-            ratios.append(t_npt / t_pt)
+        with gc_fence():
+            for _ in range(repeat):
+                t_npt = run_query(sf, qn, "no-pred-trans",
+                                  warm=0)[1].total_seconds
+                t_pt = run_query(sf, qn, "pred-trans",
+                                 warm=0)[1].total_seconds
+                pts.append(t_pt)
+                ratios.append(t_npt / t_pt)
+                gc.collect()
         ratios.sort()
         out[f"Q{qn}"] = {"pred_trans_seconds": min(pts),
                          "speedup": ratios[len(ratios) // 2]}
@@ -75,23 +80,25 @@ def measure_adaptive(sf: float, repeat: int = 7):
     queries sit within a few percent of baseline, where a 5-pair
     median still flips on one co-tenant burst); seconds keep the
     minimum (stable envelope)."""
-    from benchmarks.common import run_query
+    from benchmarks.common import gc_fence, run_query
     from repro.tpch import QUERIES
     out = {}
     for qn in sorted(QUERIES):
         for s in ("no-pred-trans", "pred-trans", "pred-trans-adaptive"):
             run_query(sf, qn, s, warm=0)                  # warm
         sp, ratio, secs = [], [], []
-        for _ in range(repeat):
-            t_npt = run_query(sf, qn, "no-pred-trans",
-                              warm=0)[1].total_seconds
-            t_pt = run_query(sf, qn, "pred-trans",
-                             warm=0)[1].total_seconds
-            t_ad = run_query(sf, qn, "pred-trans-adaptive",
-                             warm=0)[1].total_seconds
-            secs.append(t_ad)
-            sp.append(t_npt / t_ad)
-            ratio.append(t_ad / t_pt)
+        with gc_fence():
+            for _ in range(repeat):
+                t_npt = run_query(sf, qn, "no-pred-trans",
+                                  warm=0)[1].total_seconds
+                t_pt = run_query(sf, qn, "pred-trans",
+                                 warm=0)[1].total_seconds
+                t_ad = run_query(sf, qn, "pred-trans-adaptive",
+                                 warm=0)[1].total_seconds
+                secs.append(t_ad)
+                sp.append(t_npt / t_ad)
+                ratio.append(t_ad / t_pt)
+                gc.collect()
         sp.sort()
         ratio.sort()
         out[f"Q{qn}"] = {"adaptive_seconds": min(secs),
@@ -126,6 +133,50 @@ def adaptive_decisions(sf: float):
         jorder[q] = {"reordered": rep["reordered"],
                      "regions": rep["join_order"]}
     return {"decisions": dec, "qerror": qerr, "join_order": jorder}
+
+
+def device_round_trips(sf: float):
+    """Host<->device round trips per query: the device-resident data
+    plane (DESIGN.md §15, `ExecConfig.device="on"`) vs the legacy
+    per-op path (`"off"`), both on the jax engines and both counted
+    through `repro.core.device_plane`, so the comparison is symmetric.
+    A round trip here is any boundary crossing (h2d + d2h syncs) — the
+    serialized-dependency count that bounds dispatch latency. The
+    counts are structural (a
+    function of the plan and the survivor cardinalities, not the
+    clock), so the on<off gate is drift-immune by construction and
+    needs no baseline. Each query's on/off results are md5-compared
+    first — a round-trip win backed by wrong rows is worthless."""
+    from benchmarks.common import catalog
+    from repro.core.transfer import make_strategy
+    from repro.relational import ExecConfig, Executor
+    from repro.relational.table import table_digest
+    from repro.tpch import QUERIES, build_query
+    cat = catalog(sf)
+    per = {}
+    tot = {"on": 0, "off": 0}
+    for qn in sorted(QUERIES):
+        row, digest = {}, {}
+        for mode in ("on", "off"):
+            cfg = ExecConfig(
+                strategy=make_strategy("pred-trans", backend="jax",
+                                       device_resident=(mode == "on")),
+                join_backend="jax", device=mode)
+            res, stats = Executor(cat, cfg).execute(
+                build_query(qn, sf=sf))
+            digest[mode] = table_digest(res)
+            row[mode] = stats.report()["device"]["round_trips"]
+            tot[mode] += row[mode]
+        if digest["on"] != digest["off"]:
+            raise AssertionError(
+                f"Q{qn}: device on/off results diverged")
+        per[f"Q{qn}"] = row
+    print(f"{'query':>6} {'rt on':>6} {'rt off':>7}")
+    for q, r in per.items():
+        print(f"{q:>6} {r['on']:>6} {r['off']:>7}")
+    print(f"{'total':>6} {tot['on']:>6} {tot['off']:>7}")
+    return {"round_trips_on": tot["on"], "round_trips_off": tot["off"],
+            "per_query": per}
 
 
 def run_check(sf: float, baseline_path: str, rel_tol: float = 0.10,
@@ -265,6 +316,21 @@ def run_check(sf: float, baseline_path: str, rel_tol: float = 0.10,
               file=sys.stderr)
         failures.append("serving slot-cache hits")
 
+    # device data-plane gate (DESIGN §15): with the fused
+    # transfer->join path on, the 20-query aggregate of host<->device
+    # round trips must beat the legacy per-op path, bit-exactness
+    # included. Counts, not clocks — drift-immune, no baseline needed.
+    # Runs on the small catalog regardless of --sf: round trips scale
+    # with plan shape, not data size.
+    print("\n===== device data plane (gate) =====", file=sys.stderr)
+    dev = device_round_trips(0.01)
+    on_rt, off_rt = dev["round_trips_on"], dev["round_trips_off"]
+    tag = "FAIL" if on_rt >= off_rt else "ok  "
+    print(f"check: {tag} device round trips on={on_rt} < off={off_rt}",
+          file=sys.stderr)
+    if on_rt >= off_rt:
+        failures.append("device round trips")
+
     # chaos gate: correctness, not timing — every fault point must fire,
     # degrade (or self-heal), and leave zero wrong results. Runs on the
     # small catalog regardless of --sf: the gate checks ladder
@@ -333,6 +399,7 @@ def main() -> None:
         "serving": lambda: serving_bench.main(args.sf),
         "chaos": lambda: chaos_bench.main(args.sf),
         "reorder": lambda: reorder_bench.main(args.sf),
+        "device": lambda: device_round_trips(args.sf),
     }
     if args.only:
         names = args.only.split(",")
@@ -400,6 +467,8 @@ def main() -> None:
             doc["chaos"] = results["chaos"]
         if "reorder" in results:
             doc["reorder"] = results["reorder"]
+        if "device" in results:
+            doc["device_plane"] = results["device"]
         tmp = args.json + ".tmp"
         with open(tmp, "w") as f:       # atomic: a crash mid-dump must
             json.dump(doc, f, indent=1, sort_keys=True)

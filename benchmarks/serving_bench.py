@@ -68,13 +68,16 @@ def _run_pass(server, schedule, sf: float, digests):
 
 def bench_concurrency(cat, sf: float, workers: int, schedule,
                       digests, pairs: int):
+    from benchmarks.common import gc_fence
     from repro.serve import QueryServer, ServeConfig
     ratios, colds, warms = [], [], []
     snap = None
     for _ in range(pairs):
         cfg = ServeConfig(strategy=STRATEGY, workers=workers,
                           max_queue=0)
-        with QueryServer(cat, cfg) as srv:
+        with QueryServer(cat, cfg) as srv, gc_fence():
+            # one fence spans the pair: a GC pause landing in only one
+            # pass would skew the gated cold/warm ratio
             t_cold = _run_pass(srv, schedule, sf, digests)
             t_warm = _run_pass(srv, schedule, sf, digests)
             ratios.append(t_cold / t_warm)

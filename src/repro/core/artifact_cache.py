@@ -1,6 +1,6 @@
 """Cross-query transfer-artifact cache (DESIGN.md §12).
 
-A thread-safe, byte-bounded LRU shared by every executor a serving
+A thread-safe, byte-bounded cache shared by every executor a serving
 session runs. Three artifact kinds live here, distinguished by the
 first element of the key tuple:
 
@@ -28,6 +28,14 @@ mismatch — bit rot, an in-place mutation bug, or an injected
 counter, and reports a miss, so a poisoned entry self-heals by
 recompute instead of serving wrong bytes. `verify_on_hit=False` turns
 the guard off for benchmarking the bare lookup.
+
+Eviction is cost-to-rebuild weighted LRU, not pure LRU: `put` records
+`cost_ns` — the measured (or `TransferCosts`-estimated) time the
+artifact took to build — and when the byte budget overflows, the cache
+scans a small window at the LRU end and drops the entry with the
+lowest rebuild cost per byte. A huge-but-instant artifact yields before
+a small-but-expensive one of similar staleness; recency still bounds
+the scan so a hot expensive entry is never at risk.
 """
 from __future__ import annotations
 
@@ -46,6 +54,9 @@ _FULL_HASH_BYTES = 64 << 10
 #: ... larger ones contribute head + tail samples of this size (plus
 #: dtype/shape), bounding verify cost per hit regardless of entry size
 _SAMPLE_BYTES = 32 << 10
+#: eviction scans this many entries at the LRU end and drops the one
+#: cheapest to rebuild per byte (cost-to-rebuild weighted LRU)
+_EVICT_WINDOW = 8
 
 
 def _hash_array(h, a: np.ndarray) -> None:
@@ -113,8 +124,9 @@ class ArtifactCache:
         self.max_bytes = int(max_bytes)
         self.verify_on_hit = verify_on_hit
         self._lock = threading.Lock()
+        # key -> (value, nbytes, versions, checksum, cost_ns)
         self._entries: \
-            "OrderedDict[tuple, Tuple[object, int, frozenset, object]]" \
+            "OrderedDict[tuple, Tuple[object, int, frozenset, object, object]]" \
             = OrderedDict()
         self._bytes = 0
         self._by_version: Dict[int, Set[tuple]] = {}
@@ -134,7 +146,7 @@ class ArtifactCache:
                 self._misses[kind] = self._misses.get(kind, 0) + 1
                 return None
             self._entries.move_to_end(key)
-        value, _, _, stored = ent
+        value, _, _, stored, _ = ent
         if self.verify_on_hit:
             # outside the lock: verify cost must not serialize
             # concurrent warm hits across worker threads
@@ -160,7 +172,13 @@ class ArtifactCache:
         return value
 
     def put(self, key: tuple, value, nbytes: int,
-            versions: Iterable[int] = ()) -> None:
+            versions: Iterable[int] = (),
+            cost_ns: Optional[int] = None) -> None:
+        """Store `value` under `key`. `cost_ns` is the time the artifact
+        took to build (measured, or estimated from calibrated
+        `TransferCosts` coefficients) — it weights eviction so expensive
+        artifacts outlive cheap ones of equal staleness. None means
+        unknown, treated as free to rebuild (evicted first)."""
         kind = key[0]
         versions = frozenset(int(v) for v in versions)
         nbytes = int(nbytes)
@@ -172,16 +190,33 @@ class ArtifactCache:
             if old is not None:
                 self._bytes -= old[1]
                 self._unindex(key, old[2])
-            self._entries[key] = (value, nbytes, versions, checksum)
+            self._entries[key] = (value, nbytes, versions, checksum,
+                                  None if cost_ns is None else int(cost_ns))
             self._bytes += nbytes
             for v in versions:
                 self._by_version.setdefault(v, set()).add(key)
             self._puts[kind] = self._puts.get(kind, 0) + 1
             while self._bytes > self.max_bytes and self._entries:
-                k, (_, nb, vers, _) = self._entries.popitem(last=False)
+                k = self._evict_candidate()
+                _, nb, vers, _, _ = self._entries.pop(k)
                 self._bytes -= nb
                 self._unindex(k, vers)
                 self._evictions += 1
+
+    def _evict_candidate(self) -> tuple:
+        """Among the `_EVICT_WINDOW` least-recently-used entries, the
+        one with the lowest rebuild cost per byte; ties keep LRU order
+        (oldest wins). Lock held by caller."""
+        best_k = None
+        best = None
+        for i, (k, ent) in enumerate(self._entries.items()):
+            if i >= _EVICT_WINDOW:
+                break
+            cost = ent[4]
+            density = 0.0 if cost is None else cost / max(ent[1], 1)
+            if best is None or density < best:
+                best, best_k = density, k
+        return best_k
 
     def _unindex(self, key: tuple, versions: frozenset) -> None:
         for v in versions:

@@ -1,0 +1,135 @@
+"""Host<->device traffic accounting for the device-resident data plane.
+
+The device-resident refactor (DESIGN.md section 15) keeps transfer and
+join intermediates on the accelerator; the host only schedules.  Its
+claim — "fewer host<->device round trips" — must be measurable, so every
+place the engines intentionally cross the boundary calls one of the
+counters here.  A query run wraps itself in :func:`track`; with no
+active context every counter is a no-op, so library code can call them
+unconditionally.
+
+Counted events:
+
+``h2d``  host -> device uploads (filter words, key halves, validity).
+``d2h``  device -> host syncs.  A scalar sync (``int(x.sum())``) counts
+         as one sync of ``SCALAR_BYTES``; an array sync counts its
+         nbytes.  Both block the host on device completion, so the
+         *sync count* (not bytes) is what the round-trip gate watches.
+
+The counters are thread-local: concurrent queries through
+``repro.serve`` each see only their own traffic.  Nested contexts
+attribute to the innermost one; the executor merges subquery stats
+upward explicitly (mirroring how ``ExecStats.subqueries`` works).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+SCALAR_BYTES = 8
+
+
+@dataclass
+class DeviceStats:
+    """Host<->device boundary-crossing counts for one query run."""
+
+    h2d_syncs: int = 0
+    h2d_bytes: int = 0
+    d2h_syncs: int = 0
+    d2h_bytes: int = 0
+    fused_calls: int = 0          # fused multi-filter probe invocations
+    device_compactions: int = 0   # survivor compactions done on device
+
+    def round_trips(self) -> int:
+        return self.h2d_syncs + self.d2h_syncs
+
+    def merge(self, other: "DeviceStats") -> None:
+        self.h2d_syncs += other.h2d_syncs
+        self.h2d_bytes += other.h2d_bytes
+        self.d2h_syncs += other.d2h_syncs
+        self.d2h_bytes += other.d2h_bytes
+        self.fused_calls += other.fused_calls
+        self.device_compactions += other.device_compactions
+
+    def report(self) -> dict:
+        return {
+            "h2d_syncs": self.h2d_syncs,
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_syncs": self.d2h_syncs,
+            "d2h_bytes": self.d2h_bytes,
+            "round_trips": self.round_trips(),
+            "fused_calls": self.fused_calls,
+            "device_compactions": self.device_compactions,
+        }
+
+
+_tls = threading.local()
+
+
+def active() -> DeviceStats | None:
+    return getattr(_tls, "stats", None)
+
+
+@contextmanager
+def track(stats: DeviceStats):
+    """Attribute boundary crossings on this thread to ``stats``."""
+    prev = getattr(_tls, "stats", None)
+    _tls.stats = stats
+    try:
+        yield stats
+    finally:
+        _tls.stats = prev
+
+
+def count_h2d(nbytes: int = SCALAR_BYTES) -> None:
+    s = active()
+    if s is not None:
+        s.h2d_syncs += 1
+        s.h2d_bytes += int(nbytes)
+
+
+def count_d2h(nbytes: int = SCALAR_BYTES) -> None:
+    s = active()
+    if s is not None:
+        s.d2h_syncs += 1
+        s.d2h_bytes += int(nbytes)
+
+
+def count_fused() -> None:
+    s = active()
+    if s is not None:
+        s.fused_calls += 1
+
+
+def count_compaction() -> None:
+    s = active()
+    if s is not None:
+        s.device_compactions += 1
+
+
+def scalar(x) -> int:
+    """``int(x)`` for a device scalar, counted as one d2h sync."""
+    count_d2h(SCALAR_BYTES)
+    return int(x)
+
+
+def to_host(a):
+    """``np.asarray`` with d2h accounting (free for host arrays)."""
+    import numpy as np
+
+    if isinstance(a, np.ndarray) or not hasattr(a, "__array__"):
+        return np.asarray(a)
+    out = np.asarray(a)
+    count_d2h(out.nbytes)
+    return out
+
+
+def to_device(a):
+    """``jnp.asarray`` with h2d accounting (free for device arrays)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    if isinstance(a, np.ndarray):
+        count_h2d(a.nbytes)
+    return jnp.asarray(a)

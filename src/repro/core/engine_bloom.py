@@ -53,7 +53,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bloom, faultinject, hashing
+from repro.core import bloom, device_plane, faultinject, hashing
 from repro.core.bloom import (
     BLOCK_BITS, DEFAULT_BITS_PER_KEY, DEFAULT_K, LANES, BloomFilter,
     _bucket, _pad, blocks_for,
@@ -124,9 +124,9 @@ class EngineKeys:
         """Padded (lo, hi) device arrays, cached per power-of-two bucket."""
         hit = self._dev.get(bucket)
         if hit is None:
-            import jax.numpy as jnp
-            hit = (jnp.asarray(_pad(self.lo, bucket)),
-                   jnp.asarray(_pad(self.hi, bucket)))
+            from repro.core import device_plane as _dp
+            hit = (_dp.to_device(_pad(self.lo, bucket)),
+                   _dp.to_device(_pad(self.hi, bucket)))
             self._dev[bucket] = hit
         return hit
 
@@ -386,6 +386,169 @@ def _compact(ok, idx, bucket: int):
 
 
 # --------------------------------------------------------------------------
+# fused device probe + range-cut + min-max (the device-resident data plane,
+# DESIGN.md §15): every incoming filter of a vertex is applied in one jit
+# graph ending in a device compaction, so the host syncs exactly one small
+# counts vector per vertex instead of one mask per filter
+# --------------------------------------------------------------------------
+
+
+_SIGN = np.uint32(0x80000000)
+_U32MAX = np.uint32(0xFFFFFFFF)
+
+
+def _fused_and(words, hs, g1s, g2s, ok, k):
+    """Traced fused-probe core: AND every packed filter into `ok`,
+    appending the live count after each filter. Same hash rounds and
+    flat word layout as `probe_packed_np` — bit-identical survivors."""
+    flat = jnp.concatenate([w.reshape(-1) for w in words])
+    off = 0
+    counts = []
+    for f, w in enumerate(words):
+        nb = w.shape[0]
+        l2 = int(np.log2(nb))
+        h, g1, g2 = hs[f], g1s[f], g2s[f]
+        if l2:
+            base = ((h >> jnp.uint32(32 - l2)).astype(jnp.int32)
+                    + np.int32(off)) * np.int32(LANES)
+        else:
+            base = jnp.full(h.shape[0], off * LANES, jnp.int32)
+        for j in range(k):
+            pos = (g1 + jnp.uint32(j) * g2) & jnp.uint32(BLOCK_BITS - 1)
+            w32 = flat[base + (pos >> jnp.uint32(5)).astype(jnp.int32)]
+            ok = ok & (((w32 >> (pos & jnp.uint32(31))) & jnp.uint32(1))
+                       == jnp.uint32(1))
+        off += nb
+        counts.append(jnp.sum(ok, dtype=jnp.int32))
+    return ok, jnp.stack(counts)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _fused_probe_count(words, hs, g1s, g2s, count, k):
+    n = hs[0].shape[0]
+    ok = jnp.arange(n, dtype=jnp.int32) < count
+    ok, counts = _fused_and(words, hs, g1s, g2s, ok, k)
+    idx = jnp.nonzero(ok, size=n, fill_value=0)[0].astype(jnp.int32)
+    return idx, counts
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _fused_probe_gather(words, hs, g1s, g2s, idx, count, k):
+    n = idx.shape[0]
+    ok = jnp.arange(n, dtype=jnp.int32) < count
+    hg = tuple(h[idx] for h in hs)
+    g1g = tuple(g[idx] for g in g1s)
+    g2g = tuple(g[idx] for g in g2s)
+    ok, counts = _fused_and(words, hg, g1g, g2g, ok, k)
+    new_idx = idx[jnp.nonzero(ok, size=n, fill_value=0)[0]]
+    return new_idx, counts
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def _fused_pallas_count(words, los, his, count, k, interpret):
+    from repro.kernels.bloom import bloom as _k
+    cum = _k.multi_probe_pallas(words, los, his, k=k, interpret=interpret)
+    n = los[0].shape[0]
+    cum = cum & (jnp.arange(n, dtype=jnp.int32) < count)[None, :]
+    counts = jnp.sum(cum, axis=1, dtype=jnp.int32)
+    idx = jnp.nonzero(cum[-1], size=n, fill_value=0)[0].astype(jnp.int32)
+    return idx, counts
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def _fused_pallas_gather(words, los, his, idx, count, k, interpret):
+    from repro.kernels.bloom import bloom as _k
+    los = tuple(a[idx] for a in los)
+    his = tuple(a[idx] for a in his)
+    cum = _k.multi_probe_pallas(words, los, his, k=k, interpret=interpret)
+    n = idx.shape[0]
+    cum = cum & (jnp.arange(n, dtype=jnp.int32) < count)[None, :]
+    counts = jnp.sum(cum, axis=1, dtype=jnp.int32)
+    new_idx = idx[jnp.nonzero(cum[-1], size=n, fill_value=0)[0]]
+    return new_idx, counts
+
+
+def _bound_halves(v) -> Tuple[np.uint32, np.uint32, np.uint32]:
+    """(lo_half, hi_half, hi_half with sign bit flipped) of an int64
+    bound — the device compares signed int64 keys as (hi ^ sign, lo)
+    unsigned lexicographic pairs."""
+    u = int(v) & 0xFFFFFFFFFFFFFFFF
+    lo = np.uint32(u & 0xFFFFFFFF)
+    hi = np.uint32(u >> 32)
+    return lo, hi, np.uint32(int(hi) ^ 0x80000000)
+
+
+def _val_from_halves(hi_flipped: int, lo: int) -> int:
+    """Inverse of `_bound_halves`: signed int64 from the device's
+    (sign-flipped hi, lo) uint32 pair."""
+    u = ((int(hi_flipped) ^ 0x80000000) << 32) | int(lo)
+    return u - (1 << 64) if u >= (1 << 63) else u
+
+
+def _range_keep(lo_col, hi_col, blo_lo, blo_hi, bhi_lo, bhi_hi):
+    ah = hi_col ^ _SIGN
+    return (((ah > blo_hi) | ((ah == blo_hi) & (lo_col >= blo_lo)))
+            & ((ah < bhi_hi) | ((ah == bhi_hi) & (lo_col <= bhi_lo))))
+
+
+@jax.jit
+def _range_cut_count(lo_col, hi_col, count, blo_lo, blo_hi, bhi_lo,
+                     bhi_hi):
+    n = lo_col.shape[0]
+    ok = (_range_keep(lo_col, hi_col, blo_lo, blo_hi, bhi_lo, bhi_hi)
+          & (jnp.arange(n, dtype=jnp.int32) < count))
+    idx = jnp.nonzero(ok, size=n, fill_value=0)[0].astype(jnp.int32)
+    return idx, jnp.sum(ok, dtype=jnp.int32)
+
+
+@jax.jit
+def _range_cut_gather(lo_col, hi_col, idx, count, blo_lo, blo_hi,
+                      bhi_lo, bhi_hi):
+    n = idx.shape[0]
+    ok = (_range_keep(lo_col[idx], hi_col[idx], blo_lo, blo_hi, bhi_lo,
+                      bhi_hi)
+          & (jnp.arange(n, dtype=jnp.int32) < count))
+    new_idx = idx[jnp.nonzero(ok, size=n, fill_value=0)[0]]
+    return new_idx, jnp.sum(ok, dtype=jnp.int32)
+
+
+def _minmax_live(lo_col, hi_col, live):
+    """Lexicographic (hi ^ sign, lo) min/max over live rows — the signed
+    int64 key range as four uint32 scalars (one 16-byte sync)."""
+    ah = hi_col ^ _SIGN
+    hi_min = jnp.min(jnp.where(live, ah, _U32MAX))
+    lo_min = jnp.min(jnp.where(live & (ah == hi_min), lo_col, _U32MAX))
+    hi_max = jnp.max(jnp.where(live, ah, jnp.uint32(0)))
+    lo_max = jnp.max(jnp.where(live & (ah == hi_max), lo_col,
+                               jnp.uint32(0)))
+    return jnp.stack([hi_min, lo_min, hi_max, lo_max])
+
+
+@jax.jit
+def _minmax_count(lo_col, hi_col, count):
+    live = jnp.arange(lo_col.shape[0], dtype=jnp.int32) < count
+    return _minmax_live(lo_col, hi_col, live)
+
+
+@jax.jit
+def _minmax_count_valid(lo_col, hi_col, count, valid):
+    live = jnp.arange(lo_col.shape[0], dtype=jnp.int32) < count
+    return _minmax_live(lo_col, hi_col, live & valid)
+
+
+@jax.jit
+def _minmax_gather(lo_col, hi_col, idx, count):
+    live = jnp.arange(idx.shape[0], dtype=jnp.int32) < count
+    return _minmax_live(lo_col[idx], hi_col[idx], live)
+
+
+@jax.jit
+def _minmax_gather_valid(lo_col, hi_col, idx, count, valid):
+    live = jnp.arange(idx.shape[0], dtype=jnp.int32) < count
+    return _minmax_live(lo_col[idx], hi_col[idx], live & valid[idx])
+
+
+# --------------------------------------------------------------------------
 # vertex scans: probe half + build half over one survivor set
 # --------------------------------------------------------------------------
 
@@ -425,14 +588,31 @@ class VertexScan:
         filter bits — the vertex's own mask is untouched)."""
         raise NotImplementedError
 
-    def probe_range(self, raw: np.ndarray, lo: int, hi: int) -> int:
+    def probe_range(self, raw: np.ndarray, lo: int, hi: int,
+                    ek: Optional[EngineKeys] = None) -> int:
         """Shrink the live set to rows with lo <= raw <= hi. Returns
-        the number of rows tested (the live count going in)."""
+        the number of rows tested (the live count going in). When `ek`
+        (the same column's hash state) is given, device-resident scans
+        run the cut on device from the cached key halves — one scalar
+        sync instead of a survivor-id sync."""
         raise NotImplementedError
 
     def gather_live(self, raw: np.ndarray) -> np.ndarray:
         """Values of `raw` (a full-column host array) at the live rows."""
         raise NotImplementedError
+
+    def key_range(self, raw: np.ndarray,
+                  ek: Optional[EngineKeys] = None,
+                  valid: Optional[np.ndarray] = None):
+        """(lo, hi) int64 min/max of `raw` over the live (and `valid`)
+        rows, or None when no such row exists. Device-resident scans
+        reduce on device and sync 16 bytes; everyone else gathers."""
+        vals = self.gather_live(raw)
+        if valid is not None:
+            vals = vals[self.gather_live(np.asarray(valid, bool))]
+        if vals.size == 0:
+            return None
+        return int(vals.min()), int(vals.max())
 
     def live_hashes(self, ek: EngineKeys) -> np.ndarray:
         """uint32 block hashes of the live rows (the KMV distinct
@@ -480,7 +660,7 @@ class _NumpyScan(VertexScan):
         self._mask_out = None
         return rows
 
-    def probe_range(self, raw, lo, hi):
+    def probe_range(self, raw, lo, hi, ek=None):
         if self._alive is None and not self._is_full():
             self._alive = np.flatnonzero(self._mask0)
         if self._alive is None:
@@ -579,14 +759,19 @@ class _DeviceScan(VertexScan):
             self._bucket = engine.bucket(self._count)
             self._idx = _pad(host_idx, self._bucket)
             if not engine.host_compact:
-                self._idx = jnp.asarray(self._idx)
+                self._idx = device_plane.to_device(self._idx)
         self._mask_out: Optional[np.ndarray] = None
+        # host copy of a *device* survivor-id array, synced at most once
+        # per state (invalidated whenever the live set changes)
+        self._hidx: Optional[np.ndarray] = None
 
     def probe(self, incoming):
         if not incoming:
             self.live_after = []
             return 0
         faultinject.fire("engine.probe")
+        if self._e.device_resident:
+            return self._probe_fused(incoming)
         rows = 0
         counts: list = []
         self.live_after = counts
@@ -595,13 +780,17 @@ class _DeviceScan(VertexScan):
                 counts.append(0)
                 continue
             rows += self._count
+            if isinstance(words, np.ndarray):
+                device_plane.count_h2d(words.nbytes)
             ok = self._e.probe_idx(words, ek, self._idx, self._count,
                                    self._n)
             if self._e.host_compact:
                 # off-TPU: XLA's sized-nonzero is O(n) scan-heavy and the
                 # count sync materializes the mask anyway — compact the
                 # tiny survivor-id array on host
-                live = np.flatnonzero(np.asarray(ok))
+                okh = np.asarray(ok)
+                device_plane.count_d2h(okh.nbytes)
+                live = np.flatnonzero(okh)
                 count = int(live.size)
                 if count != self._count:
                     self._bucket = self._e.bucket(count)
@@ -609,24 +798,64 @@ class _DeviceScan(VertexScan):
                         else np.asarray(self._idx)[live]
                     self._idx = _pad(ids, self._bucket)
             else:
-                count = int(ok.sum())
+                count = device_plane.scalar(ok.sum())
                 if count != self._count:
                     self._bucket = self._e.bucket(count)
                     self._idx = _compact(ok, self._idx, self._bucket)
+                    device_plane.count_compaction()
             if count != self._count:
                 self._count = count
                 self._mask_out = None
+                self._hidx = None
             counts.append(self._count)
         return rows
 
-    def probe_range(self, raw, lo, hi):
-        """Host-side range pre-filter (control plane): the survivor-id
-        array is synced, tested against the raw keys, and re-bucketed —
-        the same host-compaction idiom the off-TPU probe path uses. An
-        on-device range op only pays off fused into the probe kernel
-        (ROADMAP: TPU validation)."""
+    def _probe_fused(self, incoming):
+        """Device-resident probe: one jit graph applies every incoming
+        filter and compacts survivors on device; the host syncs a single
+        per-filter counts vector for the whole vertex."""
+        if self._count == 0:
+            self.live_after = [0] * len(incoming)
+            return 0
+        words_dev = []
+        for w, _ in incoming:
+            if isinstance(w, np.ndarray):
+                device_plane.count_h2d(w.nbytes)
+            words_dev.append(jnp.asarray(w))
+        idx, dcounts = self._e.fused_probe_idx(
+            tuple(words_dev), [ek for _, ek in incoming], self._idx,
+            self._count, self._n)
+        device_plane.count_fused()
+        host_counts = np.asarray(dcounts)   # the vertex's ONE d2h sync
+        device_plane.count_d2h(host_counts.nbytes)
+        self.live_after = [int(c) for c in host_counts]
+        # rows-probed accounting matches the sequential path: filter f
+        # "sees" the rows still live when it runs (the device does
+        # padded-width work regardless; stats stay comparable)
+        rows = self._count + int(host_counts[:-1].sum())
+        new_count = int(host_counts[-1])
+        if new_count != self._count:
+            new_bucket = self._e.bucket(new_count)
+            if new_bucket != self._bucket:
+                idx = idx[:new_bucket]      # survivors are front-packed
+                self._bucket = new_bucket
+            self._idx = idx
+            self._count = new_count
+            self._mask_out = None
+            self._hidx = None
+            device_plane.count_compaction()
+        return rows
+
+    def probe_range(self, raw, lo, hi, ek=None):
+        """Range pre-filter. Device-resident scans cut on device from
+        the cached key halves (signed int64 = unsigned lexicographic
+        over (hi ^ sign, lo)) and sync one scalar; otherwise the
+        survivor-id array is synced and tested on host — the same
+        host-compaction idiom the off-TPU probe path uses."""
         if self._count == 0:
             return 0
+        if self._e.device_resident and ek is not None:
+            return self._probe_range_dev(ek, lo, hi)
         idx = self._host_idx()
         vals = raw if idx is None else raw[idx]
         rows = self._count
@@ -638,9 +867,62 @@ class _DeviceScan(VertexScan):
             self._bucket = self._e.bucket(self._count)
             self._idx = _pad(live, self._bucket)
             if not self._e.host_compact:
-                self._idx = jnp.asarray(self._idx)
+                self._idx = device_plane.to_device(self._idx)
             self._mask_out = None
+            self._hidx = None
         return rows
+
+    def _probe_range_dev(self, ek, lo, hi):
+        rows = self._count
+        dlo, dhi = ek.dev(self._e.bucket(self._n))
+        blo_lo, _, blo_hi = _bound_halves(lo)
+        bhi_lo, _, bhi_hi = _bound_halves(hi)
+        if self._idx is None:
+            idx, cnt = _range_cut_count(dlo, dhi, self._count, blo_lo,
+                                        blo_hi, bhi_lo, bhi_hi)
+        else:
+            idx, cnt = _range_cut_gather(dlo, dhi, self._idx,
+                                         self._count, blo_lo, blo_hi,
+                                         bhi_lo, bhi_hi)
+        new_count = device_plane.scalar(cnt)
+        if new_count != self._count:
+            new_bucket = self._e.bucket(new_count)
+            if new_bucket != self._bucket:
+                idx = idx[:new_bucket]
+                self._bucket = new_bucket
+            self._idx = idx
+            self._count = new_count
+            self._mask_out = None
+            self._hidx = None
+            device_plane.count_compaction()
+        return rows
+
+    def key_range(self, raw, ek=None, valid=None):
+        if self._count == 0:
+            return None
+        if not (self._e.device_resident and ek is not None):
+            return super().key_range(raw, ek=ek, valid=valid)
+        b = self._e.bucket(self._n)
+        dlo, dhi = ek.dev(b)
+        if valid is None:
+            q = (_minmax_count(dlo, dhi, self._count)
+                 if self._idx is None else
+                 _minmax_gather(dlo, dhi, self._idx, self._count))
+        else:
+            v = _pad(np.asarray(valid, bool), b, False)
+            device_plane.count_h2d(v.nbytes)
+            v = jnp.asarray(v)
+            q = (_minmax_count_valid(dlo, dhi, self._count, v)
+                 if self._idx is None else
+                 _minmax_gather_valid(dlo, dhi, self._idx, self._count,
+                                      v))
+        qh = np.asarray(q)
+        device_plane.count_d2h(qh.nbytes)
+        lo = _val_from_halves(qh[0], qh[1])
+        hi = _val_from_halves(qh[2], qh[3])
+        if lo > hi:             # every live row was invalid
+            return None
+        return lo, hi
 
     def gather_live(self, raw):
         idx = self._host_idx()
@@ -654,13 +936,22 @@ class _DeviceScan(VertexScan):
         self._bucket = self._e.bucket(0)
         self._idx = _pad(np.empty(0, np.int32), self._bucket)
         if not self._e.host_compact:
-            self._idx = jnp.asarray(self._idx)
+            self._idx = device_plane.to_device(self._idx)
         self._mask_out = None
+        self._hidx = None
 
     def _host_idx(self) -> Optional[np.ndarray]:
-        """Live original row ids on host (None = every row)."""
+        """Live original row ids on host (None = every row). A device
+        survivor-id array syncs once and is cached until the live set
+        changes."""
         if self._idx is None:
             return None
+        if not isinstance(self._idx, np.ndarray):
+            if self._hidx is None:
+                out = np.asarray(self._idx)
+                device_plane.count_d2h(out.nbytes)
+                self._hidx = out[: self._count].astype(np.int64)
+            return self._hidx
         return np.asarray(self._idx)[: self._count].astype(np.int64)
 
     @property
@@ -691,8 +982,10 @@ class _DeviceScan(VertexScan):
                         idx = np.flatnonzero(valid).astype(np.int64)
                 else:
                     idx = idx[valid[idx]]
-            return jnp.asarray(build_alive_np(ek, idx, nblocks,
-                                              self._e.k))
+            # host-mirror words stay host: the probe that consumes them
+            # uploads (and counts) them once; returning a device copy
+            # here would add a d2h when the artifact cache stores them
+            return build_alive_np(ek, idx, nblocks, self._e.k)
         return self._e.build_idx(ek, self._idx, self._count, self._n,
                                  nblocks, valid=valid)
 
@@ -719,6 +1012,11 @@ class BloomEngine:
     #: (XLA:CPU's sized-nonzero is scan-heavy; the mask is synced for the
     #: live count regardless)
     host_compact = False
+    #: the device-resident data plane (DESIGN.md §15): fused multi-filter
+    #: probes, device compaction/range-cut/min-max, device builds — the
+    #: host syncs scalars and tiny counts vectors only. Default on TPU;
+    #: forceable off-TPU (pallas-interpret validation, `ExecConfig.device`)
+    device_resident = False
 
     def __init__(self, k: int = DEFAULT_K):
         self.k = k
@@ -728,6 +1026,12 @@ class BloomEngine:
                   n: int):
         """Probe `words` over the compacted survivor ids (None =
         identity); returns a device bool mask with padding False."""
+        raise NotImplementedError
+
+    def fused_probe_idx(self, words, eks, idx, count: int, n: int):
+        """One device pass over every incoming filter: returns (packed
+        survivor ids, device int32 live-count-after-each-filter vector)
+        — the caller syncs the counts once per vertex."""
         raise NotImplementedError
 
     def build_idx(self, ek: "EngineKeys", idx, count: int, n: int,
@@ -824,11 +1128,19 @@ class JaxEngine(BloomEngine):
 
     backend = "jax"
 
-    def __init__(self, k: int = DEFAULT_K):
+    def __init__(self, k: int = DEFAULT_K,
+                 device_resident: Optional[bool] = None):
         super().__init__(k)
-        off_tpu = jax.default_backend() != "tpu"
-        self.host_build = off_tpu
-        self.host_compact = off_tpu
+        on_tpu = jax.default_backend() == "tpu"
+        if device_resident is None:
+            device_resident = on_tpu
+        self.device_resident = bool(device_resident)
+        # device-resident mode keeps builds and compaction on device even
+        # off-TPU (the pallas-interpret/CI validation posture); otherwise
+        # off-TPU routes both through the bit-identical host mirrors
+        host_side = not on_tpu and not self.device_resident
+        self.host_build = host_side
+        self.host_compact = host_side
 
     def keys(self, values):
         lo, hi = hashing.key_halves(np.asarray(values))
@@ -843,11 +1155,19 @@ class JaxEngine(BloomEngine):
             return _probe_hashed_count(words, h, g1, g2, count, self.k)
         return _probe_hashed_gather(words, h, g1, g2, idx, count, self.k)
 
+    def fused_probe_idx(self, words, eks, idx, count, n):
+        b = self.bucket(n)
+        hs, g1s, g2s = zip(*(ek.dev_hashed(b) for ek in eks))
+        if idx is None:
+            return _fused_probe_count(words, hs, g1s, g2s, count, self.k)
+        return _fused_probe_gather(words, hs, g1s, g2s, idx, count,
+                                   self.k)
+
     def build_idx(self, ek, idx, count, n, nblocks, valid=None):
         lo, hi = ek.dev(self.bucket(n))
         if valid is not None:
-            v = jnp.asarray(_pad(np.asarray(valid, bool),
-                                 self.bucket(n), False))
+            v = device_plane.to_device(_pad(np.asarray(valid, bool),
+                                            self.bucket(n), False))
             if idx is None:
                 return _build_count_valid(lo, hi, v, count, nblocks,
                                           self.k)
@@ -866,14 +1186,20 @@ class PallasEngine(BloomEngine):
     backend = "pallas"
 
     def __init__(self, k: int = DEFAULT_K,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 device_resident: Optional[bool] = None):
         super().__init__(k)
+        on_tpu = jax.default_backend() == "tpu"
         if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+            interpret = not on_tpu
         self.interpret = bool(interpret)
+        if device_resident is None:
+            device_resident = on_tpu
+        self.device_resident = bool(device_resident)
         # builds stay on the Pallas kernels (interpret mode is the
-        # off-TPU validation harness); compaction still goes host-side
-        self.host_compact = jax.default_backend() != "tpu"
+        # off-TPU validation harness); compaction goes host-side unless
+        # the device-resident plane keeps survivor ids on device
+        self.host_compact = not on_tpu and not self.device_resident
 
     def keys(self, values):
         lo, hi = hashing.key_halves(np.asarray(values))
@@ -892,9 +1218,18 @@ class PallasEngine(BloomEngine):
             lo, hi = _gather2(lo, hi, idx)
         return _mask_count(self.probe_op(words, lo, hi), count)
 
+    def fused_probe_idx(self, words, eks, idx, count, n):
+        b = self.bucket(n)
+        los, his = zip(*(ek.dev(b) for ek in eks))
+        if idx is None:
+            return _fused_pallas_count(words, los, his, count, self.k,
+                                       self.interpret)
+        return _fused_pallas_gather(words, los, his, idx, count, self.k,
+                                    self.interpret)
+
     def build_idx(self, ek, idx, count, n, nblocks, valid=None):
         lo, hi = ek.dev(self.bucket(n))
-        vdev = None if valid is None else jnp.asarray(
+        vdev = None if valid is None else device_plane.to_device(
             _pad(np.asarray(valid, bool), self.bucket(n), False))
         if idx is not None:
             lo, hi = _gather2(lo, hi, idx)
@@ -923,24 +1258,33 @@ _ENGINES_LOCK = threading.Lock()
 
 
 def get_engine(backend: str = "numpy", k: int = DEFAULT_K,
-               interpret: Optional[bool] = None) -> BloomEngine:
+               interpret: Optional[bool] = None,
+               device_resident: Optional[bool] = None) -> BloomEngine:
     """Engine instances are cached so jit/pallas caches and key-hash
     device pads are shared across strategies and queries. Creation is
     locked so concurrent sessions (repro.serve) agree on one instance
     per key instead of silently forking the shared jit caches
-    (DESIGN.md §12 thread-safety contract)."""
+    (DESIGN.md §12 thread-safety contract).
+
+    `device_resident=None` resolves to the backend default (on iff a
+    real TPU is attached); True forces the device-resident plane off-TPU
+    (pallas-interpret validation, the `ExecConfig.device="on"` path)."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown bloom backend {backend!r}; "
                          f"choose from {BACKENDS}")
-    key = (backend, k, interpret if backend == "pallas" else None)
+    if backend == "numpy":
+        device_resident = None      # host mirror: no device to reside on
+    key = (backend, k, interpret if backend == "pallas" else None,
+           device_resident)
     with _ENGINES_LOCK:
         eng = _ENGINES.get(key)
         if eng is None:
             if backend == "numpy":
                 eng = NumpyEngine(k)
             elif backend == "jax":
-                eng = JaxEngine(k)
+                eng = JaxEngine(k, device_resident=device_resident)
             else:
-                eng = PallasEngine(k, interpret=interpret)
+                eng = PallasEngine(k, interpret=interpret,
+                                   device_resident=device_resident)
             _ENGINES[key] = eng
     return eng

@@ -310,8 +310,19 @@ class _HashMapJoinEngine(JoinEngine):
     #: is only worth jit/kernel dispatch below it off-TPU)
     device_max_build = 1 << 22
 
-    def __init__(self):
+    #: device-resident data plane (DESIGN.md §15): route every join
+    #: through the sorted-segment device path
+    #: (`semijoin.ops.segment_join_device`), which joins duplicate build
+    #: keys natively — no occupancy-detected host fallback — handles the
+    #: NULL contract with count-zeroing instead of the host
+    #: compact-and-remap, and returns *device* index vectors so the
+    #: cursor's selection vectors stay on the accelerator until the
+    #: single payload gather.
+    device_resident = False
+
+    def __init__(self, device_resident: bool = False):
         self._host = NumpyJoinEngine()
+        self.device_resident = bool(device_resident)
 
     def _build(self, build_key):
         raise NotImplementedError
@@ -320,8 +331,14 @@ class _HashMapJoinEngine(JoinEngine):
         raise NotImplementedError
 
     def join_indices(self, build_key, probe_key, how="inner"):
-        faultinject.fire("join.indices")
         nb = len(build_key)
+        if self.device_resident:
+            if nb == 0 or len(probe_key) == 0:
+                return self._host.join_indices(build_key, probe_key, how)
+            faultinject.fire("join.indices")
+            from repro.kernels.semijoin import ops as sj
+            return sj.segment_join_device(build_key, probe_key, how)
+        faultinject.fire("join.indices")
         if (nb == 0 or len(probe_key) == 0
                 or nb > self.device_max_build):
             return self._host.join_indices(build_key, probe_key, how)
@@ -343,9 +360,32 @@ class _HashMapJoinEngine(JoinEngine):
             return rows[sel], sel
         raise ValueError(how)
 
+    def join_indices_valid(self, build_key, probe_key, how="inner",
+                           build_valid=None, probe_valid=None):
+        if not self.device_resident:
+            return super().join_indices_valid(build_key, probe_key, how,
+                                              build_valid, probe_valid)
+        if len(build_key) == 0 or len(probe_key) == 0:
+            return self._host.join_indices_valid(
+                build_key, probe_key, how, build_valid, probe_valid)
+        if build_valid is not None and bool(np.asarray(build_valid).all()):
+            build_valid = None
+        if probe_valid is not None and bool(np.asarray(probe_valid).all()):
+            probe_valid = None
+        faultinject.fire("join.indices")
+        from repro.kernels.semijoin import ops as sj
+        return sj.segment_join_device(build_key, probe_key, how,
+                                      build_valid, probe_valid)
+
 
 class JaxJoinEngine(_HashMapJoinEngine):
     backend = "jax"
+
+    def __init__(self, device_resident: Optional[bool] = None):
+        if device_resident is None:
+            import jax
+            device_resident = jax.default_backend() == "tpu"
+        super().__init__(device_resident=device_resident)
 
     def _build(self, build_key):
         from repro.kernels.semijoin import ops as sj
@@ -361,16 +401,20 @@ class PallasJoinEngine(_HashMapJoinEngine):
     prohibitive under the interpreter, so off-TPU builds route through
     the jit'd jnp builder (insert order is identical, so the table
     layout — and therefore every lookup — is bit-identical) while
-    lookups always exercise the Pallas kernel."""
+    lookups always exercise the Pallas kernel. The device-resident
+    sorted-segment path is shared with the jax engine (sorting is an XLA
+    primitive, not a Pallas kernel)."""
 
     backend = "pallas"
 
-    def __init__(self, interpret: Optional[bool] = None):
-        super().__init__()
-        if interpret is None:
-            import jax
-            interpret = jax.default_backend() != "tpu"
-        self.interpret = bool(interpret)
+    def __init__(self, interpret: Optional[bool] = None,
+                 device_resident: Optional[bool] = None):
+        import jax
+        on_tpu = jax.default_backend() == "tpu"
+        super().__init__(device_resident=on_tpu if device_resident is None
+                         else device_resident)
+        self.interpret = bool(not on_tpu if interpret is None
+                              else interpret)
 
     def _build(self, build_key):
         from repro.kernels.semijoin import ops as sj
@@ -388,24 +432,32 @@ _ENGINES_LOCK = threading.Lock()
 
 
 def get_join_engine(backend: str = "numpy",
-                    interpret: Optional[bool] = None) -> JoinEngine:
+                    interpret: Optional[bool] = None,
+                    device_resident: Optional[bool] = None) -> JoinEngine:
     """Engine instances are cached so jit/pallas caches are shared
     across executors and queries (mirrors `engine_bloom.get_engine`).
     Creation is locked for concurrent sessions (repro.serve) — one
-    instance per key, never a silently forked jit cache."""
+    instance per key, never a silently forked jit cache.
+
+    ``device_resident=None`` resolves per engine (True on TPU); the
+    numpy engine has no device path and ignores it."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown join backend {backend!r}; "
                          f"choose from {BACKENDS}")
-    key = (backend, interpret if backend == "pallas" else None)
+    if backend == "numpy":
+        device_resident = None
+    key = (backend, interpret if backend == "pallas" else None,
+           device_resident)
     with _ENGINES_LOCK:
         eng = _ENGINES.get(key)
         if eng is None:
             if backend == "numpy":
                 eng = NumpyJoinEngine()
             elif backend == "jax":
-                eng = JaxJoinEngine()
+                eng = JaxJoinEngine(device_resident=device_resident)
             else:
-                eng = PallasJoinEngine(interpret=interpret)
+                eng = PallasJoinEngine(interpret=interpret,
+                                       device_resident=device_resident)
             _ENGINES[key] = eng
     return eng
 
@@ -438,12 +490,34 @@ class Slot:
         return k
 
 
-def _compose(sel: Optional[np.ndarray], idx: np.ndarray) -> np.ndarray:
-    """sel∘idx for non-negative idx (sel may carry -1 NULLs, preserved)."""
-    return idx if sel is None else sel[idx]
+def _compose(sel: Optional[np.ndarray], idx: np.ndarray,
+             idx_host: Optional[np.ndarray] = None) -> np.ndarray:
+    """sel∘idx for non-negative idx (sel may carry -1 NULLs, preserved).
+
+    Either operand may be a device array (the device-resident join
+    path). A device sel composes with a device idx on device and stays
+    resident; a *host* sel composes on host against `idx_host` — one
+    downloaded copy of the device index vector, shared by every host
+    slot of the join side — because host sels are headed for a host
+    gather anyway, and a single d2h beats one h2d upload per slot plus
+    the later sync back."""
+    if sel is None:
+        return idx
+    host_sel = isinstance(sel, np.ndarray)
+    host_idx = isinstance(idx, np.ndarray)
+    if host_sel and not host_idx:
+        if idx_host is None:
+            from repro.core import device_plane
+            idx_host = device_plane.to_host(idx).astype(np.int64)
+        return sel[idx_host]
+    if not host_sel and host_idx:
+        from repro.core import device_plane
+        device_plane.count_h2d(idx.nbytes)
+    return sel[idx]
 
 
-def _compose_nullable(sel: Optional[np.ndarray], idx: np.ndarray
+def _compose_nullable(sel: Optional[np.ndarray], idx: np.ndarray,
+                      idx_host: Optional[np.ndarray] = None
                       ) -> np.ndarray:
     """sel∘idx where idx == -1 rows stay NULL.
 
@@ -452,16 +526,46 @@ def _compose_nullable(sel: Optional[np.ndarray], idx: np.ndarray
     validity mask is the authoritative NULL signal (the engine's NULL
     contract, `relational.table`); the representative byte values are
     unspecified and may differ from the eager chain's (which clips into
-    whatever intermediate table existed at its join)."""
+    whatever intermediate table existed at its join). Device/host
+    operand placement follows `_compose`."""
     if sel is None:
         return idx
+    host_sel = isinstance(sel, np.ndarray)
+    host_idx = isinstance(idx, np.ndarray)
+    if host_sel and not host_idx:
+        if idx_host is None:
+            from repro.core import device_plane
+            idx_host = device_plane.to_host(idx).astype(np.int64)
+        idx, host_idx = idx_host, True
+    if host_sel and host_idx:
+        if len(sel) == 0:
+            # outer join against a side filtered to zero rows: every idx
+            # is -1 (there was nothing to match), so every row is NULL
+            return np.full(len(idx), -1, np.int64)
+        neg = idx < 0
+        out = sel[np.where(neg, 0, idx)]
+        return np.where(neg, np.int64(-1), out)
+    import jax.numpy as jnp
+    from repro.core import device_plane
     if len(sel) == 0:
-        # outer join against a side filtered to zero rows: every idx is
-        # -1 (there was nothing to match), so every output row is NULL
-        return np.full(len(idx), -1, np.int64)
+        return jnp.full(len(idx), -1, jnp.int32)
+    if host_idx:
+        device_plane.count_h2d(idx.nbytes)
     neg = idx < 0
-    out = sel[np.where(neg, 0, idx)]
-    return np.where(neg, np.int64(-1), out)
+    out = sel[jnp.where(neg, 0, idx)]
+    return jnp.where(neg, jnp.int32(-1), out)
+
+
+def _host_idx_for(sel_map: Dict[int, Optional[np.ndarray]],
+                  idx) -> Optional[np.ndarray]:
+    """One host copy of a device join-index vector, made only when some
+    slot's sel is host-resident and will need it (`_compose`)."""
+    if isinstance(idx, np.ndarray):
+        return idx
+    if any(isinstance(s, np.ndarray) for s in sel_map.values()):
+        from repro.core import device_plane
+        return device_plane.to_host(idx).astype(np.int64)
+    return None
 
 
 class JoinCursor:
@@ -472,12 +576,13 @@ class JoinCursor:
     the materializing `ops.hash_join` exactly."""
 
     __slots__ = ("slots", "sel", "cols", "colmap", "nullable", "nrows",
-                 "name")
+                 "name", "srcnames")
 
     def __init__(self, slots: Dict[int, Slot],
                  sel: Dict[int, Optional[np.ndarray]],
                  cols: List[Tuple[str, int]], nullable: Set[int],
-                 nrows: int, name: str):
+                 nrows: int, name: str,
+                 srcnames: Optional[Dict[str, str]] = None):
         self.slots = slots
         self.sel = sel
         self.cols = cols
@@ -485,6 +590,16 @@ class JoinCursor:
         self.nullable = nullable
         self.nrows = nrows
         self.name = name
+        # output-name -> slot-column-name indirection (identity when
+        # absent): a pure-rename Project stays a cursor, its payload
+        # still ungathered (`project()`)
+        self.srcnames = srcnames or None
+
+    def _src(self, n: str) -> str:
+        """Slot column name behind output column `n`."""
+        if self.srcnames:
+            return self.srcnames.get(n, n)
+        return n
 
     # -- constructors --------------------------------------------------
     @staticmethod
@@ -503,16 +618,47 @@ class JoinCursor:
     # -- row selection -------------------------------------------------
     def take(self, idx: np.ndarray) -> "JoinCursor":
         """Rows by position (idx >= 0)."""
-        sel = {sid: _compose(s, idx) for sid, s in self.sel.items()}
+        idx_h = _host_idx_for(self.sel, idx)
+        sel = {sid: _compose(s, idx, idx_h) for sid, s in self.sel.items()}
         return JoinCursor(self.slots, sel, self.cols,
-                          set(self.nullable), len(idx), self.name)
+                          set(self.nullable), len(idx), self.name,
+                          srcnames=self.srcnames)
+
+    def project(self, mapping: Dict[str, str]) -> "JoinCursor":
+        """Column projection/rename without materialization:
+        `mapping` = {output name: current column name}. Selection
+        vectors and slots are shared; passthrough payloads stay
+        ungathered, resolved through `srcnames` at first value use."""
+        cols = []
+        srcn = {}
+        for out, src in mapping.items():
+            sid = self.colmap[src]
+            cols.append((out, sid))
+            s = self._src(src)
+            if s != out:
+                srcn[out] = s
+        return JoinCursor(self.slots, self.sel, cols,
+                          set(self.nullable), self.nrows, self.name,
+                          srcnames=srcn or None)
 
     # -- column access -------------------------------------------------
+    def _sel_host(self, sid: int) -> Optional[np.ndarray]:
+        """Host view of one selection vector. Device selections (the
+        device-resident join path) sync exactly once here — at the
+        payload-gather / key-read boundary — and the host copy is cached
+        back so repeated readers pay no further syncs."""
+        s = self.sel[sid]
+        if s is not None and not isinstance(s, np.ndarray):
+            from repro.core import device_plane
+            s = device_plane.to_host(s).astype(np.int64)
+            self.sel[sid] = s
+        return s
+
     def _sel_safe(self, sid: int) -> Optional[np.ndarray]:
         """Selection vector with NULL rows clipped to row 0 — the same
         representative-row semantics a chain of `Column.gather` calls
         produces for materialized NULLs."""
-        s = self.sel[sid]
+        s = self._sel_host(sid)
         if s is not None and sid in self.nullable:
             return np.where(s < 0, 0, s)
         return s
@@ -522,15 +668,16 @@ class JoinCursor:
         from repro.relational import ops
         names = tuple(names)
         sids = {self.colmap[n] for n in names}
+        snames = tuple(self._src(n) for n in names)
         if (len(sids) == 1
                 and ops.stable_key_encoding(
-                    self.slots[next(iter(sids))].table, names)):
+                    self.slots[next(iter(sids))].table, snames)):
             # cached full-slot composite, row-sliced — valid only when
             # the packed-vs-mixed decision cannot flip under filtering
             # (otherwise recompute below from the gathered view, as the
             # eager oracle effectively does)
             sid = sids.pop()
-            raw = self.slots[sid].key(names)
+            raw = self.slots[sid].key(snames)
             s = self._sel_safe(sid)
             if s is None:
                 return raw
@@ -552,12 +699,12 @@ class JoinCursor:
         out = None
         for n in names:
             sid = self.colmap[n]
-            col = self.slots[sid].table[n]
+            col = self.slots[sid].table[self._src(n)]
             cv = None
             if col.valid is not None and len(col):
                 s = self._sel_safe(sid)
                 cv = col.valid if s is None else col.valid[s]
-            s = self.sel[sid]
+            s = self._sel_host(sid)
             if sid in self.nullable and s is not None:
                 nn = s >= 0
                 cv = nn if cv is None else cv & nn
@@ -571,8 +718,8 @@ class JoinCursor:
         cols = {}
         for n in names:
             sid = self.colmap[n]
-            c = self.slots[sid].table[n]
-            s = self.sel[sid]
+            c = self.slots[sid].table[self._src(n)]
+            s = self._sel_host(sid)
             cols[n] = c if s is None else c.gather(s)
         return Table(cols, self.name)
 
@@ -582,26 +729,33 @@ class JoinCursor:
              build_idx: np.ndarray, probe_idx: np.ndarray,
              how: str) -> "JoinCursor":
         slots = dict(probe.slots)
-        sel = {sid: _compose(s, probe_idx)
+        pidx_h = _host_idx_for(probe.sel, probe_idx)
+        sel = {sid: _compose(s, probe_idx, pidx_h)
                for sid, s in probe.sel.items()}
         nullable = set(probe.nullable)
         cols = list(probe.cols)
         if how in ("inner", "left"):
             null_build = how == "left"
+            bidx_h = _host_idx_for(build.sel, build_idx)
             for sid, slot in build.slots.items():
                 slots[sid] = slot
                 if null_build:
-                    sel[sid] = _compose_nullable(build.sel[sid], build_idx)
+                    sel[sid] = _compose_nullable(build.sel[sid],
+                                                 build_idx, bidx_h)
                     nullable.add(sid)
                 else:
-                    sel[sid] = _compose(build.sel[sid], build_idx)
+                    sel[sid] = _compose(build.sel[sid], build_idx,
+                                        bidx_h)
                     if sid in build.nullable:
                         nullable.add(sid)
             cols += [(n, sid) for n, sid in build.cols
                      if n not in probe.colmap]
         # semi/anti keep probe columns only (as hash_join does)
+        # probe's rename wins on output-name collision — colliding build
+        # columns are dropped from `cols` above
+        srcn = {**(build.srcnames or {}), **(probe.srcnames or {})}
         return JoinCursor(slots, sel, cols, nullable, len(probe_idx),
-                          probe.name)
+                          probe.name, srcnames=srcn or None)
 
     # -- materialization ----------------------------------------------
     def gather_bytes(self, names: Optional[Sequence[str]] = None) -> int:
@@ -616,7 +770,8 @@ class JoinCursor:
                 continue
             if self.sel[sid] is None:
                 continue
-            total += self.nrows * self.slots[sid].table[n].data.itemsize
+            total += (self.nrows
+                      * self.slots[sid].table[self._src(n)].data.itemsize)
         return total
 
     def materialize(self, names: Optional[Sequence[str]] = None
@@ -633,8 +788,8 @@ class JoinCursor:
         for n, sid in self.cols:
             if keep is not None and n not in keep:
                 continue
-            c = self.slots[sid].table[n]
-            s = self.sel[sid]
+            c = self.slots[sid].table[self._src(n)]
+            s = self._sel_host(sid)
             if s is not None:
                 c = c.gather(s)
                 nbytes += c.data.nbytes

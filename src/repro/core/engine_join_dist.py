@@ -200,6 +200,9 @@ class MeshExchange:
 
     def _put(self, arr: np.ndarray):
         import jax
+
+        from repro.core import device_plane
+        device_plane.count_h2d(arr.nbytes)
         return jax.device_put(arr, self._sharding)
 
     def all_to_all(self, blocks: List[List[np.ndarray]]) -> List[np.ndarray]:
@@ -213,7 +216,8 @@ class MeshExchange:
         for s in range(p):
             for t in range(p):
                 send[s, t, :cnt[s, t]] = blocks[s][t]
-        recv = np.asarray(self._a2a(self._put(send)))
+        from repro.core import device_plane
+        recv = device_plane.to_host(self._a2a(self._put(send)))
         # recv[t, s] = block s->t; concat sources in shard order
         return [np.concatenate([recv[t, s, :cnt[s, t]] for s in range(p)])
                 for t in range(p)]
@@ -227,7 +231,8 @@ class MeshExchange:
         send = np.zeros((p, bucket, width), np.uint32)
         for s in range(p):
             send[s, :cnt[s]] = shards[s]
-        recv = np.asarray(self._ag(self._put(send)))
+        from repro.core import device_plane
+        recv = device_plane.to_host(self._ag(self._put(send)))
         # every shard holds the full gather; reassemble from shard 0's
         # copy (source-ordered => original global order)
         return np.concatenate([recv[0, s, :cnt[s]] for s in range(p)])

@@ -54,10 +54,12 @@ class BloomJoin(Strategy):
 
     def __init__(self, bits_per_key: int = bloom.DEFAULT_BITS_PER_KEY,
                  k: int = bloom.DEFAULT_K, backend: str = "numpy",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 device_resident: Optional[bool] = None):
         self.bits_per_key = bits_per_key
-        self.engine: BloomEngine = get_engine(backend, k=k,
-                                              interpret=interpret)
+        self.engine: BloomEngine = get_engine(
+            backend, k=k, interpret=interpret,
+            device_resident=device_resident)
 
     def prefilter(self, vertices, edges, ctx=None, hints=None):
         # no transfer phase, but record which engine the per-join
@@ -114,6 +116,7 @@ class PredTrans(Strategy):
                  prune: bool = False, lip_order: bool = True,
                  backend: str = "numpy",
                  interpret: Optional[bool] = None,
+                 device_resident: Optional[bool] = None,
                  artifact_cache: Optional["ArtifactCache"] = None):
         self.bits_per_key = bits_per_key
         self.k = k
@@ -126,8 +129,9 @@ class PredTrans(Strategy):
         # lip_order: apply incoming filters most-selective-first (LIP-style
         # ordering, explicitly sanctioned in paper §3.2).
         self.lip_order = lip_order
-        self.engine: BloomEngine = get_engine(backend, k=k,
-                                              interpret=interpret)
+        self.engine: BloomEngine = get_engine(
+            backend, k=k, interpret=interpret,
+            device_resident=device_resident)
         # cross-query transfer-artifact cache (DESIGN.md §12): filter
         # builds whose provenance signature matches an entry are reused
         # instead of rebuilt; None = per-query behavior, no sharing
@@ -145,13 +149,17 @@ class PredTrans(Strategy):
         return self.artifact_cache.get(("bloom", fsig))
 
     def _store_filter(self, fsig: Optional[bytes], words, mm,
-                      v: Vertex) -> None:
+                      v: Vertex, cost_ns: Optional[float] = None
+                      ) -> None:
         if self.artifact_cache is None or fsig is None:
             return
-        host = np.asarray(words)    # host-resident: shareable across
-        self.artifact_cache.put(    # engine backends (bit-identical)
+        from repro.core import device_plane
+        # host-resident: shareable across engine backends
+        # (bit-identical); a device-resident build syncs here, counted
+        host = device_plane.to_host(words)
+        self.artifact_cache.put(
             ("bloom", fsig), (host, mm), nbytes=host.nbytes + 32,
-            versions=v.dep_versions)
+            versions=v.dep_versions, cost_ns=cost_ns)
 
     def prefilter(self, vertices, edges, ctx=None, hints=None):
         self._ctx = ctx
@@ -303,9 +311,12 @@ class PredTrans(Strategy):
                         # they never earn filter bits (the vertex mask —
                         # and the filter sizing by live rows — stay
                         # untouched)
+                        t0b = time.perf_counter_ns()
                         words = scan.build(hk, nblocks,
                                            valid=v.key_valid(cols))
-                        self._store_filter(fsig, words, None, v)
+                        self._store_filter(
+                            fsig, words, None, v,
+                            cost_ns=time.perf_counter_ns() - t0b)
                     built[id(hk)] = hit = (words, fsig)
                 words, fsig = hit
                 filt = bloom.BloomFilter(words, self.k)
@@ -447,7 +458,9 @@ class AdaptivePredTrans(PredTrans):
     def __init__(self, bits_per_key: int = bloom.DEFAULT_BITS_PER_KEY,
                  k: int = bloom.DEFAULT_K, passes: int = 2,
                  lip_order: bool = True, backend: str = "numpy",
-                 interpret: Optional[bool] = None, mode: str = "auto",
+                 interpret: Optional[bool] = None,
+                 device_resident: Optional[bool] = None,
+                 mode: str = "auto",
                  costs: Optional[TransferCosts] = None,
                  minmax: bool = True,
                  early_exit_frac: float = 0.001,
@@ -455,6 +468,7 @@ class AdaptivePredTrans(PredTrans):
         super().__init__(bits_per_key=bits_per_key, k=k, passes=passes,
                          prune=False, lip_order=lip_order,
                          backend=backend, interpret=interpret,
+                         device_resident=device_resident,
                          artifact_cache=artifact_cache)
         if mode not in self.MODES:
             raise ValueError(f"mode must be one of {self.MODES}, "
@@ -618,11 +632,13 @@ class AdaptivePredTrans(PredTrans):
         build reads."""
         if not self._rangeable(v, cols):
             return None
-        vals = scan.gather_live(v.key(cols))
-        valid = v.key_valid(cols)
-        if valid is not None:
-            vals = vals[scan.gather_live(valid)]
-        return MinMaxFilter(*bloom.key_range(vals))
+        rng = scan.key_range(v.key(cols), ek=self._hashed(v, cols),
+                             valid=v.key_valid(cols))
+        if rng is None:
+            # no live, valid key: the empty (inverted) range — disjoint
+            # with everything, so an emptied vertex cascades for free
+            return MinMaxFilter(0, -1)
+        return MinMaxFilter(*rng)
 
     # -- the scheduled pass --------------------------------------------
     def _join_rate(self, lid: int, vertices, adj) -> float:
@@ -750,7 +766,8 @@ class AdaptivePredTrans(PredTrans):
                     if (hi - lo + 1) / width < 0.98:
                         n0 = scan.live
                         stats.rows_range_tested += scan.probe_range(
-                            v.key(cols), pf.mm.lo, pf.mm.hi)
+                            v.key(cols), pf.mm.lo, pf.mm.hi,
+                            ek=self._hashed(v, cols))
                         # the signature names the survivor *row set*:
                         # a cut that removed nothing left it unchanged
                         if scan.live != n0:
@@ -865,17 +882,20 @@ class AdaptivePredTrans(PredTrans):
                                                    self.k).nbytes()
                         stats.filters_reused += 1
                     else:
+                        t0b = time.perf_counter_ns()
                         hk = self._hashed(v, cols)
                         words = scan.build(hk, nblocks,
                                            valid=v.key_valid(cols))
                         mm = self._live_range(v, scan, cols) \
                             if self.minmax else None
+                        build_ns = time.perf_counter_ns() - t0b
                         nbytes = bloom.BloomFilter(words,
                                                    self.k).nbytes()
                         stats.filters_built += 1
                         stats.filter_bytes += nbytes
                         dec.filter_bytes = nbytes
-                        self._store_filter(fsig, words, mm, v)
+                        self._store_filter(fsig, words, mm, v,
+                                           cost_ns=build_ns)
                     self._fcache[(lid, cols)] = (words, mm, live,
                                                  v.state_sig, nbytes)
                 pending[ei] = _Emitted(words, mm, dec.est_sel, dec,

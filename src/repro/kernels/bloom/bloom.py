@@ -121,6 +121,71 @@ def probe_pallas(words: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# fused multi-filter probe: every filter incoming at a vertex in one kernel
+# (the device-resident data plane's per-vertex pass, DESIGN.md §15) — the
+# filters are concatenated into one resident stack, each probed on its own
+# key column, and the cumulative survivor mask after each filter is emitted
+# so the host can read live-count feedback from a single sync
+# --------------------------------------------------------------------------
+
+
+def _multi_probe_kernel(*refs, k: int, log2nbs: Tuple[int, ...],
+                        offsets: Tuple[int, ...]):
+    words_ref, out_ref = refs[0], refs[-1]
+    words = words_ref[...]                            # stacked, resident
+    ok = None
+    for f, log2nb in enumerate(log2nbs):
+        lo = refs[1 + 2 * f][0, :]
+        hi = refs[2 + 2 * f][0, :]
+        blk, pos = _hash_tile(lo, hi, k, log2nb)
+        rows = words[blk + offsets[f]]                # [TILE, LANES]
+        lane = (pos >> 5).astype(jnp.int32)
+        w = jnp.take_along_axis(rows, lane, axis=1)   # [TILE, k]
+        hits = (w >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        hit = jnp.all(hits == 1, axis=1)
+        ok = hit if ok is None else ok & hit
+        out_ref[f, :] = ok
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def multi_probe_pallas(words_list, los, his, k: int = DEFAULT_K,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Fused probe of m filters over m key columns of the same rows.
+
+    `words_list`/`los`/`his` are equal-length tuples; every lo/hi is
+    uint32 [n] with n % TILE == 0. Returns bool [m, n]: row f is the
+    cumulative survivor mask after filters 0..f — bit-identical to
+    probing the filters one by one and ANDing."""
+    m = len(words_list)
+    words = (words_list[0] if m == 1
+             else jnp.concatenate(words_list, axis=0))
+    log2nbs = tuple(int(np.log2(w.shape[0])) for w in words_list)
+    offs, acc = [], 0
+    for w in words_list:
+        offs.append(acc)
+        acc += w.shape[0]
+    n = los[0].shape[0]
+    assert n % TILE == 0
+    g = n // TILE
+    nb_total = words.shape[0]
+    tiles = []
+    for lo, hi in zip(los, his):
+        tiles.append(lo.reshape(g, TILE))
+        tiles.append(hi.reshape(g, TILE))
+    out = pl.pallas_call(
+        functools.partial(_multi_probe_kernel, k=k, log2nbs=log2nbs,
+                          offsets=tuple(offs)),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((nb_total, LANES), lambda i: (0, 0))]
+        + [pl.BlockSpec((1, TILE), lambda i: (i, 0))] * (2 * m),
+        out_specs=pl.BlockSpec((m, TILE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.bool_),
+        interpret=interpret,
+    )(words, *tiles)
+    return out
+
+
+# --------------------------------------------------------------------------
 # build
 # --------------------------------------------------------------------------
 

@@ -136,32 +136,213 @@ def joinmap_build(keys: np.ndarray, use_pallas: bool = True,
     ((klo, khi, occ, row), occupied): `occupied < len(keys)` iff the
     keys contain duplicates (equal keys dedup into one slot), which is
     the join engine's fallback signal."""
+    from repro.core import device_plane as dp
     keys = np.asarray(keys)
     cap = capacity_for(len(keys))
     lo, hi = hashing.key_halves(_pad_to_tile(keys))
     mask = _pad_to_tile(np.ones(len(keys), bool), False)
     if use_pallas:
-        table = _k.build_rows_pallas(jnp.asarray(lo), jnp.asarray(hi),
-                                     jnp.asarray(mask), cap,
+        table = _k.build_rows_pallas(dp.to_device(lo), dp.to_device(hi),
+                                     dp.to_device(mask), cap,
                                      interpret=_interpret(interpret))
     else:
-        table = _joinmap_build_jnp(jnp.asarray(lo), jnp.asarray(hi),
-                                   jnp.asarray(mask), cap)
-    occupied = int(jnp.sum(table[2]))
+        table = _joinmap_build_jnp(dp.to_device(lo), dp.to_device(hi),
+                                   dp.to_device(mask), cap)
+    occupied = dp.scalar(jnp.sum(table[2]))
     return table, occupied
 
 
 def joinmap_lookup(table, keys: np.ndarray, use_pallas: bool = True,
                    interpret: Optional[bool] = None) -> np.ndarray:
     """Matched build row per probe key (int64), -1 on miss."""
+    from repro.core import device_plane as dp
     klo, khi, occ, row = table
     keys = np.asarray(keys)
     lo, hi = hashing.key_halves(_pad_to_tile(keys))
     if use_pallas:
-        out = _k.lookup_pallas(klo, khi, occ, row, jnp.asarray(lo),
-                               jnp.asarray(hi),
+        out = _k.lookup_pallas(klo, khi, occ, row, dp.to_device(lo),
+                               dp.to_device(hi),
                                interpret=_interpret(interpret))
     else:
-        out = _joinmap_lookup_jnp(klo, khi, occ, row, jnp.asarray(lo),
-                                  jnp.asarray(hi))
-    return np.asarray(out)[: len(keys)].astype(np.int64)
+        out = _joinmap_lookup_jnp(klo, khi, occ, row, dp.to_device(lo),
+                                  dp.to_device(hi))
+    return dp.to_host(out)[: len(keys)].astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# device sorted-segment join (the device-resident data plane, DESIGN.md
+# §15): duplicate-key joins entirely on device — stable lexicographic
+# argsort of the build keys, pair binary search, segment emission — with
+# the host syncing one output-size scalar per join. Bit-identical
+# (build_idx, probe_idx) to `engine_join.sorted_join_indices`: signed
+# int64 keys are compared as (hi ^ sign, lo) unsigned pairs, and a
+# leading invalid bit sorts NULL-key and padding rows past every real
+# key so they can never match (NULL-key probe rows are handled by
+# zeroing their match counts — no compact-and-remap on either side).
+# --------------------------------------------------------------------------
+
+_SIGN = np.uint32(0x80000000)
+
+
+def _pow2(n: int, floor: int = 256) -> int:
+    return max(floor, int(2 ** np.ceil(np.log2(max(int(n), 1)))))
+
+
+def _pad_pow2(a: np.ndarray, m: int, fill=0) -> np.ndarray:
+    if m == len(a):
+        return a
+    out = np.full(m, fill, dtype=a.dtype)
+    out[: len(a)] = a
+    return out
+
+
+def _lex3_argsort(lo, hi_f, inv):
+    """Stable argsort by (inv, hi_f, lo): three stable passes (LSD) ==
+    one stable sort on the composite — the exact permutation
+    `np.argsort(key, kind="stable")` yields over the valid rows."""
+    perm = jnp.argsort(lo, stable=True)
+    perm = perm[jnp.argsort(hi_f[perm], stable=True)]
+    return perm[jnp.argsort(inv[perm], stable=True)]
+
+
+def _search3(slo, shi, sinv, qlo, qhi, right: bool):
+    """searchsorted over (inv, hi, lo) triples for queries with inv=0,
+    as a static log2(n) binary-search ladder (no pair-valued
+    searchsorted primitive on device)."""
+    n = slo.shape[0]
+    lo_b = jnp.zeros(qlo.shape, jnp.int32)
+    hi_b = jnp.full(qlo.shape, n, jnp.int32)
+    for _ in range(max(1, int(n).bit_length())):
+        mid = (lo_b + hi_b) >> 1
+        midc = jnp.minimum(mid, n - 1)
+        mlo, mhi, minv = slo[midc], shi[midc], sinv[midc]
+        if right:
+            lt = (mhi < qhi) | ((mhi == qhi) & (mlo <= qlo))
+        else:
+            lt = (mhi < qhi) | ((mhi == qhi) & (mlo < qlo))
+        active = lo_b < hi_b
+        go = active & (minv == 0) & lt
+        lo_b = jnp.where(go, mid + 1, lo_b)
+        hi_b = jnp.where(active & ~go, mid, hi_b)
+    return lo_b
+
+
+@jax.jit
+def _segjoin_counts(bstack, pstack, np_live):
+    """(order, lo_pos, counts): build sort permutation, each probe row's
+    first-match position in it, and its match count (0 past `np_live`).
+
+    Both sides arrive as one stacked uint32 upload each — build planes
+    (lo, hi_flipped, invalid), probe planes (lo, hi_flipped[, valid]) —
+    so a join costs two h2d transfers however many key planes it needs.
+    A probe validity plane (shape-selected at trace time) zeroes invalid
+    rows' counts: inner drops them, left emits them unmatched, anti
+    keeps them, all in probe order with no compact-and-remap."""
+    blo, bhi_f, binv = bstack[0], bstack[1], bstack[2]
+    order = _lex3_argsort(blo, bhi_f, binv)
+    slo, shi, sinv = blo[order], bhi_f[order], binv[order]
+    plo, phi_f = pstack[0], pstack[1]
+    lo_pos = _search3(slo, shi, sinv, plo, phi_f, right=False)
+    hi_pos = _search3(slo, shi, sinv, plo, phi_f, right=True)
+    live = jnp.arange(plo.shape[0], dtype=jnp.int32) < np_live
+    if pstack.shape[0] == 3:
+        live = live & (pstack[2] != 0)
+    counts = jnp.where(live, hi_pos - lo_pos, 0)
+    return order.astype(jnp.int32), lo_pos, counts
+
+
+@functools.partial(jax.jit, static_argnames=("want_zero",))
+def _segjoin_sel(counts, np_live, want_zero: bool):
+    """Probe-row selection for semi (counts > 0) / anti (counts == 0),
+    packed ascending, plus its device count."""
+    n = counts.shape[0]
+    live = jnp.arange(n, dtype=jnp.int32) < np_live
+    ok = live & ((counts == 0) if want_zero else (counts > 0))
+    sel = jnp.nonzero(ok, size=n, fill_value=0)[0].astype(jnp.int32)
+    return sel, jnp.sum(ok, dtype=jnp.int32)
+
+
+@jax.jit
+def _segjoin_total(counts):
+    return jnp.sum(counts, dtype=jnp.int32)
+
+
+@jax.jit
+def _segjoin_outcounts_left(counts, np_live):
+    live = jnp.arange(counts.shape[0], dtype=jnp.int32) < np_live
+    oc = jnp.where(live, jnp.maximum(counts, 1), 0)
+    return oc, jnp.sum(oc, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("total_len", "left"))
+def _segjoin_emit(order, lo_pos, counts, out_counts, total_len: int,
+                  left: bool):
+    """Match-pair emission: probe rows in original order, matches in
+    stable build-key order (the engine output contract). Rows past the
+    true total are `jnp.repeat` padding; the caller slices them off."""
+    npb = counts.shape[0]
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(out_counts, dtype=jnp.int32)])
+    probe_idx = jnp.repeat(jnp.arange(npb, dtype=jnp.int32), out_counts,
+                           total_repeat_length=total_len)
+    within = jnp.arange(total_len, dtype=jnp.int32) - starts[probe_idx]
+    build_pos = lo_pos[probe_idx] + within
+    build_idx = order[jnp.clip(build_pos, 0, order.shape[0] - 1)]
+    if left:
+        build_idx = jnp.where(counts[probe_idx] == 0, jnp.int32(-1),
+                              build_idx)
+    return build_idx, probe_idx
+
+
+def segment_join_device(build_key: np.ndarray, probe_key: np.ndarray,
+                        how: str = "inner",
+                        build_valid: Optional[np.ndarray] = None,
+                        probe_valid: Optional[np.ndarray] = None):
+    """Device sorted-segment equi-join. Returns (build_idx, probe_idx)
+    with the exact semantics of `JoinEngine.join_indices_valid` — NULL
+    contract included — but as device arrays (semi/anti build_idx is a
+    host -1 vector, matching the reference). One d2h scalar sync (the
+    output size) per call."""
+    from repro.core import device_plane as dp
+
+    build_key = np.asarray(build_key)
+    probe_key = np.asarray(probe_key)
+    nb, npr = len(build_key), len(probe_key)
+    bb, pb = _pow2(nb), _pow2(npr)
+
+    blo, bhi = hashing.key_halves(_pad_pow2(build_key, bb))
+    bstack = np.empty((3, bb), np.uint32)
+    bstack[0] = blo
+    bstack[1] = bhi ^ _SIGN
+    binv = np.zeros(bb, np.uint32)
+    binv[nb:] = 1
+    if build_valid is not None:
+        binv[:nb][~np.asarray(build_valid, bool)] = 1
+    bstack[2] = binv
+    plo, phi = hashing.key_halves(_pad_pow2(probe_key, pb))
+    pstack = np.empty((3 if probe_valid is not None else 2, pb),
+                      np.uint32)
+    pstack[0] = plo
+    pstack[1] = phi ^ _SIGN
+    if probe_valid is not None:
+        pstack[2] = _pad_pow2(np.asarray(probe_valid, bool), pb, False)
+
+    order, lo_pos, counts = _segjoin_counts(dp.to_device(bstack),
+                                            dp.to_device(pstack), npr)
+
+    if how in ("semi", "anti"):
+        sel, cnt = _segjoin_sel(counts, npr, how == "anti")
+        total = dp.scalar(cnt)
+        return np.full(total, -1, np.int64), sel[:total]
+    if how == "left":
+        out_counts, cnt = _segjoin_outcounts_left(counts, npr)
+    elif how == "inner":
+        out_counts, cnt = counts, _segjoin_total(counts)
+    else:
+        raise ValueError(how)
+    total = dp.scalar(cnt)
+    if total == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    bidx, pidx = _segjoin_emit(order, lo_pos, counts, out_counts,
+                               _pow2(total), how == "left")
+    return bidx[:total], pidx[:total]

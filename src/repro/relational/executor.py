@@ -31,7 +31,7 @@ from typing import (
 
 import numpy as np
 
-from repro.core import provenance
+from repro.core import device_plane, provenance
 from repro.core.engine_join import JoinCursor, Slot, get_join_engine
 from repro.core.errors import (
     DeadlineExceeded, QueryCancelled, QueryContext, ResourceExhausted,
@@ -84,6 +84,12 @@ class ExecStats:
     # "source", "fallback", "est_rows"}. Empty = no reorderable region
     # (or reorder off / eager oracle / per-join-filter strategy).
     join_order: List[dict] = dataclasses.field(default_factory=list)
+    # host<->device traffic accounting (DESIGN.md §15,
+    # `repro.core.device_plane.DeviceStats`): sync and byte counts for
+    # every transfer/join device crossing of this query, subqueries
+    # folded in. Always present; all-zero on pure-host runs.
+    device: "device_plane.DeviceStats" = dataclasses.field(
+        default_factory=device_plane.DeviceStats)
 
     @property
     def total_seconds(self) -> float:
@@ -175,6 +181,7 @@ class ExecStats:
                             if qerrs else None),
             },
             "degraded": list(self.degraded),
+            "device": self.device.report(),
             "dist": None,
         }
         if self.dist is not None:
@@ -232,7 +239,14 @@ class ExecConfig:
     plan's static order everywhere, "on" is an explicit alias of
     "auto". `reorder_fn` overrides the greedy chooser with a callable
     `meta -> order` (permutation tests and the robustness bench inject
-    adversarial orders through it; see `reorder.seeded_order`)."""
+    adversarial orders through it; see `reorder.seeded_order`).
+
+    `device` controls the device-resident data plane (DESIGN.md §15)
+    for jax/pallas backends: "auto" (default) keeps survivors and join
+    indices on the accelerator when one is attached (TPU), "on" forces
+    the device path even off-TPU (the interpret-mode CI/test
+    configuration), "off" forces the host paths. The numpy backend
+    ignores it."""
 
     strategy: Optional[Strategy] = None
     join_backend: str = "numpy"
@@ -247,11 +261,15 @@ class ExecConfig:
     mem_budget_bytes: Optional[int] = None
     reorder: str = "auto"
     reorder_fn: Optional[Callable] = None
+    device: str = "auto"
 
     def __post_init__(self):
         if self.engine not in ("single", "distributed"):
             raise ValueError(f"unknown engine {self.engine!r}; "
                              "choose 'single' or 'distributed'")
+        if self.device not in ("auto", "on", "off"):
+            raise ValueError(f"device must be 'auto', 'on' or 'off', "
+                             f"got {self.device!r}")
         if self.reorder not in ("auto", "on", "off"):
             raise ValueError(f"reorder must be 'auto', 'on' or 'off', "
                              f"got {self.reorder!r}")
@@ -336,16 +354,20 @@ class Executor:
         self.mem_budget_bytes = config.mem_budget_bytes
         self.reorder = config.reorder
         self.reorder_fn = config.reorder_fn
+        self.device = config.device
         self._ctx: Optional[QueryContext] = None
         self._phase = "scan"
         self._reorder_info: Optional[reorder_mod.ReorderInfo] = None
+        # "auto" defers to the engine's on-TPU default (DESIGN.md §15)
+        dr = {"auto": None, "on": True, "off": False}[config.device]
         if config.engine == "distributed":
             from repro.core.engine_join_dist import get_distributed_engine
             self.join_engine = get_distributed_engine(
                 config.dist_shards, config.join_backend,
                 config.dist_device)
         else:
-            self.join_engine = get_join_engine(config.join_backend)
+            self.join_engine = get_join_engine(config.join_backend,
+                                               device_resident=dr)
 
     def _sub_executor(self) -> "Executor":
         # degrade stays off: a subquery failure propagates to the outer
@@ -456,12 +478,23 @@ class Executor:
     def _execute_once(self, plan: PlanNode,
                       ctx: Optional[QueryContext] = None
                       ) -> Tuple[Table, ExecStats]:
+        """One attempt on this executor's exact config. The whole run
+        sits inside a `device_plane.track` window, so every
+        host<->device crossing the transfer and join phases make lands
+        in `stats.device` (subquery crossings are merged in where their
+        stats are collected — `track` re-points the thread-local)."""
+        stats = ExecStats(strategy=self.strategy.name)
+        with device_plane.track(stats.device):
+            return self._execute_tracked(plan, ctx, stats)
+
+    def _execute_tracked(self, plan: PlanNode,
+                         ctx: Optional[QueryContext],
+                         stats: ExecStats) -> Tuple[Table, ExecStats]:
         self._ctx = ctx
         self._phase = "scan"
         self._reorder_info = None
         if ctx is not None:
             ctx.check("scan")
-        stats = ExecStats(strategy=self.strategy.name)
         if self.engine == "distributed":
             # fresh fork per execute(): a prior call's returned stats
             # object must keep describing that call
@@ -650,6 +683,7 @@ class Executor:
             sub = self._sub_executor()
             table, sub_stats = sub.execute(leaf.plan, ctx=self._ctx)
             stats.subqueries.append(sub_stats)
+            stats.device.merge(sub_stats.device)
             table = Table(table.columns, leaf.alias)
             # a derived leaf's row set is determined by (subplan shape,
             # source table versions, transfer strategy) — strategy
@@ -747,6 +781,54 @@ class Executor:
         return out if isinstance(out, JoinCursor) \
             else JoinCursor.from_table(out)
 
+    def _group_cursor(self, cur: JoinCursor, node: GroupBy,
+                      stats: ExecStats) -> Optional[Table]:
+        """GROUP BY straight off the cursor (DESIGN.md §15): group
+        codes come from the cursor's composite key (the transfer
+        phase's cached encoding, selection-vector sliced), key columns
+        are gathered at one representative row per group, and only the
+        agg input columns materialize at full row length — a bare
+        count(*) gathers nothing full-length at all.
+
+        Bit-exactness requires NULL-free key columns: then
+        `ops._grouping_codes` reduces to `composite_key`, which is what
+        `JoinCursor.key` computes. Nullable keys (outer-join NULLs or
+        column validity) return None and the materializing path runs,
+        exactly as before."""
+        if not node.keys:
+            return None                  # keyless: nothing to save
+        for n in node.keys:
+            sid = cur.colmap.get(n)
+            if sid is None:
+                return None
+            if sid in cur.nullable:
+                return None              # outer-join NULLs in play
+            col = cur.slots[sid].table[cur._src(n)]
+            if col.valid is not None and not bool(col.valid.all()):
+                return None              # NULL keys need rank-coding
+        inputs = sorted({ic for _, _, ic in node.aggs if ic})
+        budget = self._mem_budget()
+        if budget is not None:
+            # the lazy path still allocates one full-row-length int64
+            # vector that lives through aggregation (the group codes);
+            # the budget guard must see it even when no agg input
+            # gathers full-length (bare count(*))
+            est = (stats.join_materialized_bytes
+                   + cur.gather_bytes(inputs) + 8 * len(cur))
+            if est > budget:
+                raise ResourceExhausted(
+                    f"payload gather needs ~{est} bytes "
+                    f"(budget {budget})", phase="join",
+                    tag=self._ctx.tag if self._ctx else "")
+        inverse, ngroups = ops.group_codes(cur.key(tuple(node.keys)))
+        rep = ops.group_rep_rows(inverse, ngroups)
+        kview = cur.take(rep).columns_view(node.keys)
+        in_tbl, nbytes = cur.materialize(inputs)
+        stats.join_materialized_bytes += nbytes
+        return ops.aggregate_by_codes(
+            inverse, ngroups, {k: kview[k] for k in node.keys},
+            in_tbl, node.aggs, cur.name)
+
     def _exec_node(self, node: PlanNode, slots: Dict[int, Slot],
                    stats: ExecStats) -> Union[Table, JoinCursor]:
         if isinstance(node, LeafNode):
@@ -810,6 +892,12 @@ class Executor:
         if isinstance(node, Project):
             t = self._exec_node(node.child, slots, stats)
             if isinstance(t, JoinCursor):
+                if all(isinstance(e, Col) for e in node.exprs.values()):
+                    # pure column select/rename: stay a cursor — the
+                    # passthrough payload is gathered once, later, by
+                    # whichever operator first needs values
+                    return t.project({name: e.name
+                                      for name, e in node.exprs.items()})
                 needed = set()
                 for e in node.exprs.values():
                     needed |= e.columns()
@@ -829,6 +917,7 @@ class Executor:
             sub = self._sub_executor()
             sub_t, sub_stats = sub.execute(node.subplan, ctx=self._ctx)
             stats.subqueries.append(sub_stats)
+            stats.device.merge(sub_stats.device)
             assert len(sub_t) == 1, "Bind subplan must yield one row"
             c = sub_t[node.sub_col]
             v = c.data[0]
@@ -843,12 +932,16 @@ class Executor:
         if isinstance(node, GroupBy):
             t = self._exec_node(node.child, slots, stats)
             if isinstance(t, JoinCursor):
-                # having filters aggregate *outputs*, so only the group
-                # keys and agg inputs need values
-                needed = set(node.keys) | {ic for _, _, ic in node.aggs
-                                           if ic}
-                t = self._materialize(t, stats, needed)
-            out = ops.group_aggregate(t, node.keys, node.aggs)
+                out = self._group_cursor(t, node, stats)
+                if out is None:
+                    # having filters aggregate *outputs*, so only the
+                    # group keys and agg inputs need values
+                    needed = set(node.keys) | {ic for _, _, ic
+                                               in node.aggs if ic}
+                    t = self._materialize(t, stats, needed)
+                    out = ops.group_aggregate(t, node.keys, node.aggs)
+            else:
+                out = ops.group_aggregate(t, node.keys, node.aggs)
             if node.having is not None:
                 out = out.compact(node.having(out).mask(len(out)))
             return out

@@ -13,7 +13,7 @@ HT/PR accounting.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -214,6 +214,22 @@ def _group_codes(key: np.ndarray) -> Tuple[np.ndarray, int]:
         (int(inverse.max()) + 1 if n else 0)
 
 
+def group_codes(key: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Public `(inverse, ngroups)` over a combined key array. The
+    executor's cursor GroupBy path feeds `JoinCursor.key` output here —
+    bit-identical to `_grouping_codes` + `_group_codes` whenever the
+    key columns are NULL-free (both reduce to `composite_key`)."""
+    return _group_codes(key)
+
+
+def group_rep_rows(inverse: np.ndarray, ngroups: int) -> np.ndarray:
+    """Representative (last-occurrence) row index per group — the row
+    whose key-column values stand for the group in the output."""
+    rep = np.zeros(ngroups, np.int64)
+    rep[inverse] = np.arange(len(inverse))
+    return rep
+
+
 def _value_codes(v: np.ndarray, n_fallback: int
                  ) -> Tuple[np.ndarray, np.int64]:
     """Small dense codes for nunique values: direct range offset when
@@ -288,26 +304,37 @@ def group_aggregate(table: Table, keys: Sequence[str],
     if keys:
         key = _grouping_codes(table, keys)
         inverse, ngroups = _group_codes(key)
-        # representative row per group for key columns
-        rep = np.zeros(ngroups, np.int64)
-        rep[inverse] = np.arange(len(key))
+        rep = group_rep_rows(inverse, ngroups)
     else:
         ngroups = 1
         inverse = np.zeros(len(table), np.int64)
         rep = np.zeros(1, np.int64)
 
-    cols = {}
-    for k in keys:
-        # a NULL group's representative row is NULL in that key column,
-        # so the gathered validity mask marks the output key NULL too
-        cols[k] = table[k].gather(rep)
+    # a NULL group's representative row is NULL in that key column,
+    # so the gathered validity mask marks the output key NULL too
+    key_cols = {k: table[k].gather(rep) for k in keys}
+    return aggregate_by_codes(inverse, ngroups, key_cols, table, aggs,
+                              table.name)
+
+
+def aggregate_by_codes(inverse: np.ndarray, ngroups: int,
+                       key_cols: Dict[str, Column], inputs: Table,
+                       aggs: Sequence[Tuple[str, str, str]],
+                       name: str) -> Table:
+    """`group_aggregate`'s aggregation body over precomputed group
+    codes: `key_cols` are the output key columns (one row per group,
+    already gathered), `inputs` holds the agg input columns at full
+    row length. The executor's cursor GroupBy path calls this directly
+    so passthrough payload columns never materialize (DESIGN.md §15);
+    `group_aggregate` is the materializing wrapper."""
+    cols = dict(key_cols)
     counts = np.bincount(inverse, minlength=ngroups)
     for out_name, agg, in_col in aggs:
         if agg == "count":
             cols[out_name] = Column(counts.astype(np.int64))
             continue
         if agg == "countv":
-            c = table[in_col]
+            c = inputs[in_col]
             if c.valid is None:
                 cols[out_name] = Column(counts.astype(np.int64))
             else:
@@ -315,7 +342,7 @@ def group_aggregate(table: Table, keys: Sequence[str],
                     inverse, weights=c.valid.astype(np.float64),
                     minlength=ngroups).astype(np.int64))
             continue
-        c = table[in_col]
+        c = inputs[in_col]
         cv = c.valid if (c.valid is not None
                          and not bool(c.valid.all())) else None
         if agg == "nunique":
@@ -324,7 +351,7 @@ def group_aggregate(table: Table, keys: Sequence[str],
             # otherwise NULL representative bytes count as (and collide
             # with) real values, and a NULL-widened min/max corrupts the
             # range-compaction span
-            v = table.array(in_col).astype(np.int64)
+            v = inputs.array(in_col).astype(np.int64)
             inv = inverse
             if cv is not None:
                 sel = np.flatnonzero(cv)
@@ -336,7 +363,7 @@ def group_aggregate(table: Table, keys: Sequence[str],
             cols[out_name] = Column(
                 np.bincount(grp, minlength=ngroups).astype(np.int64))
             continue
-        v = table.array(in_col)
+        v = inputs.array(in_col)
         if agg in ("sum", "mean"):
             if cv is None:
                 s = np.bincount(inverse, weights=v.astype(np.float64),
@@ -381,7 +408,7 @@ def group_aggregate(table: Table, keys: Sequence[str],
             cols[out_name] = Column(out, c.dictionary, valid)
         else:
             raise ValueError(agg)
-    return Table(cols, table.name)
+    return Table(cols, name)
 
 
 # --------------------------------------------------------------------------

@@ -86,10 +86,13 @@ class Column:
         has_neg = bool((idx < 0).any()) if idx.size else False
         if len(self.data) == 0:
             # gathering from an empty column: only NULL rows are legal
-            # (outer join against an empty build side)
+            # (outer join against an empty build side); zero rows get no
+            # validity plane, so empty results are byte-identical whether
+            # gathered from an empty intermediate or a live base slot
             assert not idx.size or (idx < 0).all(), idx
             return Column(np.zeros(len(idx), self.data.dtype),
-                          self.dictionary, np.zeros(len(idx), bool))
+                          self.dictionary,
+                          np.zeros(len(idx), bool) if idx.size else None)
         safe = np.where(idx < 0, 0, idx) if has_neg else idx
         data = self.data[safe]
         valid = self.valid[safe] if self.valid is not None else None
