@@ -1,0 +1,226 @@
+"""Overload-control benchmark (DESIGN.md §16).
+
+Three scenarios against one warmed `QueryServer`:
+
+* **uncontended** — serial warm queries; the per-query *service-time*
+  p99 (the worker-side execution clock, queue wait excluded) is the
+  reference the overload pass is graded against.
+* **overload** — a burst of ~2x the deadline-capacity of the pool,
+  every query carrying a deadline. Deadline-aware admission shedding
+  must kick in: shed queries get a **typed** `ResourceExhausted`
+  *immediately at admission* (well inside their deadline, instead of a
+  doomed `DeadlineExceeded` after queueing), and the queries that were
+  admitted and completed must stay bit-exact with a service-time p99
+  within 1.5x of uncontended — overload may queue work, it must not
+  poison the work that runs.
+* **warm restart** — `drain_to_snapshot` + a fresh server constructed
+  with ``snapshot_path``: the restored server's *first* query must
+  replay warm (slot-state cache hit) and match the cold oracle digest.
+
+``--smoke`` is the CI job: sf 0.01, hard assertions, nonzero exit on
+any violation. `run.py --check` runs the same gate.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+STRATEGY = "pred-trans"
+QUERIES = (3, 5, 10)
+WORKERS = 1          # single worker: queue-wait estimates are exact-ish
+MAX_BURST = 240
+
+
+def _server(cat, **kw):
+    from repro.serve import QueryServer, ServeConfig
+    kw.setdefault("strategy", STRATEGY)
+    kw.setdefault("workers", WORKERS)
+    kw.setdefault("max_queue", 0)       # shedding is the admission gate
+    return QueryServer(cat, ServeConfig(**kw))
+
+
+def oracle_digests(cat, sf: float):
+    from repro.core.transfer import make_strategy
+    from repro.relational.executor import Executor
+    from repro.relational.table import table_digest
+    from repro.tpch import build_query
+    out = {}
+    for qn in QUERIES:
+        ex = Executor(cat, make_strategy(STRATEGY))
+        out[qn] = table_digest(ex.execute(build_query(qn, sf))[0])
+    return out
+
+
+def _p99(lats):
+    lats = sorted(lats)
+    return lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+
+
+def uncontended_pass(srv, sf: float, reps: int = 5):
+    """Warm the caches, then measure serial warm service times."""
+    from repro.tpch import build_query
+    for qn in QUERIES:                  # cold pass populates the caches
+        srv.query(build_query(qn, sf), tag="warmup")
+    lats = []
+    for _ in range(reps):
+        for qn in QUERIES:
+            t0 = time.perf_counter()
+            srv.query(build_query(qn, sf), tag="unc")
+            lats.append(time.perf_counter() - t0)
+    return {"n": len(lats), "p99_s": _p99(lats),
+            "mean_s": sum(lats) / len(lats)}
+
+
+def overload_pass(srv, sf: float, digests, unc: dict):
+    """Submit ~2x the pool's deadline-capacity in one burst."""
+    from repro.core.errors import DeadlineExceeded, ResourceExhausted
+    from repro.relational.table import table_digest
+    from repro.tpch import build_query
+    svc = max(unc["mean_s"], 1e-4)
+    deadline = max(10.0 * svc, 0.2)
+    n = min(2 * max(int(deadline / svc), 1) * WORKERS, MAX_BURST)
+    shed = shed_late = admitted = completed = timeouts = wrong = 0
+    futs = []
+    for i in range(n):
+        qn = QUERIES[i % len(QUERIES)]
+        t0 = time.perf_counter()
+        try:
+            fut = srv.submit(build_query(qn, sf), tag="over",
+                             timeout=deadline)
+        except ResourceExhausted:
+            shed += 1
+            if time.perf_counter() - t0 > deadline:
+                shed_late += 1          # rejection arrived too late
+            continue
+        admitted += 1
+        futs.append((qn, fut))
+    errors = 0
+    for qn, fut in futs:
+        try:
+            res, _stats = fut.result(timeout=60)
+        except DeadlineExceeded:
+            timeouts += 1
+            continue
+        except Exception as e:          # noqa: BLE001
+            print(f"overload: Q{qn} FAILED: {e}", file=sys.stderr)
+            errors += 1
+            continue
+        completed += 1
+        if table_digest(res) != digests[qn]:
+            print(f"overload: Q{qn} WRONG RESULT", file=sys.stderr)
+            wrong += 1
+    per_tag = (srv.metrics.snapshot().get("per_tag") or {}).get("over")
+    p99 = per_tag["p99_ms"] / 1e3 if per_tag else None
+    return {"burst": n, "deadline_s": deadline, "shed": shed,
+            "shed_late": shed_late, "admitted": admitted,
+            "completed": completed, "timeouts": timeouts,
+            "errors": errors, "wrong_results": wrong,
+            "service_p99_s": p99,
+            "p99_over_uncontended": (p99 / unc["p99_s"]
+                                     if p99 and unc["p99_s"] else None)}
+
+
+def warm_restart_pass(cat, sf: float, digests, path: str):
+    """Drain to a snapshot, restart, and demand a warm first query."""
+    from repro.relational.table import table_digest
+    from repro.tpch import build_query
+    qn = QUERIES[0]
+    srv = _server(cat)
+    srv.query(build_query(qn, sf))
+    written = srv.drain_to_snapshot(path)
+    with _server(cat, snapshot_path=path) as srv2:
+        restored = srv2.restore_info or {}
+        res, stats = srv2.query(build_query(qn, sf))
+    tr = stats.report().get("transfer") or {}
+    return {"snapshot_bytes": written["bytes"],
+            "artifacts_written": written["artifacts"],
+            "loaded": bool(restored.get("loaded")),
+            "artifacts_restored": restored.get("artifacts", 0),
+            "first_query_warm": bool(tr.get("from_cache")),
+            "bitexact": table_digest(res) == digests[qn]}
+
+
+def main(sf: float):
+    import tempfile
+
+    from benchmarks.common import catalog
+    cat = catalog(sf)
+    digests = oracle_digests(cat, sf)
+    with _server(cat) as srv:
+        unc = uncontended_pass(srv, sf)
+        over = overload_pass(srv, sf, digests, unc)
+        shed_counter = srv.metrics.snapshot()["shed"]
+    with tempfile.TemporaryDirectory() as tmp:
+        restart = warm_restart_pass(cat, sf, digests,
+                                    os.path.join(tmp, "serve.snap"))
+    doc = {"strategy": STRATEGY, "workers": WORKERS,
+           "queries": [f"Q{qn}" for qn in QUERIES],
+           "uncontended": unc, "overload": over,
+           "shed_counter": shed_counter, "warm_restart": restart}
+    print(f"uncontended: n={unc['n']} p99={unc['p99_s'] * 1e3:.2f}ms")
+    print(f"overload:    burst={over['burst']} "
+          f"deadline={over['deadline_s'] * 1e3:.0f}ms "
+          f"shed={over['shed']} admitted={over['admitted']} "
+          f"completed={over['completed']} timeouts={over['timeouts']} "
+          f"wrong={over['wrong_results']}")
+    if over["p99_over_uncontended"] is not None:
+        print(f"             service p99 ratio "
+              f"{over['p99_over_uncontended']:.2f}x uncontended")
+    r = restart
+    print(f"restart:     loaded={r['loaded']} "
+          f"artifacts={r['artifacts_restored']} "
+          f"warm={r['first_query_warm']} bitexact={r['bitexact']}")
+    return doc
+
+
+def check(doc) -> int:
+    """Hard assertions shared by --smoke and run.py --check."""
+    ok = True
+
+    def need(cond, msg):
+        nonlocal ok
+        print(("ok   " if cond else "FAIL ") + msg, file=sys.stderr)
+        ok = ok and cond
+
+    over = doc["overload"]
+    need(over["shed"] > 0, "overload: admission shed engaged")
+    need(over["shed_late"] == 0,
+         "overload: every shed rejected within its deadline")
+    need(over["completed"] > 0, "overload: admitted queries completed")
+    need(over["errors"] == 0, "overload: zero unhandled failures")
+    need(over["wrong_results"] == 0, "overload: zero wrong results")
+    ratio = over["p99_over_uncontended"]
+    # 25ms absolute slack: at smoke scale the warm service times are
+    # single-digit ms, where one scheduler hiccup dwarfs any ratio
+    slack_ok = (over["service_p99_s"] is not None
+                and over["service_p99_s"]
+                <= doc["uncontended"]["p99_s"] + 0.025)
+    need(ratio is not None and (ratio <= 1.5 or slack_ok),
+         f"overload: accepted service p99 within 1.5x uncontended "
+         f"(ratio {ratio if ratio is None else round(ratio, 2)})")
+    r = doc["warm_restart"]
+    need(r["loaded"], "restart: snapshot restored")
+    need(r["first_query_warm"], "restart: first query replayed warm")
+    need(r["bitexact"], "restart: first query bit-exact vs cold oracle")
+    return 0 if ok else 1
+
+
+def smoke(sf: float) -> int:
+    """CI job: small catalog, hard assertions."""
+    return check(main(sf))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: assert shedding, typed rejections, "
+                         "bounded accepted p99, warm restart")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke(min(args.sf, 0.01)))
+    sys.exit(check(main(args.sf)))

@@ -340,6 +340,14 @@ def run_check(sf: float, baseline_path: str, rel_tol: float = 0.10,
     if chaos_bench.smoke(0.01) != 0:
         failures.append("chaos fault-injection suite")
 
+    # overload gate (DESIGN §16): shedding, typed rejections, bounded
+    # accepted p99, warm restart — correctness + contract, small
+    # catalog regardless of --sf
+    from benchmarks import overload_bench
+    print("\n===== overload (gate) =====", file=sys.stderr)
+    if overload_bench.smoke(0.01) != 0:
+        failures.append("overload-control suite")
+
     split = q5_transfer_split(sf)
     base_split = baseline.get("q5_transfer_seconds", {})
     if "numpy" in split and "jax" in split:
@@ -382,7 +390,8 @@ def main() -> None:
     from benchmarks import (chaos_bench, curation_bench,
                             distributed_transfer, figure2_tpch,
                             figure3_breakdown, figure4_robustness,
-                            kernel_bench, reorder_bench, serving_bench,
+                            kernel_bench, overload_bench,
+                            reorder_bench, serving_bench,
                             table1_q5_sizes)
 
     exhibits = {
@@ -398,6 +407,7 @@ def main() -> None:
             max(int(args.sf * 1_000_000), 20_000)),
         "serving": lambda: serving_bench.main(args.sf),
         "chaos": lambda: chaos_bench.main(args.sf),
+        "overload": lambda: overload_bench.main(args.sf),
         "reorder": lambda: reorder_bench.main(args.sf),
         "device": lambda: device_round_trips(args.sf),
     }
@@ -465,6 +475,8 @@ def main() -> None:
             doc["serving"] = results["serving"]
         if "chaos" in results:
             doc["chaos"] = results["chaos"]
+        if "overload" in results:
+            doc["overload"] = results["overload"]
         if "reorder" in results:
             doc["reorder"] = results["reorder"]
         if "device" in results:

@@ -20,14 +20,26 @@ invalidation hook for table replacement. The keys are self-certifying
 (a signature can only be recomputed from the same inputs) — that covers
 *which* artifact an entry is, but not whether its bytes are still the
 ones that were stored. Hits therefore **verify on read** (DESIGN.md
-§13): `put` records a content checksum (`content_checksum` — md5 over
-the value's structure, with large arrays sampled head+tail so a hit
-stays O(1) in entry size), and `get` recomputes and compares it. A
-mismatch — bit rot, an in-place mutation bug, or an injected
+§13): `put` records content checksums (`content_checksum` — md5 over
+the value's structure, with large arrays sampled so a hit stays O(1)
+in entry size), and `get` recomputes and compares one. A mismatch —
+bit rot, an in-place mutation bug, or an injected
 ``cache.deserialize`` fault — drops the entry, bumps the `corruptions`
 counter, and reports a miss, so a poisoned entry self-heals by
 recompute instead of serving wrong bytes. `verify_on_hit=False` turns
 the guard off for benchmarking the bare lookup.
+
+Sampling rotates (DESIGN.md §16): a fixed head+tail sample would never
+see mid-buffer corruption of a large artifact, so arrays past the
+full-hash threshold additionally contribute one **seeded mid-buffer
+window**, its offset stratified across the interior by a seed in
+``range(_VERIFY_SEEDS)``. `put` stores the checksum for every seed;
+each `get` verifies the seed picked by the entry's own hit counter
+(deterministic rotation), so corruption anywhere in the first
+``_FULL_HASH_BYTES + _VERIFY_SEEDS * _SAMPLE_BYTES`` bytes of an array
+is caught within at most `_VERIFY_SEEDS` hits while each individual
+hit still hashes O(`_SAMPLE_BYTES`). Values with no large arrays store
+a single checksum (every seed hashes identical bytes).
 
 Eviction is cost-to-rebuild weighted LRU, not pure LRU: `put` records
 `cost_ns` — the measured (or `TransferCosts`-estimated) time the
@@ -57,40 +69,54 @@ _SAMPLE_BYTES = 32 << 10
 #: eviction scans this many entries at the LRU end and drops the one
 #: cheapest to rebuild per byte (cost-to-rebuild weighted LRU)
 _EVICT_WINDOW = 8
+#: rotating verify-on-hit seeds: each adds one stratified mid-buffer
+#: sample window to large-array checksums (seed = hits % _VERIFY_SEEDS)
+_VERIFY_SEEDS = 4
 
 
-def _hash_array(h, a: np.ndarray) -> None:
+def _hash_array(h, a: np.ndarray, seed: int, big) -> None:
     h.update(f"nd:{a.dtype.str}:{a.shape}".encode())
     a = np.ascontiguousarray(a)
     if a.nbytes <= _FULL_HASH_BYTES:
         h.update(a.tobytes())
-    else:
-        flat = a.reshape(-1).view(np.uint8)
-        h.update(flat[:_SAMPLE_BYTES].tobytes())
-        h.update(flat[-_SAMPLE_BYTES:].tobytes())
+        return
+    big[0] = True
+    flat = a.reshape(-1).view(np.uint8)
+    h.update(flat[:_SAMPLE_BYTES].tobytes())
+    h.update(flat[-_SAMPLE_BYTES:].tobytes())
+    # seeded mid-buffer window: offsets stratified evenly across the
+    # interior, so the _VERIFY_SEEDS windows tile it contiguously for
+    # interiors up to _VERIFY_SEEDS * _SAMPLE_BYTES
+    span = flat.size - 2 * _SAMPLE_BYTES
+    if span > 0:
+        win = min(span, _SAMPLE_BYTES)
+        step = (span - win) // max(_VERIFY_SEEDS - 1, 1)
+        off = _SAMPLE_BYTES + (seed % _VERIFY_SEEDS) * step
+        h.update(flat[off:off + win].tobytes())
 
 
-def _hash_value(h, v) -> None:
+def _hash_value(h, v, seed: int, big) -> None:
     """Structural walk over the artifact kinds the cache stores: bloom
     word/range arrays, slot tuples of (Table, key dict), TransferStats
     snapshots. Dataclasses hash their declared fields only (lazy caches
     like `Column._vrange` appear after `put` and must not flip the
-    checksum); dict items hash in sorted key order."""
+    checksum); dict items hash in sorted key order. `big[0]` flips to
+    True when any array was sampled (its checksum is seed-dependent)."""
     if v is None:
         h.update(b"\x00N")
     elif isinstance(v, np.ndarray):
-        _hash_array(h, v)
+        _hash_array(h, v, seed, big)
     elif isinstance(v, (bool, int, float, str, bytes)):
         h.update(f"{type(v).__name__}:{v!r}".encode())
     elif isinstance(v, (tuple, list)):
         h.update(f"seq:{len(v)}".encode())
         for item in v:
-            _hash_value(h, item)
+            _hash_value(h, item, seed, big)
     elif isinstance(v, (dict,)):
         h.update(f"map:{len(v)}".encode())
         for k in sorted(v, key=repr):
             h.update(repr(k).encode())
-            _hash_value(h, v[k])
+            _hash_value(h, v[k], seed, big)
     elif isinstance(v, (set, frozenset)):
         h.update(f"set:{len(v)}".encode())
         for item in sorted(v, key=repr):
@@ -99,21 +125,36 @@ def _hash_value(h, v) -> None:
         h.update(f"dc:{type(v).__name__}".encode())
         for f in dataclasses.fields(v):
             h.update(f.name.encode())
-            _hash_value(h, getattr(v, f.name))
+            _hash_value(h, getattr(v, f.name), seed, big)
     elif hasattr(v, "columns") and isinstance(v.columns, dict):
         # Table (duck-typed: core must not import relational)
         h.update(f"tbl:{type(v).__name__}:{getattr(v, 'name', '')}"
                  .encode())
-        _hash_value(h, v.columns)
+        _hash_value(h, v.columns, seed, big)
     else:
         h.update(f"obj:{type(v).__name__}:{v!r}".encode())
 
 
-def content_checksum(value) -> str:
-    """Sampled-md5 content digest of a cache value (hex)."""
+def content_checksum(value, seed: int = 0) -> str:
+    """Sampled-md5 content digest of a cache value (hex). `seed`
+    selects which stratified mid-buffer window large arrays contribute
+    (values without large arrays hash identically for every seed)."""
     h = hashlib.md5()
-    _hash_value(h, value)
+    _hash_value(h, value, seed, [False])
     return h.hexdigest()
+
+
+def content_checksums(value) -> Tuple[str, ...]:
+    """The per-seed checksum tuple `put` stores: one entry when no
+    array needed sampling, `_VERIFY_SEEDS` entries otherwise."""
+    big = [False]
+    h = hashlib.md5()
+    _hash_value(h, value, 0, big)
+    first = h.hexdigest()
+    if not big[0]:
+        return (first,)
+    return (first,) + tuple(content_checksum(value, s)
+                            for s in range(1, _VERIFY_SEEDS))
 
 
 class ArtifactCache:
@@ -124,10 +165,10 @@ class ArtifactCache:
         self.max_bytes = int(max_bytes)
         self.verify_on_hit = verify_on_hit
         self._lock = threading.Lock()
-        # key -> (value, nbytes, versions, checksum, cost_ns)
-        self._entries: \
-            "OrderedDict[tuple, Tuple[object, int, frozenset, object, object]]" \
-            = OrderedDict()
+        # key -> (value, nbytes, versions, checksums, cost_ns, hits)
+        # checksums: per-seed tuple (or None when verify is off);
+        # hits: one-int list, the entry's verify-seed rotation counter
+        self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._bytes = 0
         self._by_version: Dict[int, Set[tuple]] = {}
         self._hits: Dict[str, int] = {}
@@ -146,13 +187,22 @@ class ArtifactCache:
                 self._misses[kind] = self._misses.get(kind, 0) + 1
                 return None
             self._entries.move_to_end(key)
-        value, _, _, stored, _ = ent
+        value, _, _, stored, _, hits = ent
         if self.verify_on_hit:
             # outside the lock: verify cost must not serialize
             # concurrent warm hits across worker threads
             try:
                 faultinject.fire("cache.deserialize")
-                ok = stored is None or content_checksum(value) == stored
+                if stored is None:
+                    ok = True
+                else:
+                    # rotate the sampled window per hit so mid-buffer
+                    # corruption of a large artifact is caught within
+                    # _VERIFY_SEEDS hits (int append under the GIL;
+                    # a racing hit at worst repeats a seed)
+                    seed = hits[0] % len(stored)
+                    hits[0] += 1
+                    ok = content_checksum(value, seed) == stored[seed]
             except faultinject.InjectedFault:
                 ok = False
             if not ok:
@@ -184,21 +234,23 @@ class ArtifactCache:
         nbytes = int(nbytes)
         if nbytes > self.max_bytes:
             return                       # would evict everything else
-        checksum = content_checksum(value) if self.verify_on_hit else None
+        checksums = content_checksums(value) if self.verify_on_hit \
+            else None
         with self._lock:
             old = self._entries.pop(key, None)
             if old is not None:
                 self._bytes -= old[1]
                 self._unindex(key, old[2])
-            self._entries[key] = (value, nbytes, versions, checksum,
-                                  None if cost_ns is None else int(cost_ns))
+            self._entries[key] = (value, nbytes, versions, checksums,
+                                  None if cost_ns is None else int(cost_ns),
+                                  [0])
             self._bytes += nbytes
             for v in versions:
                 self._by_version.setdefault(v, set()).add(key)
             self._puts[kind] = self._puts.get(kind, 0) + 1
             while self._bytes > self.max_bytes and self._entries:
                 k = self._evict_candidate()
-                _, nb, vers, _, _ = self._entries.pop(k)
+                _, nb, vers, _, _, _ = self._entries.pop(k)
                 self._bytes -= nb
                 self._unindex(k, vers)
                 self._evictions += 1
@@ -255,6 +307,33 @@ class ArtifactCache:
             self._bytes = 0
             self._invalidated += n
         return n
+
+    # -- snapshot/restore (DESIGN.md §16) ------------------------------
+    def export_entries(self) -> list:
+        """LRU-ordered (key, value, nbytes, versions, checksums,
+        cost_ns) rows for `repro.serve.snapshot` serialization."""
+        with self._lock:
+            return [(k, e[0], e[1], e[2], e[3], e[4])
+                    for k, e in self._entries.items()]
+
+    def absorb(self, rows) -> Tuple[int, int]:
+        """Re-admit exported rows (a restored snapshot). Each value's
+        stored checksum is **re-verified** before admission — a row
+        whose bytes no longer match its provenance-era checksum is
+        dropped and counted as a corruption, never served. Returns
+        (kept, dropped)."""
+        kept = dropped = 0
+        for key, value, nbytes, versions, checksums, cost_ns in rows:
+            if checksums is not None \
+                    and content_checksum(value, 0) != checksums[0]:
+                with self._lock:
+                    self._corruptions += 1
+                dropped += 1
+                continue
+            self.put(key, value, nbytes=nbytes, versions=versions,
+                     cost_ns=cost_ns)
+            kept += 1
+        return kept, dropped
 
     # -- introspection -------------------------------------------------
     @property

@@ -44,16 +44,33 @@ pad to power-of-two buckets so the jit cache stays O(log n));
 `SimulatedExchange` is the numpy mirror used when only one XLA device
 exists. Results are identical; tests assert it under 8 forced host
 devices (tests/test_distributed.py, tests/test_engine_join_dist.py).
+
+Faults recover proportionately (DESIGN.md §16) instead of costing the
+whole engine a ladder rung: every collective runs under an
+`ExchangeRecovery` that retries transient ``exchange.send`` /
+``exchange.recv`` faults in place (`repro.core.recovery.RetryPolicy` —
+seeded-jitter backoff, deadline-aware, budget-bounded); on retry
+exhaustion the engine **replays the failed edge's whole exchange** from
+its host-resident key inputs (everything the strategies consume is
+recomputable — lineage replay, one shot) before letting the fault reach
+the degradation ladder. Straggler shards (``shard.delay``) get hedged
+re-dispatch after a p99-based delay, first result wins. All recovery
+events land in ``DistStats.recoveries`` and surface through
+``ExecStats.report()["recoveries"]``; every path is bit-exact because
+retries/replays/hedges re-run pure functions of host-resident inputs.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import List, Optional, Tuple
+import time
+from concurrent.futures import TimeoutError as _FutureTimeout
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import faultinject
+from repro.core import faultinject, recovery
+from repro.core.errors import BackendError
 from repro.core.engine_join import (
     JoinEngine, _partition_ids, assemble_partitioned_join, get_join_engine,
     join_partition,
@@ -148,12 +165,16 @@ class SimulatedExchange:
         order, since shards own ascending contiguous ranges)."""
         faultinject.fire("exchange.send")
         p = self.nshards
-        return [np.concatenate([blocks[s][t] for s in range(p)])
-                for t in range(p)]
+        out = [np.concatenate([blocks[s][t] for s in range(p)])
+               for t in range(p)]
+        faultinject.fire("exchange.recv")
+        return out
 
     def all_gather(self, shards: List[np.ndarray]) -> np.ndarray:
         faultinject.fire("exchange.send")
-        return np.concatenate(shards)
+        out = np.concatenate(shards)
+        faultinject.fire("exchange.recv")
+        return out
 
 
 class MeshExchange:
@@ -218,6 +239,7 @@ class MeshExchange:
                 send[s, t, :cnt[s, t]] = blocks[s][t]
         from repro.core import device_plane
         recv = device_plane.to_host(self._a2a(self._put(send)))
+        faultinject.fire("exchange.recv")
         # recv[t, s] = block s->t; concat sources in shard order
         return [np.concatenate([recv[t, s, :cnt[s, t]] for s in range(p)])
                 for t in range(p)]
@@ -233,9 +255,139 @@ class MeshExchange:
             send[s, :cnt[s]] = shards[s]
         from repro.core import device_plane
         recv = device_plane.to_host(self._ag(self._put(send)))
+        faultinject.fire("exchange.recv")
         # every shard holds the full gather; reassemble from shard 0's
         # copy (source-ordered => original global order)
         return np.concatenate([recv[0, s, :cnt[s]] for s in range(p)])
+
+
+# --------------------------------------------------------------------------
+# shard-level recovery (DESIGN.md §16)
+# --------------------------------------------------------------------------
+
+#: fault points a retry/replay may absorb — transient exchange faults
+#: only; anything else is a real engine bug and must reach the ladder
+RECOVERABLE_POINTS = ("exchange.send", "exchange.recv")
+
+
+class ExchangeRecovery:
+    """Per-query recovery runtime threaded through the exchange
+    strategies: retry-wrapped collectives, one-shot lineage replay
+    authorization, hedged shard tasks, and the event log that becomes
+    ``ExecStats.report()["recoveries"]``.
+
+    `collective` retries transient exchange faults in place with the
+    engine's `RetryPolicy` (each retry re-invokes the collective, so an
+    at-index fault schedule clears on the second call while an "all"
+    schedule exhausts the attempts). `replayable` spends the retry
+    budget to authorize one whole-edge re-execution from host-resident
+    inputs. `shard_tasks` runs the per-shard pure local-join tasks,
+    hedging stragglers past `HedgePolicy.delay()` with a second
+    dispatch — first result wins, bit-identical by purity."""
+
+    def __init__(self, retry: Optional[recovery.RetryPolicy] = None,
+                 budget: Optional[recovery.RetryBudget] = None,
+                 hedge: Optional[recovery.HedgePolicy] = None,
+                 ctx=None, events: Optional[List[dict]] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.retry = retry
+        self.budget = budget
+        self.hedge = hedge
+        self.ctx = ctx
+        self.events = events if events is not None else []
+        self._clock = clock
+
+    @staticmethod
+    def _transient(err: BaseException) -> bool:
+        return getattr(err, "point", None) in RECOVERABLE_POINTS
+
+    def collective(self, label: str, fn, *args):
+        if self.retry is None:
+            return fn(*args)
+        attempt = 0
+        while True:
+            try:
+                return fn(*args)
+            except BackendError as err:
+                if not self._transient(err):
+                    raise
+                attempt += 1
+                if attempt > self.retry.attempts or (
+                        self.budget is not None
+                        and not self.budget.try_spend()):
+                    self.events.append(
+                        {"kind": "retry_exhausted", "label": label,
+                         "point": getattr(err, "point", None),
+                         "attempts": attempt - 1})
+                    raise
+                self.events.append(
+                    {"kind": "retry", "label": label,
+                     "point": getattr(err, "point", None),
+                     "attempt": attempt})
+                self.retry.backoff(label, attempt, self.ctx)
+
+    def replayable(self, err: BaseException) -> bool:
+        if not self._transient(err):
+            return False
+        return self.budget is None or self.budget.try_spend()
+
+    def note_replay(self, label: str, err: BaseException,
+                    ok: bool) -> None:
+        self.events.append({"kind": "replay", "label": label,
+                            "point": getattr(err, "point", None),
+                            "ok": bool(ok)})
+
+    def _wrap(self, task):
+        """``shard.delay`` instrumentation: with hedging armed the
+        fault becomes a simulated straggler sleep; without, it
+        propagates like any backend fault (ladder territory)."""
+        hedge = self.hedge
+
+        def run():
+            try:
+                faultinject.fire("shard.delay")
+            except faultinject.InjectedFault:
+                if hedge is None:
+                    raise
+                time.sleep(hedge.straggle_seconds)
+            return task()
+        return run
+
+    def shard_tasks(self, label: str, tasks) -> list:
+        if self.hedge is None:
+            return [self._wrap(t)() for t in tasks]
+        pool = recovery.hedge_pool()
+        out = []
+        for i, task in enumerate(tasks):
+            t0 = self._clock()
+            fut = pool.submit(self._wrap(task))
+            try:
+                res = fut.result(timeout=self.hedge.delay())
+            except _FutureTimeout:
+                res = self._wrap(task)()          # hedged re-dispatch
+                winner = "hedge"
+                if fut.done():                    # primary finished in
+                    res = fut.result()            # the meantime: wins
+                    winner = "primary"
+                self.events.append({"kind": "hedge", "label": label,
+                                    "shard": i, "winner": winner})
+            self.hedge.observe(self._clock() - t0)
+            out.append(res)
+        return out
+
+
+def _run_shard_tasks(tasks, recover: Optional[ExchangeRecovery],
+                     label: str) -> list:
+    if recover is None:
+        return [t() for t in tasks]
+    return recover.shard_tasks(label, tasks)
+
+
+def _collective(recover: Optional[ExchangeRecovery], label: str,
+                fn, *args):
+    if recover is None:
+        return fn(*args)
+    return recover.collective(label, fn, *args)
 
 
 # --------------------------------------------------------------------------
@@ -246,7 +398,8 @@ class MeshExchange:
 def broadcast_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
                            how: str, exchange, engine: JoinEngine,
                            build_valid: Optional[np.ndarray] = None,
-                           probe_valid: Optional[np.ndarray] = None
+                           probe_valid: Optional[np.ndarray] = None,
+                           recover: Optional[ExchangeRecovery] = None
                            ) -> Tuple[np.ndarray, np.ndarray, int]:
     """All-gather the build keys; each shard joins its contiguous probe
     range against the full build side. Returns (build_idx, probe_idx,
@@ -258,7 +411,8 @@ def broadcast_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
     each shard applies its own probe-validity slice locally."""
     p = exchange.nshards
     bb = shard_bounds(len(build_key), p)
-    gathered = exchange.all_gather(
+    gathered = _collective(
+        recover, "broadcast.all_gather", exchange.all_gather,
         [_pack(build_key[bb[s]:bb[s + 1]],
                valid=None if build_valid is None
                else build_valid[bb[s]:bb[s + 1]])
@@ -266,13 +420,19 @@ def broadcast_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
     full = _unpack_keys(gathered)
     full_valid = None if build_valid is None else gathered[:, -1] != 0
     pb = shard_bounds(len(probe_key), p)
+
+    def _shard_join(s):
+        def run():
+            return engine.join_indices_valid(
+                full, probe_key[pb[s]:pb[s + 1]], how=how,
+                build_valid=full_valid,
+                probe_valid=None if probe_valid is None
+                else probe_valid[pb[s]:pb[s + 1]])
+        return run
+
     bidx, pidx = [], []
-    for s in range(p):
-        gb, gp = engine.join_indices_valid(
-            full, probe_key[pb[s]:pb[s + 1]], how=how,
-            build_valid=full_valid,
-            probe_valid=None if probe_valid is None
-            else probe_valid[pb[s]:pb[s + 1]])
+    for s, (gb, gp) in enumerate(_run_shard_tasks(
+            [_shard_join(s) for s in range(p)], recover, "broadcast")):
         bidx.append(gb)
         pidx.append(gp + pb[s])
     row_bytes = KEY_WIRE_BYTES + (VALID_WIRE_BYTES
@@ -284,7 +444,8 @@ def broadcast_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
 def shuffle_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
                          how: str, exchange,
                          build_valid: Optional[np.ndarray] = None,
-                         probe_valid: Optional[np.ndarray] = None
+                         probe_valid: Optional[np.ndarray] = None,
+                         recover: Optional[ExchangeRecovery] = None
                          ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Hash-partition both sides to their owning shard with one
     all-to-all, sorted-join each partition locally, scatter back to
@@ -319,20 +480,31 @@ def shuffle_join_indices(build_key: np.ndarray, probe_key: np.ndarray,
             blocks.append([packed[cuts[t]:cuts[t + 1]] for t in range(p)])
             moved = len(rows) - int(cuts[s + 1] - cuts[s])
             wire += moved * row_bytes
-        sides.append(exchange.all_to_all(blocks))
+        side = "build" if keys is build_key else "probe"
+        sides.append(_collective(recover, f"shuffle.all_to_all.{side}",
+                                 exchange.all_to_all, blocks))
     recv_b, recv_p = sides
+
+    def _part_join(t):
+        def run():
+            bblock = _drop_invalid(recv_b[t], build_valid is not None)
+            pblock = _drop_invalid(recv_p[t], probe_valid is not None)
+            brows = _unpack_rowids(bblock)
+            prows = _unpack_rowids(pblock)
+            if brows.size == 0 or prows.size == 0:
+                return None
+            part = join_partition(_unpack_keys(bblock), brows,
+                                  _unpack_keys(pblock), prows)
+            return prows, part
+        return run
 
     counts = np.zeros(npr, np.int64)
     parts = []
-    for t in range(p):
-        bblock = _drop_invalid(recv_b[t], build_valid is not None)
-        pblock = _drop_invalid(recv_p[t], probe_valid is not None)
-        brows = _unpack_rowids(bblock)
-        prows = _unpack_rowids(pblock)
-        if brows.size == 0 or prows.size == 0:
+    for res in _run_shard_tasks([_part_join(t) for t in range(p)],
+                                recover, "shuffle"):
+        if res is None:
             continue
-        part = join_partition(_unpack_keys(bblock), brows,
-                              _unpack_keys(pblock), prows)
+        prows, part = res
         counts[prows] = part[-1]
         parts.append(part)
     bidx, pidx = assemble_partitioned_join(npr, counts, parts, how)
@@ -359,6 +531,9 @@ class DistStats:
     nshards: int
     device_backed: bool
     joins: List[DistJoinStat] = dataclasses.field(default_factory=list)
+    #: recovery events (retry / retry_exhausted / replay / hedge dicts)
+    #: appended by `ExchangeRecovery`; surfaced via ExecStats.report()
+    recoveries: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def shuffle_bytes(self) -> int:
@@ -393,6 +568,12 @@ class DistributedJoinEngine(JoinEngine):
                  local_backend: str = "numpy",
                  device: Optional[bool] = None, mesh=None):
         self.ctx = None          # per-query QueryContext (set on forks)
+        # shard-level recovery defaults (§16): transient exchange faults
+        # retry in place out of the box; hedging and the budget are
+        # opt-in (armed per fork by ExecConfig / the serving layer)
+        self.retry: Optional[recovery.RetryPolicy] = recovery.RetryPolicy()
+        self.retry_budget: Optional[recovery.RetryBudget] = None
+        self.hedge: Optional[recovery.HedgePolicy] = None
         self.local = get_join_engine(local_backend)
         if device is None:
             # auto: device-backed only when the requested shard count
@@ -416,11 +597,23 @@ class DistributedJoinEngine(JoinEngine):
         accounting never mixes across executors or subqueries."""
         eng = object.__new__(DistributedJoinEngine)
         eng.ctx = None
+        eng.retry = self.retry
+        eng.retry_budget = self.retry_budget
+        eng.hedge = self.hedge
         eng.local = self.local
         eng.exchange = self.exchange
         eng.nshards = self.nshards
         eng.stats = DistStats(self.nshards, self.exchange.device_backed)
         return eng
+
+    def arm_recovery(self, retry=None, budget=None, hedge=None) -> None:
+        """Override recovery knobs on this fork (ExecConfig plumbing)."""
+        if retry is not None:
+            self.retry = retry
+        if budget is not None:
+            self.retry_budget = budget
+        if hedge is not None:
+            self.hedge = hedge
 
     def join_indices(self, build_key, probe_key, how="inner"):
         return self.join_indices_valid(build_key, probe_key, how=how)
@@ -458,19 +651,46 @@ class DistributedJoinEngine(JoinEngine):
                                   if probe_valid is not None else 0)
         est_bcast = (p - 1) * nb * bkey_bytes
         est_shuf = (nb * row_b + npr * row_p) * (p - 1) // p
+        rec = ExchangeRecovery(retry=self.retry, budget=self.retry_budget,
+                               hedge=self.hedge, ctx=ctx,
+                               events=self.stats.recoveries)
         if est_bcast <= est_shuf:
-            bidx, pidx, wire = broadcast_join_indices(
-                build_key, probe_key, how, self.exchange, self.local,
-                build_valid=build_valid, probe_valid=probe_valid)
+            bidx, pidx, wire = self._with_replay(
+                rec, "broadcast", lambda: broadcast_join_indices(
+                    build_key, probe_key, how, self.exchange, self.local,
+                    build_valid=build_valid, probe_valid=probe_valid,
+                    recover=rec))
             self.stats.joins.append(
                 DistJoinStat(how, "broadcast", nb, npr, 0, wire))
         else:
-            bidx, pidx, wire = shuffle_join_indices(
-                build_key, probe_key, how, self.exchange,
-                build_valid=build_valid, probe_valid=probe_valid)
+            bidx, pidx, wire = self._with_replay(
+                rec, "shuffle", lambda: shuffle_join_indices(
+                    build_key, probe_key, how, self.exchange,
+                    build_valid=build_valid, probe_valid=probe_valid,
+                    recover=rec))
             self.stats.joins.append(
                 DistJoinStat(how, "shuffle", nb, npr, wire, 0))
         return bidx, pidx
+
+    @staticmethod
+    def _with_replay(rec: ExchangeRecovery, label: str, fn):
+        """Lineage replay: when in-place retries exhaust, re-execute the
+        whole edge's exchange once from host-resident inputs (the keys /
+        validity planes the strategy closures capture never left the
+        host, so the replay is a pure re-run — bit-identical on
+        success). A second failure reaches the degradation ladder."""
+        try:
+            return fn()
+        except BackendError as err:
+            if not rec.replayable(err):
+                raise
+            try:
+                out = fn()
+            except BackendError:
+                rec.note_replay(label, err, ok=False)
+                raise
+            rec.note_replay(label, err, ok=True)
+            return out
 
 
 _BASE_ENGINES = {}

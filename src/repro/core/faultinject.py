@@ -13,13 +13,23 @@ Registered points:
 * ``engine.probe``   — Bloom-engine survivor probe (`VertexScan.probe`)
 * ``engine.build``   — Bloom filter build (`VertexScan.build`)
 * ``join.indices``   — join-index computation (host + device engines)
-* ``exchange.send``  — distributed exchange collective (all-to-all /
-  all-gather, simulated and mesh-backed alike)
+* ``exchange.send``  — distributed exchange collective, send side
+  (all-to-all / all-gather entry, simulated and mesh-backed alike)
+* ``exchange.recv``  — distributed exchange collective, receive side
+  (after the collective returns, before reassembly — inside the same
+  retry scope as the send, DESIGN.md §16)
+* ``shard.delay``    — per-shard local-join straggler: with hedging
+  armed the task sleeps `HedgePolicy.straggle_seconds` instead of
+  raising, exercising hedged re-dispatch
 * ``cache.deserialize`` — artifact-cache read-out; an injected fault
   here is absorbed by verify-on-hit (counted as corruption, entry
   dropped, miss returned) and never propagates
 * ``gather.payload`` — late-materialization payload gather
   (`JoinCursor.materialize`)
+* ``snapshot.load``  — serve-layer cache-snapshot restore; an injected
+  fault is treated as a corrupt snapshot (dropped, cold start)
+* ``worker.crash``   — `QueryServer` worker thread death mid-query;
+  the pool sets a typed error on the Future and respawns the worker
 
 Schedules are deterministic by construction: a point fires at explicit
 call indices (``{"join.indices": 0}``), at every call
@@ -43,8 +53,12 @@ FAULT_POINTS = (
     "engine.build",
     "join.indices",
     "exchange.send",
+    "exchange.recv",
+    "shard.delay",
     "cache.deserialize",
     "gather.payload",
+    "snapshot.load",
+    "worker.crash",
 )
 
 

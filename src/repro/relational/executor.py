@@ -34,7 +34,8 @@ import numpy as np
 from repro.core import device_plane, provenance
 from repro.core.engine_join import JoinCursor, Slot, get_join_engine
 from repro.core.errors import (
-    DeadlineExceeded, QueryCancelled, QueryContext, ResourceExhausted,
+    BackendError, DeadlineExceeded, QueryCancelled, QueryContext,
+    ResourceExhausted,
 )
 from repro.core.graph import (
     Edge, NoPredTrans, Strategy, TransferStats, Vertex, decision_counts,
@@ -90,6 +91,11 @@ class ExecStats:
     # folded in. Always present; all-zero on pure-host runs.
     device: "device_plane.DeviceStats" = dataclasses.field(
         default_factory=device_plane.DeviceStats)
+    # recovery events carried over from ladder rungs that ultimately
+    # failed (their DistStats die with the discarded attempt): the
+    # retries/replays a rung burned before degrading stay visible in
+    # `report()["recoveries"]` alongside the final rung's own events
+    recovery_carry: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:
@@ -192,6 +198,24 @@ class ExecStats:
                 "broadcast_bytes": int(self.dist.broadcast_bytes),
                 "strategies": self.dist.strategy_counts(),
             }
+        # shard-level recovery record (DESIGN.md §16): every retry /
+        # lineage replay / hedge the distributed runtime absorbed while
+        # producing this result, plus the attempts burned by ladder
+        # rungs that still failed (carried out of their discarded stats
+        # so "all"-schedule faults leave an exhaustion trace here too)
+        events = list(self.recovery_carry)
+        if self.dist is not None:
+            events.extend(getattr(self.dist, "recoveries", ()))
+        kinds: Dict[str, int] = {}
+        for e in events:
+            kinds[e.get("kind", "?")] = kinds.get(e.get("kind", "?"), 0) + 1
+        out["recoveries"] = {
+            "events": events,
+            "retries": kinds.get("retry", 0),
+            "replays": kinds.get("replay", 0),
+            "hedges": kinds.get("hedge", 0),
+            "exhausted": kinds.get("retry_exhausted", 0),
+        }
         return out
 
 
@@ -246,7 +270,18 @@ class ExecConfig:
     indices on the accelerator when one is attached (TPU), "on" forces
     the device path even off-TPU (the interpret-mode CI/test
     configuration), "off" forces the host paths. The numpy backend
-    ignores it."""
+    ignores it.
+
+    Recovery knobs (DESIGN.md §16, all optional, `repro.core.recovery`):
+    `retry_policy` overrides the distributed engine's default
+    seeded-jitter backoff for transient exchange faults; `retry_budget`
+    is a shared `RetryBudget` every retry/replay spends (the serving
+    layer passes one per server so retry storms cannot amplify
+    overload); `hedge` arms `HedgePolicy` straggler hedging on the
+    per-shard local joins; `breakers` is a shared `BreakerBoard` the
+    degradation ladder consults before attempting a rung — an open
+    breaker skips the rung outright (recorded in `ExecStats.degraded`
+    as a "CircuitOpen" move) instead of rediscovering the failure."""
 
     strategy: Optional[Strategy] = None
     join_backend: str = "numpy"
@@ -262,6 +297,10 @@ class ExecConfig:
     reorder: str = "auto"
     reorder_fn: Optional[Callable] = None
     device: str = "auto"
+    retry_policy: Optional[object] = None
+    retry_budget: Optional[object] = None
+    hedge: Optional[object] = None
+    breakers: Optional[object] = None
 
     def __post_init__(self):
         if self.engine not in ("single", "distributed"):
@@ -455,20 +494,53 @@ class Executor:
         Cooperative aborts (deadline/cancel) always propagate — the
         client asked for the abort, a cheaper rung is not an answer."""
         degraded: List[dict] = []
+        carried: List[dict] = []
+        board = self.config.breakers
         cur = self
-        for _ in range(8):              # > total rung count, by margin
+        for _ in range(12):             # > total rung count, by margin
+            rung = cur._rung_desc()
+            if board is not None and not board.allow(rung):
+                # open breaker: skip the rung without rediscovering the
+                # failure (half-open probes pass `allow` after cooldown)
+                err = BackendError(f"circuit open for rung {rung}",
+                                   phase="admission")
+                nxt = cur._next_rung(err)
+                if nxt is None:
+                    raise err
+                degraded.append({
+                    "from": rung, "to": nxt._rung_desc(),
+                    "phase": "admission", "error": "CircuitOpen",
+                    "detail": f"breaker open for {rung}"})
+                cur = nxt
+                continue
+            pre_dist = getattr(getattr(cur, "join_engine", None),
+                               "stats", None)
             try:
                 result, stats = cur._execute_once(plan, ctx)
+                if board is not None:
+                    board.record(rung, True)
                 stats.degraded = degraded
+                stats.recovery_carry = carried
                 return result, stats
             except (DeadlineExceeded, QueryCancelled):
                 raise
             except Exception as e:
+                if board is not None:
+                    board.record(rung, False)
+                # keep the failed rung's recovery attempts: its stats
+                # object dies with the discarded attempt. Only a stats
+                # object forked *during* this attempt counts — a rung
+                # that failed pre-fork still points at an older query's
+                # stats, which must not leak in here.
+                failed_dist = getattr(getattr(cur, "join_engine", None),
+                                      "stats", None)
+                if failed_dist is not None and failed_dist is not pre_dist:
+                    carried.extend(getattr(failed_dist, "recoveries", ()))
                 nxt = cur._next_rung(e)
                 if nxt is None:
                     raise
                 degraded.append({
-                    "from": cur._rung_desc(), "to": nxt._rung_desc(),
+                    "from": rung, "to": nxt._rung_desc(),
                     "phase": getattr(e, "point", None) or cur._phase,
                     "error": type(e).__name__,
                     "detail": str(e)[:160]})
@@ -500,6 +572,10 @@ class Executor:
             # object must keep describing that call
             self.join_engine = self.join_engine.fork()
             self.join_engine.ctx = ctx   # forks are per-query: safe
+            self.join_engine.arm_recovery(
+                retry=self.config.retry_policy,
+                budget=self.config.retry_budget,
+                hedge=self.config.hedge)
             stats.dist = self.join_engine.stats
 
         # -- cache identity: canonical plan fingerprint (DESIGN §12) ----

@@ -225,6 +225,18 @@ class PlanCache:
                     "hit_rate": self.hits / max(self.hits + self.misses,
                                                 1)}
 
+    # -- snapshot/restore (DESIGN.md §16) ------------------------------
+    def export_entries(self) -> list:
+        """LRU-ordered (key, PlanInfo) rows; everything is picklable
+        (frozensets/tuples/bytes) for `repro.serve.snapshot`."""
+        with self._lock:
+            return list(self._entries.items())
+
+    def absorb(self, rows) -> int:
+        for key, info in rows:
+            self.put(key, info)
+        return len(rows)
+
 
 # --------------------------------------------------------------------------
 # per-edge selectivity history (DESIGN §14)
@@ -297,3 +309,17 @@ class SelHistory:
             return {"entries": len(self._entries),
                     "edges": sum(len(e)
                                  for e in self._entries.values())}
+
+    # -- snapshot/restore (DESIGN.md §16) ------------------------------
+    def export_entries(self) -> list:
+        with self._lock:
+            return [(k, dict(v)) for k, v in self._entries.items()]
+
+    def absorb(self, rows) -> int:
+        with self._lock:
+            for key, ent in rows:
+                self._entries[key] = dict(ent)
+                self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        return len(rows)

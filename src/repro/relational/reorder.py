@@ -382,6 +382,11 @@ def region_edges(region: Region, cursors: Sequence[JoinCursor],
 #: evaluations, still microseconds next to any join
 _DP_MAX_UNITS = 13
 
+#: deadline granularity inside the subset DP: `QueryContext.check` runs
+#: once per this many DP states, bounding overrun to a few hundred
+#: cheap arithmetic steps past the deadline
+_CTX_CHECK_MASKS = 256
+
 #: spine-keep hysteresis: keep the plan's own tree unless the DP's
 #: best order is modeled at least this much cheaper. A reorder that
 #: wins small-to-moderate on the model loses in practice — the chain
@@ -422,12 +427,15 @@ def _spine_steps(region: Region) -> List[Tuple[int, int]]:
 def _dp_order(k: int, rows: Sequence[float],
               edges: Dict[Tuple[int, int], _REdge],
               adj: Dict[int, set], costs, shards: Optional[int],
-              spine: Sequence[Tuple[int, int]]
+              spine: Sequence[Tuple[int, int]], ctx=None
               ) -> Tuple[List[int], List[float]]:
     """Exact min-modeled-cost left-deep order by DP over subsets
     (Selinger over the `greedy_order` cost model). Cartesian steps are
     never considered; ties break toward the lowest unit index, so the
-    result is deterministic."""
+    result is deterministic. `ctx` (a `QueryContext`) is consulted
+    every `_CTX_CHECK_MASKS` DP states — the subset walk is the one
+    ordering-phase loop whose work grows 2^k, so a deadline must be
+    able to interrupt it mid-search."""
     full = (1 << k) - 1
     # per-unit incidence + adjacency bitmasks, hoisted out of the mask
     # loops: the DP visits 2^k masks, and iterating edges.items() per
@@ -479,8 +487,10 @@ def _dp_order(k: int, rows: Sequence[float],
     parent = [-1] * (full + 1)
     for i in range(k):
         cost[1 << i] = 0.0
-    for mask in sorted(range(3, full + 1),
-                       key=lambda m: (bin(m).count("1"), m)):
+    for step, mask in enumerate(sorted(range(3, full + 1),
+                                key=lambda m: (bin(m).count("1"), m))):
+        if ctx is not None and step % _CTX_CHECK_MASKS == 0:
+            ctx.check("join")
         if mask & (mask - 1) == 0:
             continue
         for v in range(k):
@@ -536,7 +546,7 @@ def _dp_order(k: int, rows: Sequence[float],
 
 def greedy_order(region: Region, cursors: Sequence[JoinCursor],
                  pairs: Sequence[_Pair], adj: Dict[int, set],
-                 info: Optional[ReorderInfo]
+                 info: Optional[ReorderInfo], ctx=None
                  ) -> Tuple[List[int], List[float]]:
     """Min-modeled-cost left-deep order. Cardinality estimates combine
     exact post-transfer live counts, exact per-column distinct-key
@@ -578,7 +588,7 @@ def greedy_order(region: Region, cursors: Sequence[JoinCursor],
 
     if k <= _DP_MAX_UNITS:
         return _dp_order(k, rows, edges, adj, costs, shards,
-                         _spine_steps(region))
+                         _spine_steps(region), ctx=ctx)
 
     # seed: the cheapest-modeled first join (the single-pair join
     # output is what the step materializes; match fractions from the
@@ -599,6 +609,8 @@ def greedy_order(region: Region, cursors: Sequence[JoinCursor],
     est_rows = [card]
 
     while len(order) < k:
+        if ctx is not None:
+            ctx.check("join")
         cand = None
         for v in range(k):
             if v in in_s or not (adj[v] & in_s):
@@ -663,7 +675,8 @@ def execute_region(ex, region: Region, slots, stats) -> JoinCursor:
             entry["source"] = "fn"
         else:
             order, est_rows = greedy_order(region, cursors, pairs, adj,
-                                           ex._reorder_info)
+                                           ex._reorder_info,
+                                           ctx=ex._ctx)
             entry["est_rows"] = [round(float(r), 1) for r in est_rows]
     except ReorderFallback as f:
         entry["fallback"] = str(f)

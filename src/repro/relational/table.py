@@ -16,17 +16,38 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import itertools
+import threading
 from typing import Dict, Iterable, Mapping, Optional, Sequence
 
 import numpy as np
 
-# monotonic data-version counter (itertools.count is atomic under the
-# GIL): every Table constructed gets a fresh version, so "the same
-# catalog Table object" and "the same version" are interchangeable —
-# the cross-query artifact caches key on it (DESIGN.md §12) and
-# replacing a catalog table automatically changes every derived key
-_versions = itertools.count(1)
+# monotonic data-version counter: every Table constructed gets a fresh
+# version, so "the same catalog Table object" and "the same version"
+# are interchangeable — the cross-query artifact caches key on it
+# (DESIGN.md §12) and replacing a catalog table automatically changes
+# every derived key. Lock-guarded (not itertools.count) so snapshot
+# restore can raise the floor: re-adopting a snapshot's version numbers
+# (DESIGN.md §16) must guarantee no future Table collides with them.
+_version_lock = threading.Lock()
+_version_next = 1
+
+
+def _next_version() -> int:
+    global _version_next
+    with _version_lock:
+        v = _version_next
+        _version_next += 1
+        return v
+
+
+def bump_version_floor(floor: int) -> None:
+    """Ensure every future `Table.version` exceeds `floor`. Called by
+    snapshot restore after re-assigning a snapshot's recorded versions
+    to digest-verified catalog tables, so the re-adopted numbers can
+    never be handed out again in this process."""
+    global _version_next
+    with _version_lock:
+        _version_next = max(_version_next, int(floor) + 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,7 +140,7 @@ class Table:
     def __init__(self, columns: Mapping[str, Column], name: str = ""):
         self.columns: Dict[str, Column] = dict(columns)
         self.name = name
-        self.version = next(_versions)
+        self.version = _next_version()
         lens = {len(c) for c in self.columns.values()}
         assert len(lens) <= 1, f"ragged table {name}: {lens}"
         self._nrows = lens.pop() if lens else 0

@@ -25,6 +25,18 @@ Catalog updates go through `update_table`, which swaps the table under
 the catalog lock and drops every cached artifact derived from the old
 version — cache keys embed `Table.version`, so stale entries also
 become unreachable by construction; invalidation just frees the bytes.
+
+Overload control & warm restart (DESIGN.md §16): per-rung circuit
+breakers short-circuit the degradation ladder past rungs that keep
+failing; deadline-aware admission sheds queries whose estimated queue
+wait already exceeds their deadline (typed `ResourceExhausted` at
+admission, instead of a doomed `DeadlineExceeded` later); a per-server
+`RetryBudget` caps exchange retries across all concurrent queries; a
+`worker.crash` fault kills one worker thread — the victim's query gets
+a typed error and the pool respawns a replacement, isolating the blast
+radius to that single query. `drain_to_snapshot` / `snapshot_path`
+persist and restore the cache tier across restarts (see
+`repro.serve.snapshot`).
 """
 from __future__ import annotations
 
@@ -32,14 +44,17 @@ import asyncio
 import dataclasses
 import queue
 import threading
+import time
 from concurrent.futures import Future
 from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro.core import faultinject, recovery
 from repro.core.artifact_cache import ArtifactCache
 from repro.core.errors import (
-    DeadlineExceeded, QueryCancelled, QueryContext,
+    BackendError, DeadlineExceeded, QueryCancelled, QueryContext,
+    ResourceExhausted,
 )
 from repro.core.transfer import BACKEND_AWARE, STRATEGIES, make_strategy
 from repro.relational.executor import ExecConfig, ExecStats, Executor
@@ -82,6 +97,21 @@ class ServeConfig:
     # runtime join reordering (DESIGN.md §14): "auto" reorders wherever
     # the executor supports it, "off" pins the plan's static order
     reorder: str = "auto"
+    # overload control + warm restart (DESIGN.md §16). `shed` enables
+    # deadline-aware admission shedding (only queries *with* a deadline
+    # are ever shed); breaker_* parameterize the per-rung circuit
+    # breakers the ladder consults; retry_budget_* bound exchange
+    # retries server-wide; `hedge` arms straggler re-dispatch on
+    # distributed shard joins; `snapshot_path`, when set, is restored
+    # at construction (if present) — pair with `drain_to_snapshot`.
+    shed: bool = True
+    breaker_window: int = 8
+    breaker_threshold: int = 4
+    breaker_cooldown: float = 5.0
+    retry_budget_capacity: float = 64.0
+    retry_budget_refill: float = 8.0
+    hedge: bool = False
+    snapshot_path: Optional[str] = None
 
     def __post_init__(self):
         if self.admission not in ("block", "reject"):
@@ -92,6 +122,10 @@ class ServeConfig:
         if self.reorder not in ("auto", "on", "off"):
             raise ValueError(f"unknown reorder {self.reorder!r}; "
                              "choose 'auto', 'on' or 'off'")
+        if self.breaker_threshold > self.breaker_window:
+            raise ValueError(
+                f"breaker_threshold ({self.breaker_threshold}) cannot "
+                f"exceed breaker_window ({self.breaker_window})")
 
 
 class ServerMetrics:
@@ -118,6 +152,16 @@ class ServerMetrics:
         # runtime join reordering (DESIGN.md §14)
         self.reordered = 0              # queries whose order changed
         self._qerr: List[Tuple[float, float, int]] = []
+        # overload control & recovery (DESIGN.md §16). `shed` counts
+        # admission-time rejections for deadline reasons (distinct from
+        # `rejected` = queue-full); recovery counters aggregate the
+        # per-query `report()["recoveries"]` sections.
+        self.shed = 0
+        self.worker_deaths = 0
+        self.retries = 0
+        self.replays = 0
+        self.hedges = 0
+        self._service_ewma: Optional[float] = None   # seconds/query
 
     def record_submit(self) -> None:
         with self._lock:
@@ -126,6 +170,20 @@ class ServerMetrics:
     def record_reject(self) -> None:
         with self._lock:
             self.rejected += 1
+
+    def record_shed(self) -> None:
+        with self._lock:
+            self.shed += 1
+
+    def record_worker_death(self) -> None:
+        with self._lock:
+            self.worker_deaths += 1
+
+    def service_estimate(self) -> Optional[float]:
+        """EWMA of per-query service seconds (None before the first
+        completion) — the admission shedder's wait model."""
+        with self._lock:
+            return self._service_ewma
 
     def record_done(self, tag: str, seconds: float,
                     report: Optional[dict],
@@ -147,6 +205,12 @@ class ServerMetrics:
             self.completed += 1
             if report.get("degraded"):
                 self.degradations += 1
+            rec = report.get("recoveries") or {}
+            self.retries += int(rec.get("retries", 0))
+            self.replays += int(rec.get("replays", 0))
+            self.hedges += int(rec.get("hedges", 0))
+            self._service_ewma = seconds if self._service_ewma is None \
+                else 0.8 * self._service_ewma + 0.2 * seconds
             self._lat.setdefault(tag, []).append(seconds)
             tr = report.get("transfer")
             if tr is not None and tr.get("from_cache"):
@@ -176,7 +240,11 @@ class ServerMetrics:
                    "errors": self.errors, "timeouts": self.timeouts,
                    "cancellations": self.cancellations,
                    "degradations": self.degradations,
-                   "reordered": self.reordered}
+                   "reordered": self.reordered,
+                   "shed": self.shed,
+                   "worker_deaths": self.worker_deaths,
+                   "retries": self.retries, "replays": self.replays,
+                   "hedges": self.hedges}
             if self._qerr:
                 # edge-count-weighted geomean across queries; max is
                 # the worst single-edge misestimate seen anywhere
@@ -227,15 +295,45 @@ class QueryServer:
             self.config.artifact_cache_bytes)
         self.sel_history = SelHistory()
         self.metrics = ServerMetrics()
+        # overload control & recovery (DESIGN.md §16): shared across
+        # every query this server runs
+        self.breakers = recovery.BreakerBoard(
+            window=self.config.breaker_window,
+            threshold=self.config.breaker_threshold,
+            cooldown=self.config.breaker_cooldown)
+        self.retry_budget = recovery.RetryBudget(
+            capacity=self.config.retry_budget_capacity,
+            refill_per_s=self.config.retry_budget_refill)
+        self.hedge = recovery.HedgePolicy() if self.config.hedge \
+            else None
+        # warm restart: absorb a drained predecessor's cache tier
+        # before any query (or worker) can observe the caches
+        self.restore_info: Optional[dict] = None
+        if self.config.snapshot_path:
+            from repro.serve import snapshot as _snap
+            self.restore_info = _snap.restore_if_present(
+                self.config.snapshot_path, self.catalog,
+                artifact_cache=self.artifact_cache,
+                plan_cache=self.plan_cache,
+                sel_history=self.sel_history)
         self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue(
             self.config.max_queue)
         self._closed = False
-        self._workers = [
-            threading.Thread(target=self._worker, daemon=True,
-                             name=f"repro-serve-{i}")
-            for i in range(max(1, self.config.workers))]
+        self._workers_lock = threading.Lock()
+        self._spawned = 0
+        self._workers: List[threading.Thread] = []
+        for _ in range(max(1, self.config.workers)):
+            self._spawn_worker_locked()
         for t in self._workers:
             t.start()
+
+    def _spawn_worker_locked(self) -> None:
+        """Append (without starting) one worker thread; caller owns
+        `_workers_lock` or is still single-threaded in `__init__`."""
+        t = threading.Thread(target=self._worker, daemon=True,
+                             name=f"repro-serve-{self._spawned}")
+        self._spawned += 1
+        self._workers.append(t)
 
     # -- strategy / executor construction ---------------------------------
     def _make_strategy(self, name: str, kw: dict):
@@ -264,12 +362,22 @@ class QueryServer:
             sel_history=self.sel_history,
             degrade=self.config.degrade,
             mem_budget_bytes=self.config.mem_budget_bytes,
-            reorder=self.config.reorder)
+            reorder=self.config.reorder,
+            retry_budget=self.retry_budget,
+            hedge=self.hedge,
+            breakers=self.breakers)
         return Executor(catalog, cfg).execute(req.plan, ctx=req.ctx)
 
     # -- worker loop -------------------------------------------------------
+    def _respawn_worker(self) -> None:
+        """Replace a crashed worker thread (no-op once closed)."""
+        with self._workers_lock:
+            if self._closed:
+                return
+            self._spawn_worker_locked()
+            self._workers[-1].start()
+
     def _worker(self) -> None:
-        import time
         while True:
             req = self._queue.get()
             if req is None:             # shutdown sentinel
@@ -278,6 +386,21 @@ class QueryServer:
             if not req.future.set_running_or_notify_cancel():
                 self._queue.task_done()
                 continue
+            try:
+                faultinject.fire("worker.crash")
+            except BaseException as e:   # noqa: BLE001 — isolate death
+                # worker-death isolation: the victim query gets a typed
+                # error, a replacement thread takes over the pool slot,
+                # and this thread exits — no other query is affected
+                err = BackendError(
+                    f"worker thread died mid-query: {e}",
+                    phase="serve", tag=req.tag)
+                self.metrics.record_done(req.tag, 0.0, None, error=err)
+                self.metrics.record_worker_death()
+                req.future.set_exception(err)
+                self._queue.task_done()
+                self._respawn_worker()
+                return
             t0 = time.perf_counter()
             try:
                 result = self._execute(req)
@@ -320,6 +443,15 @@ class QueryServer:
                      else self.config.default_timeout),
             tag=tag or name,
             mem_budget_bytes=self.config.mem_budget_bytes)
+        if self.config.shed and ctx.deadline is not None:
+            est = self.estimated_wait()
+            rem = ctx.remaining()
+            if est is not None and rem is not None and est > rem:
+                self.metrics.record_shed()
+                raise ResourceExhausted(
+                    f"load shed at admission: estimated queue wait "
+                    f"{est:.3f}s exceeds deadline ({max(rem, 0.0):.3f}s"
+                    f" remaining)", phase="admission", tag=tag or name)
         fut: "Future[Tuple[Table, ExecStats]]" = Future()
         fut.query_context = ctx
         req = _Request(plan, name, kw, tag or name, fut, ctx)
@@ -340,6 +472,16 @@ class QueryServer:
             # Future (cancelled) so nothing is left permanently pending
             raise RuntimeError("server is closed")
         return fut
+
+    def estimated_wait(self) -> Optional[float]:
+        """Expected queue wait for a query admitted *now*: queue depth
+        over pool width, times the service-time EWMA. None until the
+        first completion calibrates the model (never shed blind)."""
+        svc = self.metrics.service_estimate()
+        if svc is None:
+            return None
+        width = max(1, self.config.workers)
+        return (self._queue.qsize() / width) * svc
 
     def cancel(self, fut: Future) -> bool:
         """Cancel a submitted query. Still queued: the Future is
@@ -392,10 +534,36 @@ class QueryServer:
 
     # -- observability / lifecycle -----------------------------------------
     def metrics_snapshot(self) -> dict:
-        return {"server": self.metrics.snapshot(),
-                "plan_cache": self.plan_cache.snapshot(),
-                "artifact_cache": self.artifact_cache.snapshot(),
-                "sel_history": self.sel_history.snapshot()}
+        out = {"server": self.metrics.snapshot(),
+               "plan_cache": self.plan_cache.snapshot(),
+               "artifact_cache": self.artifact_cache.snapshot(),
+               "sel_history": self.sel_history.snapshot(),
+               "breakers": self.breakers.snapshot(),
+               "retry_budget": self.retry_budget.snapshot()}
+        if self.restore_info is not None:
+            out["restore"] = dict(self.restore_info)
+        return out
+
+    # -- warm restart (DESIGN.md §16) --------------------------------------
+    def snapshot_to(self, path: str) -> dict:
+        """Write the current cache tier to `path` (atomic). Safe on a
+        live server — caches are internally locked — but a *drained*
+        snapshot (`drain_to_snapshot`) is the warm-restart contract:
+        nothing mutates the caches mid-serialization."""
+        from repro.serve import snapshot as _snap
+        with self._catalog_lock:
+            catalog = dict(self.catalog)
+        return _snap.write_snapshot(
+            path, catalog, artifact_cache=self.artifact_cache,
+            plan_cache=self.plan_cache, sel_history=self.sel_history)
+
+    def drain_to_snapshot(self, path: str) -> dict:
+        """Graceful drain: stop admissions, run every queued query to
+        completion, then persist the fully warmed cache tier. A new
+        server constructed with ``snapshot_path=path`` serves its first
+        query warm."""
+        self.close(wait=True)
+        return self.snapshot_to(path)
 
     def _drain_pending(self) -> int:
         """Pop every queued request and cancel its Future (shutdown
@@ -418,13 +586,18 @@ class QueryServer:
         cancelled (`cancel_pending=True`); none is left pending."""
         if self._closed:
             return
-        self._closed = True
+        with self._workers_lock:
+            # under the lock so a concurrent crash-respawn either
+            # completes first (its thread gets a sentinel) or observes
+            # `_closed` and declines to spawn
+            self._closed = True
+            workers = list(self._workers)
         if cancel_pending:
             self._drain_pending()
-        for _ in self._workers:
+        for _ in workers:
             self._queue.put(None)
         if wait:
-            for t in self._workers:
+            for t in workers:
                 t.join()
             # submits that raced close() may have landed behind the
             # sentinels, where no (now exited) worker can reach them
